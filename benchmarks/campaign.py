@@ -1,0 +1,147 @@
+"""The paper's §6 simulation campaign — off-line (2 & 3 types) and on-line.
+
+One function per paper figure:
+  * ``offline_2type``  — Fig. 3/4: HLP-EST vs HLP-OLS vs HEFT, ratio to LP*.
+  * ``offline_3type``  — Fig. 5: QHLP-EST vs QHLP-OLS vs QHEFT.
+  * ``online_2type``   — Fig. 6/7: ER-LS vs EFT vs Greedy vs Random,
+                          + mean competitive ratio as a function of sqrt(m/k).
+
+Each writes a per-instance CSV under artifacts/ and returns aggregate stats
+used by ``benchmarks.run`` to print the summary and check the paper's claims.
+"""
+from __future__ import annotations
+
+import csv
+import os
+import time
+from collections import defaultdict
+
+import numpy as np
+
+from repro.core.hlp import solve_hlp, solve_qhlp
+from repro.core.listsched import heft, hlp_est, hlp_ols
+from repro.core.online import eft_online, er_ls, greedy_online, random_online
+from repro.core.workloads import (CHAMELEON_APPS, OFFLINE_CONFIGS_2,
+                                  OFFLINE_CONFIGS_3, chameleon, fork_join)
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+
+
+def instances(full: bool, num_types: int = 2):
+    """Yield (label, app, TaskGraph).  The full grid matches §6.1 exactly."""
+    nbs = (5, 10, 20) if full else (5, 10)
+    bss = (64, 128, 320, 512, 768, 960) if full else (64, 320, 960)
+    widths = (100, 200, 300, 400, 500) if full else (100, 300)
+    phases = (2, 5, 10) if full else (2, 10)
+    for app in CHAMELEON_APPS:
+        for nb in nbs:
+            for bs in bss:
+                yield f"{app}_n{nb}_b{bs}", app, chameleon(app, nb, bs, num_types)
+    for w in widths:
+        for p in phases:
+            yield f"forkjoin_w{w}_p{p}", "forkjoin", fork_join(w, p, num_types)
+
+
+def _write_csv(name: str, header: list[str], rows: list[list]) -> str:
+    os.makedirs(ART, exist_ok=True)
+    path = os.path.join(ART, name)
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    return path
+
+
+def offline_2type(full: bool = False, verbose: bool = False) -> dict:
+    rows, agg = [], defaultdict(list)
+    t_alg = defaultdict(float); n_runs = 0
+    for label, app, g in instances(full, 2):
+        for (m, k) in OFFLINE_CONFIGS_2:
+            t0 = time.perf_counter()
+            sol = solve_hlp(g, m, k)
+            t_lp = time.perf_counter() - t0
+            runs = {}
+            for name, fn in (("hlp_est", lambda: hlp_est(g, [m, k], sol.alloc)),
+                             ("hlp_ols", lambda: hlp_ols(g, [m, k], sol.alloc)),
+                             ("heft", lambda: heft(g, [m, k]))):
+                t0 = time.perf_counter()
+                runs[name] = fn().makespan
+                t_alg[name] += time.perf_counter() - t0
+            n_runs += 1
+            for name, ms in runs.items():
+                agg[name].append(ms / sol.lp_value)
+            agg["ols_vs_est"].append(runs["hlp_est"] / runs["hlp_ols"])
+            agg["ols_vs_heft"].append(runs["heft"] / runs["hlp_ols"])
+            rows.append([label, app, m, k, sol.lp_value, t_lp,
+                         runs["hlp_est"], runs["hlp_ols"], runs["heft"]])
+        if verbose:
+            print(f"  offline2 {label} done")
+    _write_csv("offline_2type.csv",
+               ["instance", "app", "m", "k", "lp_star", "lp_seconds",
+                "hlp_est", "hlp_ols", "heft"], rows)
+    return {"ratios": {k: float(np.mean(v)) for k, v in agg.items()},
+            "max_ratio": {k: float(np.max(agg[k])) for k in ("hlp_est", "hlp_ols", "heft")},
+            "alg_seconds": dict(t_alg), "runs": n_runs}
+
+
+def offline_3type(full: bool = False, verbose: bool = False) -> dict:
+    rows, agg = [], defaultdict(list)
+    cfgs = OFFLINE_CONFIGS_3 if full else [(m, k, k) for m in (16, 32, 64, 128)
+                                           for k in (2, 4, 8, 16)]
+    n_runs = 0
+    for label, app, g in instances(full, 3):
+        for counts in cfgs:
+            counts = list(counts)
+            sol = solve_qhlp(g, counts)
+            runs = {"qhlp_est": hlp_est(g, counts, sol.alloc).makespan,
+                    "qhlp_ols": hlp_ols(g, counts, sol.alloc).makespan,
+                    "qheft": heft(g, counts).makespan}
+            n_runs += 1
+            for name, ms in runs.items():
+                agg[name].append(ms / sol.lp_value)
+            agg["ols_vs_est"].append(runs["qhlp_est"] / runs["qhlp_ols"])
+            agg["heft_vs_ols"].append(runs["qhlp_ols"] / runs["qheft"])
+            rows.append([label, app, *counts, sol.lp_value,
+                         runs["qhlp_est"], runs["qhlp_ols"], runs["qheft"]])
+        if verbose:
+            print(f"  offline3 {label} done")
+    _write_csv("offline_3type.csv",
+               ["instance", "app", "m", "k1", "k2", "lp_star",
+                "qhlp_est", "qhlp_ols", "qheft"], rows)
+    return {"ratios": {k: float(np.mean(v)) for k, v in agg.items()},
+            "max_ratio": {k: float(np.max(agg[k])) for k in ("qhlp_est", "qhlp_ols", "qheft")},
+            "runs": n_runs}
+
+
+def online_2type(full: bool = False, verbose: bool = False) -> dict:
+    rows, agg = [], defaultdict(list)
+    by_sqrt = defaultdict(lambda: defaultdict(list))
+    n_runs = 0
+    for label, app, g in instances(full, 2):
+        for (m, k) in OFFLINE_CONFIGS_2:
+            sol = solve_hlp(g, m, k)   # LP* as the ratio denominator (§6.3)
+            runs = {"er_ls": er_ls(g, [m, k]).makespan,
+                    "eft": eft_online(g, [m, k]).makespan,
+                    "greedy": greedy_online(g, [m, k]).makespan,
+                    "random": random_online(g, [m, k], seed=0).makespan}
+            n_runs += 1
+            for name, ms in runs.items():
+                agg[name].append(ms / sol.lp_value)
+                by_sqrt[round(np.sqrt(m / k), 2)][name].append(ms / sol.lp_value)
+            agg["erls_vs_greedy"].append(runs["greedy"] / runs["er_ls"])
+            agg["erls_vs_eft"].append(runs["eft"] / runs["er_ls"])
+            rows.append([label, app, m, k, sol.lp_value, runs["er_ls"],
+                         runs["eft"], runs["greedy"], runs["random"]])
+        if verbose:
+            print(f"  online {label} done")
+    _write_csv("online_2type.csv",
+               ["instance", "app", "m", "k", "lp_star", "er_ls", "eft",
+                "greedy", "random"], rows)
+    curve = {s: {alg: float(np.mean(v)) for alg, v in d.items()}
+             for s, d in sorted(by_sqrt.items())}
+    _write_csv("online_competitive_curve.csv",
+               ["sqrt_m_over_k", "er_ls", "eft", "greedy", "random"],
+               [[s, d.get("er_ls"), d.get("eft"), d.get("greedy"), d.get("random")]
+                for s, d in curve.items()])
+    return {"ratios": {k: float(np.mean(v)) for k, v in agg.items()},
+            "curve": curve, "runs": n_runs}

@@ -1,0 +1,41 @@
+"""Render EXPERIMENTS.md §Dry-run/§Roofline tables from dry-run artifacts."""
+from __future__ import annotations
+
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+
+
+def render(path: str = None) -> str:
+    path = path or os.path.join(ART, "dryrun_results.jsonl")
+    rows = [json.loads(l) for l in open(path) if l.strip()]
+    out = []
+    for mesh in ("single_pod", "multi_pod"):
+        sel = [r for r in rows if r.get("mesh") == mesh and not r.get("tag")]
+        out.append(f"\n### {mesh} ({'2x16x16 = 512 chips' if mesh == 'multi_pod' else '16x16 = 256 chips'})\n")
+        out.append("| arch | shape | status | fits (tpu-donate) | compute_s | "
+                   "memory_s | collective_s | dominant | MODEL/HLO flops | "
+                   "roofline frac |")
+        out.append("|---|---|---|---|---|---|---|---|---|---|")
+        for r in sel:
+            if r["status"] == "skipped":
+                out.append(f"| {r['arch']} | {r['shape']} | skipped — "
+                           f"{r['reason'][:48]}... | | | | | | | |")
+                continue
+            if r["status"] != "ok":
+                out.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | | | |")
+                continue
+            f = r["roofline"]
+            fits = f"{r['fits_hbm']} ({r.get('fits_hbm_tpu', r['fits_hbm'])})"
+            out.append(
+                f"| {r['arch']} | {r['shape']} | ok | {fits} "
+                f"| {f['compute_s']:.3f} | {f['memory_s']:.3f} "
+                f"| {f['collective_s']:.3f} | {f['dominant']} "
+                f"| {f['useful_flops_ratio']:.3f} "
+                f"| {f['roofline_fraction']:.4f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print(render())

@@ -1,0 +1,31 @@
+"""Heterogeneous-fleet placement: QHLP-OLS as the pipeline planner.
+
+Extracts granite-3-2b's layer DAG (per-block FLOPs/bytes -> per-pod roofline
+times) and allocates it across three pod types with the paper's Q-type LP +
+OLS, comparing against a greedy rule — the paper's §5 inside a real system.
+
+  PYTHONPATH=src python examples/hetero_pipeline.py
+"""
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.listsched import list_schedule
+from repro.core.placement import PodType, layer_dag, plan_pipeline
+
+PODS = [
+    PodType("v5e-pod", count=4, peak_flops=197e12 * 256, hbm_bw=819e9 * 256),
+    PodType("v4-pod", count=2, peak_flops=275e12 * 64, hbm_bw=1228e9 * 64),
+    PodType("cpu-hosts", count=8, peak_flops=3e12, hbm_bw=400e9),
+]
+
+cfg = get_config("granite-3-2b")
+plan = plan_pipeline(cfg, PODS, seq=4096, batch=32, streams=12)
+print(plan.summary())
+
+# baseline: greedy fastest-type allocation + list scheduling
+g = layer_dag(cfg, PODS, seq=4096, batch=32, streams=12)
+greedy_alloc = np.argmin(g.proc, axis=1).astype(np.int32)
+greedy = list_schedule(g, [p.count for p in PODS], greedy_alloc)
+print(f"\ngreedy fastest-type baseline: makespan={greedy.makespan:.4f}s "
+      f"(QHLP-OLS / greedy = {plan.makespan / greedy.makespan:.2f}; the LP "
+      f"optimizes load+CP bounds, so either can win on chain-dominated DAGs)")

@@ -1,0 +1,13 @@
+"""End-to-end serving driver (deliverable b): real batched prefill+decode of
+a reduced model, with the paper's ER-LS dispatcher planning request placement
+over a heterogeneous fleet.
+
+  PYTHONPATH=src python examples/serve_requests.py
+"""
+import sys
+
+from repro.launch import serve
+
+sys.argv = ["serve", "--arch", "qwen2-1.5b", "--smoke",
+            "--requests", "8", "--batch", "4", "--prompt", "32", "--gen", "16"]
+serve.main()

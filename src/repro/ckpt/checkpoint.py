@@ -1,0 +1,121 @@
+"""Sharded, atomic, async checkpointing with resume + elastic re-shard.
+
+Layout:  <dir>/step_<N>/  arrays.npz (flattened pytree) + manifest.json
+(step, tree structure, mesh shape).  Writes go to a tmp dir + atomic rename,
+so a failure mid-save never corrupts the latest checkpoint; an async writer
+thread overlaps serialization with the next training steps.  Restore targets
+ANY device count: arrays are saved as full (global) host arrays and re-placed
+with the restoring job's shardings — that is the elastic re-scale path.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+
+_EMPTY = "__empty_dict__"   # preserves {} leaves (e.g. olmo's param-free LN)
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        if not tree:
+            out[prefix + _EMPTY] = np.zeros(0)
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten(flat: dict):
+    tree: dict = {}
+    for path, v in flat.items():
+        parts = path.split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        if parts[-1] == _EMPTY:
+            continue
+        node[parts[-1]] = v
+    return tree
+
+
+def save(ckpt_dir: str, step: int, state: dict, *, keep: int = 3) -> str:
+    """Blocking atomic save of a pytree-of-arrays ``state``."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = _flatten(state)
+    host = {k: np.asarray(v) for k, v in flat.items()}
+    tmp = os.path.join(ckpt_dir, f".tmp_step_{step}")
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    np.savez(os.path.join(tmp, "arrays.npz"), **host)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump({"step": step, "keys": sorted(host),
+                   "devices": len(jax.devices())}, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)                     # atomic publish
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+class AsyncCheckpointer:
+    """One-in-flight async writer: ``save`` returns immediately; the previous
+    write is awaited first (bounded memory, ordered publishes)."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.dir = ckpt_dir
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+
+    def save(self, step: int, state: dict):
+        self.wait()
+        host = {k: np.asarray(v) for k, v in _flatten(state).items()}
+
+        def work():
+            save(self.dir, step, _unflatten(host), keep=self.keep)
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
+    return int(steps[-1].split("_")[1]) if steps else None
+
+
+def restore(ckpt_dir: str, step: int | None = None, *, shardings=None):
+    """Load a checkpoint; optionally re-place with new shardings (elastic)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            return None, None
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        flat = {k: z[k] for k in z.files}
+    tree = _unflatten(flat)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda x, s: jax.device_put(x, s), tree, shardings)
+    return step, tree

@@ -1,0 +1,13 @@
+# The paper's primary contribution: two-phase (allocation, scheduling) for
+# heterogeneous platforms — HLP/QHLP allocation LPs (exact + JAX-native),
+# List-Scheduling variants (EST/OLS/HEFT), and the on-line ER-LS algorithm.
+from .dag import CPU, GPU, TaskGraph
+from .hlp import HLPSolution, lp_lower_bound, solve_hlp, solve_qhlp
+from .listsched import Schedule, heft, hlp_est, hlp_ols, list_schedule, ols_rank
+from .online import er_ls, eft_online, greedy_online, random_online, RULES
+
+__all__ = [
+    "CPU", "GPU", "TaskGraph", "HLPSolution", "lp_lower_bound", "solve_hlp",
+    "solve_qhlp", "Schedule", "heft", "hlp_est", "hlp_ols", "list_schedule",
+    "ols_rank", "er_ls", "eft_online", "greedy_online", "random_online", "RULES",
+]

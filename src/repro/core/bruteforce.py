@@ -1,0 +1,76 @@
+"""Exhaustive optimal makespan for tiny instances (test oracle).
+
+Enumerates every (allocation, per-machine sequence) combination; for a fixed
+combination, optimal start times are the longest-path values of the DAG
+augmented with machine-chain edges (infeasible combinations — where the
+machine order contradicts a precedence — are detected as cycles and skipped).
+This covers *all* semi-active schedules, which contain an optimal schedule
+for makespan.  Exponential: intended for n <= ~6 only.
+"""
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+
+from .dag import TaskGraph
+
+
+def _chain_makespan(g: TaskGraph, alloc: np.ndarray,
+                    machine_of: np.ndarray, pos_of: np.ndarray) -> float | None:
+    """Longest path of precedence + machine-chain edges; None if cyclic."""
+    n = g.n
+    t = g.alloc_times(alloc)
+    succs: list[list[int]] = [list(map(int, g.succs(j))) for j in range(n)]
+    indeg = np.array([g.preds(j).size for j in range(n)], dtype=np.int64)
+    # machine-chain edges between consecutive tasks on the same machine
+    buckets: dict[tuple[int, int], list[tuple[int, int]]] = {}
+    for j in range(n):
+        buckets.setdefault((int(alloc[j]), int(machine_of[j])), []).append(
+            (int(pos_of[j]), j))
+    for key, items in buckets.items():
+        items.sort()
+        for (p1, a), (p2, b) in zip(items[:-1], items[1:]):
+            succs[a].append(b)
+            indeg[b] += 1
+    finish = np.zeros(n)
+    stack = [j for j in range(n) if indeg[j] == 0]
+    seen = 0
+    start = np.zeros(n)
+    while stack:
+        u = stack.pop()
+        seen += 1
+        finish[u] = start[u] + t[u]
+        for v in succs[u]:
+            start[v] = max(start[v], finish[u])
+            indeg[v] -= 1
+            if indeg[v] == 0:
+                stack.append(v)
+    if seen != n:
+        return None  # cycle -> machine order conflicts with precedences
+    return float(finish.max())
+
+
+def brute_force_opt(g: TaskGraph, counts: list[int]) -> float:
+    """Exact optimal makespan (hybrid or Q-type).  O(Q^n · n! · Π m_q^n)."""
+    n, Q = g.n, g.num_types
+    if n > 7:
+        raise ValueError("brute force limited to n <= 7")
+    best = np.inf
+    for alloc_tuple in itertools.product(range(Q), repeat=n):
+        alloc = np.asarray(alloc_tuple, dtype=np.int32)
+        if not np.all(np.isfinite(g.alloc_times(alloc))):
+            continue
+        # enumerate machine assignment + per-machine order via a global
+        # permutation (order within machine = order in the permutation)
+        ids = list(range(n))
+        for perm in itertools.permutations(ids):
+            pos_of = np.empty(n, dtype=np.int64)
+            for p, j in enumerate(perm):
+                pos_of[j] = p
+            for mach_tuple in itertools.product(
+                    *[range(counts[alloc[j]]) for j in range(n)]):
+                ms = _chain_makespan(g, alloc, np.asarray(mach_tuple), pos_of)
+                if ms is not None and ms < best:
+                    best = ms
+    return best

@@ -1,0 +1,179 @@
+"""Precedence task graphs for heterogeneous scheduling.
+
+The paper's object of study: a DAG G=(V,E) of sequential tasks, where task j
+takes ``proc[j, q]`` time units on a processor of type q.  For the hybrid
+(CPU, GPU) case Q=2 with the convention q=0 -> CPU (p-bar), q=1 -> GPU
+(p-underbar), matching the paper's notation.
+
+The representation is fully vectorized (CSR adjacency + topological levels) so
+that critical-path / rank computations run as numpy sweeps (and, in
+``repro.core.hlp_jax``, as jitted JAX level-scans).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+import numpy as np
+
+CPU, GPU = 0, 1  # resource-type indices for the hybrid (Q=2) case
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskGraph:
+    """Immutable DAG with per-type processing times.
+
+    Attributes:
+      proc:    (n, Q) float64 — processing time of task j on resource type q.
+      edges:   (e, 2) int32   — (pred, succ) pairs.
+      pred_ptr/pred_idx: CSR of predecessors.
+      succ_ptr/succ_idx: CSR of successors.
+      topo:    (n,) int32     — a topological order.
+      level:   (n,) int32     — topological level (longest #edges from a source).
+      names:   optional task names (kernel class etc.).
+    """
+
+    proc: np.ndarray
+    edges: np.ndarray
+    pred_ptr: np.ndarray
+    pred_idx: np.ndarray
+    succ_ptr: np.ndarray
+    succ_idx: np.ndarray
+    topo: np.ndarray
+    level: np.ndarray
+    names: tuple[str, ...] | None = None
+
+    # ------------------------------------------------------------------ build
+    @staticmethod
+    def build(proc: np.ndarray, edges: Iterable[tuple[int, int]],
+              names: Sequence[str] | None = None) -> "TaskGraph":
+        proc = np.asarray(proc, dtype=np.float64)
+        if proc.ndim != 2:
+            raise ValueError(f"proc must be (n, Q), got {proc.shape}")
+        n = proc.shape[0]
+        e = np.asarray(list(edges), dtype=np.int32).reshape(-1, 2)
+        if e.size and (e.min() < 0 or e.max() >= n):
+            raise ValueError("edge endpoint out of range")
+        if e.size and np.any(e[:, 0] == e[:, 1]):
+            raise ValueError("self-loop")
+
+        def csr(targets: np.ndarray, keys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+            order = np.argsort(keys, kind="stable")
+            idx = targets[order].astype(np.int32)
+            ptr = np.zeros(n + 1, dtype=np.int64)
+            np.add.at(ptr, keys + 1, 1)
+            np.cumsum(ptr, out=ptr)
+            return ptr, idx
+
+        if e.size:
+            pred_ptr, pred_idx = csr(e[:, 0], e[:, 1])  # preds of j
+            succ_ptr, succ_idx = csr(e[:, 1], e[:, 0])  # succs of i
+        else:
+            pred_ptr = np.zeros(n + 1, dtype=np.int64); pred_idx = np.zeros(0, np.int32)
+            succ_ptr = np.zeros(n + 1, dtype=np.int64); succ_idx = np.zeros(0, np.int32)
+
+        # Kahn topological sort + level computation.
+        indeg = np.diff(pred_ptr).astype(np.int64)
+        level = np.zeros(n, dtype=np.int32)
+        topo = np.empty(n, dtype=np.int32)
+        head = 0
+        frontier = np.flatnonzero(indeg == 0).astype(np.int32)
+        topo[:frontier.size] = frontier
+        head = frontier.size
+        read = 0
+        indeg_work = indeg.copy()
+        while read < head:
+            u = topo[read]; read += 1
+            for v in succ_idx[succ_ptr[u]:succ_ptr[u + 1]]:
+                indeg_work[v] -= 1
+                if level[v] < level[u] + 1:
+                    level[v] = level[u] + 1
+                if indeg_work[v] == 0:
+                    topo[head] = v; head += 1
+        if head != n:
+            raise ValueError("graph has a cycle")
+        return TaskGraph(proc=proc, edges=e, pred_ptr=pred_ptr, pred_idx=pred_idx,
+                         succ_ptr=succ_ptr, succ_idx=succ_idx, topo=topo, level=level,
+                         names=tuple(names) if names is not None else None)
+
+    # ------------------------------------------------------------- properties
+    @property
+    def n(self) -> int:
+        return self.proc.shape[0]
+
+    @property
+    def num_types(self) -> int:
+        return self.proc.shape[1]
+
+    @property
+    def num_edges(self) -> int:
+        return self.edges.shape[0]
+
+    def preds(self, j: int) -> np.ndarray:
+        return self.pred_idx[self.pred_ptr[j]:self.pred_ptr[j + 1]]
+
+    def succs(self, j: int) -> np.ndarray:
+        return self.succ_idx[self.succ_ptr[j]:self.succ_ptr[j + 1]]
+
+    # ------------------------------------------------------------ graph algos
+    def alloc_times(self, alloc: np.ndarray) -> np.ndarray:
+        """Processing time of each task under an integral allocation (n,)->type."""
+        return self.proc[np.arange(self.n), np.asarray(alloc, dtype=np.int64)]
+
+    def frac_times(self, x: np.ndarray) -> np.ndarray:
+        """Hybrid fractional length p̄_j x_j + p_j (1 - x_j) (paper's HLP)."""
+        assert self.num_types == 2
+        return self.proc[:, CPU] * x + self.proc[:, GPU] * (1.0 - x)
+
+    def critical_path(self, times: np.ndarray) -> float:
+        """Longest path weight (task lengths ``times``) — forward sweep in topo order."""
+        finish = np.zeros(self.n)
+        for u in self.topo:
+            start = 0.0
+            p0, p1 = self.pred_ptr[u], self.pred_ptr[u + 1]
+            if p1 > p0:
+                start = finish[self.pred_idx[p0:p1]].max()
+            finish[u] = start + times[u]
+        return float(finish.max()) if self.n else 0.0
+
+    def upward_rank(self, times: np.ndarray) -> np.ndarray:
+        """rank(T_j) = times[j] + max_{i in succ(j)} rank(T_i) (paper §4.1 / HEFT)."""
+        rank = np.zeros(self.n)
+        for u in self.topo[::-1]:
+            s0, s1 = self.succ_ptr[u], self.succ_ptr[u + 1]
+            best = rank[self.succ_idx[s0:s1]].max() if s1 > s0 else 0.0
+            rank[u] = times[u] + best
+        return rank
+
+    def earliest_ready(self, times: np.ndarray) -> np.ndarray:
+        """Per-task earliest start ignoring resource limits (downward pass)."""
+        est = np.zeros(self.n)
+        for u in self.topo:
+            p0, p1 = self.pred_ptr[u], self.pred_ptr[u + 1]
+            if p1 > p0:
+                pi = self.pred_idx[p0:p1]
+                est[u] = (est[pi] + times[pi]).max()
+        return est
+
+    # ---------------------------------------------------------------- helpers
+    def graham_lower_bound(self, counts: Sequence[int], alloc: np.ndarray) -> float:
+        """max(CP, load_q / m_q) — the lower bound HLP optimizes, for integral alloc."""
+        t = self.alloc_times(alloc)
+        cp = self.critical_path(t)
+        loads = [t[alloc == q].sum() / counts[q] for q in range(self.num_types)]
+        return max([cp] + loads)
+
+    def lp_objective(self, counts: Sequence[int], x: np.ndarray) -> float:
+        """Exact λ(x) for a *fractional* hybrid allocation x (CPU share)."""
+        assert self.num_types == 2
+        t = self.frac_times(x)
+        cp = self.critical_path(t)
+        load_c = float(self.proc[:, CPU] @ x) / counts[CPU]
+        load_g = float(self.proc[:, GPU] @ (1.0 - x)) / counts[GPU]
+        return max(cp, load_c, load_g)
+
+
+def chain(proc: np.ndarray) -> TaskGraph:
+    """Convenience: a simple chain T_0 -> T_1 -> ... (used in tests)."""
+    n = proc.shape[0]
+    return TaskGraph.build(proc, [(i, i + 1) for i in range(n - 1)])

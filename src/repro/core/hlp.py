@@ -1,0 +1,160 @@
+"""HLP / QHLP — the paper's allocation linear program (+ rounding).
+
+HLP (hybrid, Q=2) minimizes λ over fractional allocations x_j ∈ [0,1]
+(x_j = CPU share) subject to Graham's lower bounds:
+
+    minimize λ
+    C_i + p̄_j x_j + p_j (1-x_j) <= C_j     ∀ (i,j) ∈ E          (1)
+           p̄_j x_j + p_j (1-x_j) <= C_j     ∀ j with no preds    (2)
+    C_j <= λ                                                     (3)
+    (1/m) Σ p̄_j x_j <= λ                                        (4)
+    (1/k) Σ p_j (1-x_j) <= λ                                     (5)
+
+Rounding (paper §3): x_j >= 1/2  ->  CPU side, else GPU side.
+
+QHLP (Q >= 2, paper §5): variables x_{j,q}, Σ_q x_{j,q} = 1; rounding to
+argmax_q x_{j,q}, ties broken toward the smallest processing time.
+
+Solved exactly with scipy's HiGHS (the paper used GLPK).  A JAX-native
+first-order solver lives in ``repro.core.hlp_jax`` and is validated against
+this exact solver in the tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import scipy.sparse as sp
+from scipy.optimize import linprog
+
+from .dag import CPU, GPU, TaskGraph
+
+
+@dataclasses.dataclass(frozen=True)
+class HLPSolution:
+    """Fractional LP solution + the rounded integral allocation."""
+    x_frac: np.ndarray      # (n,) hybrid CPU share, or (n, Q) for QHLP
+    lp_value: float         # λ* — a lower bound on the optimal makespan
+    alloc: np.ndarray       # (n,) int — rounded resource type per task
+    status: str = "optimal"
+
+
+# --------------------------------------------------------------------- hybrid
+def solve_hlp(g: TaskGraph, m: int, k: int) -> HLPSolution:
+    """Exact LP relaxation of HLP for the hybrid (m CPUs, k GPUs) platform."""
+    if g.num_types != 2:
+        raise ValueError("solve_hlp is for Q=2; use solve_qhlp")
+    n = g.n
+    pc, pg = g.proc[:, CPU], g.proc[:, GPU]
+    dp = pc - pg  # coefficient of x_j in the allocated length
+
+    # Variable layout: [x_0..x_{n-1}, C_0..C_{n-1}, λ]
+    nv = 2 * n + 1
+    rows, cols, vals, rhs = [], [], [], []
+    r = 0
+
+    def add(row_entries, b):
+        nonlocal r
+        for c, v in row_entries:
+            rows.append(r); cols.append(c); vals.append(v)
+        rhs.append(b); r += 1
+
+    # (1) edge constraints: C_i - C_j + dp_j x_j <= -p_j
+    for i, j in g.edges:
+        add([(n + i, 1.0), (n + j, -1.0), (j, dp[j])], -pg[j])
+    # (2) source constraints: dp_j x_j - C_j <= -p_j
+    indeg = np.diff(g.pred_ptr)
+    for j in np.flatnonzero(indeg == 0):
+        add([(int(j), dp[j]), (n + int(j), -1.0)], -pg[j])
+    # (3) C_j - λ <= 0
+    for j in range(n):
+        add([(n + j, 1.0), (2 * n, -1.0)], 0.0)
+    # (4) (1/m) Σ pc_j x_j - λ <= 0
+    add([(j, pc[j] / m) for j in range(n)] + [(2 * n, -1.0)], 0.0)
+    # (5) (1/k) Σ pg_j (1 - x_j) <= λ  ->  -(1/k) Σ pg_j x_j - λ <= -(1/k) Σ pg_j
+    add([(j, -pg[j] / k) for j in range(n)] + [(2 * n, -1.0)], -float(pg.sum()) / k)
+
+    A = sp.csr_matrix((vals, (rows, cols)), shape=(r, nv))
+    c = np.zeros(nv); c[2 * n] = 1.0
+    bounds = [(0.0, 1.0)] * n + [(0.0, None)] * (n + 1)
+    res = linprog(c, A_ub=A, b_ub=np.asarray(rhs), bounds=bounds, method="highs")
+    if not res.success:
+        raise RuntimeError(f"HLP LP failed: {res.message}")
+    x = np.clip(res.x[:n], 0.0, 1.0)
+    alloc = np.where(x >= 0.5, CPU, GPU).astype(np.int32)
+    return HLPSolution(x_frac=x, lp_value=float(res.fun), alloc=alloc)
+
+
+# ------------------------------------------------------------------- Q types
+def solve_qhlp(g: TaskGraph, counts: list[int]) -> HLPSolution:
+    """Exact LP relaxation of QHLP for Q >= 2 resource types (paper §5)."""
+    n, q = g.n, g.num_types
+    if len(counts) != q:
+        raise ValueError(f"need {q} machine counts, got {len(counts)}")
+    p = g.proc  # (n, Q)
+
+    # Variable layout: [x_{0,0}..x_{0,Q-1}, ..., x_{n-1,Q-1}, C_0..C_{n-1}, λ]
+    def xv(j: int, t: int) -> int:
+        return j * q + t
+
+    cv = lambda j: n * q + j
+    lv = n * q + n
+    nv = lv + 1
+
+    rows, cols, vals, rhs = [], [], [], []
+    r = 0
+
+    def add(row_entries, b):
+        nonlocal r
+        for c_, v_ in row_entries:
+            rows.append(r); cols.append(c_); vals.append(v_)
+        rhs.append(b); r += 1
+
+    # (9) C_i + Σ_q p_jq x_jq <= C_j
+    for i, j in g.edges:
+        add([(cv(int(i)), 1.0), (cv(int(j)), -1.0)]
+            + [(xv(int(j), t), p[j, t]) for t in range(q)], 0.0)
+    # (10) Σ_q p_jq x_jq <= C_j for sources
+    indeg = np.diff(g.pred_ptr)
+    for j in np.flatnonzero(indeg == 0):
+        add([(xv(int(j), t), p[j, t]) for t in range(q)] + [(cv(int(j)), -1.0)], 0.0)
+    # (11) C_j <= λ
+    for j in range(n):
+        add([(cv(j), 1.0), (lv, -1.0)], 0.0)
+    # (12) per-type load
+    for t in range(q):
+        add([(xv(j, t), p[j, t] / counts[t]) for j in range(n)] + [(lv, -1.0)], 0.0)
+
+    A_ub = sp.csr_matrix((vals, (rows, cols)), shape=(r, nv))
+    b_ub = np.asarray(rhs)
+
+    # (13) Σ_q x_{j,q} = 1 (equalities)
+    er, ec, ev = [], [], []
+    for j in range(n):
+        for t in range(q):
+            er.append(j); ec.append(xv(j, t)); ev.append(1.0)
+    A_eq = sp.csr_matrix((ev, (er, ec)), shape=(n, nv))
+    b_eq = np.ones(n)
+
+    c = np.zeros(nv); c[lv] = 1.0
+    bounds = [(0.0, 1.0)] * (n * q) + [(0.0, None)] * (n + 1)
+    res = linprog(c, A_ub=A_ub, b_ub=b_ub, A_eq=A_eq, b_eq=b_eq,
+                  bounds=bounds, method="highs")
+    if not res.success:
+        raise RuntimeError(f"QHLP LP failed: {res.message}")
+    x = res.x[: n * q].reshape(n, q)
+
+    # Rounding: argmax_q x_{j,q}; ties -> smallest processing time.
+    alloc = np.empty(n, dtype=np.int32)
+    for j in range(n):
+        best = x[j].max()
+        cand = np.flatnonzero(x[j] >= best - 1e-9)
+        alloc[j] = cand[np.argmin(p[j, cand])]
+    return HLPSolution(x_frac=x, lp_value=float(res.fun), alloc=alloc)
+
+
+def lp_lower_bound(g: TaskGraph, counts: list[int]) -> float:
+    """LP* — the paper's denominator for experimental ratios."""
+    if g.num_types == 2:
+        return solve_hlp(g, counts[0], counts[1]).lp_value
+    return solve_qhlp(g, counts).lp_value

@@ -1,0 +1,198 @@
+"""Scheduling-phase policies: List Scheduling, EST, OLS, HEFT — plus validation.
+
+All schedulers operate on a ``TaskGraph`` and a machine made of ``counts[q]``
+identical processors per resource type q.  They return a ``Schedule`` with
+per-task (type, processor, start, finish) that is validated in the tests
+against the two feasibility invariants (precedence + per-processor
+non-overlap).
+
+Semantics follow the paper:
+
+* ``list_schedule``     — Graham List Scheduling adapted to typed resources and a
+  fixed allocation: whenever a processor of type q is idle and a ready task
+  allocated to q exists, start the highest-priority one (event-driven, so no
+  artificial idling).  HLP-EST uses arbitrary (natural-order) priority; HLP-OLS
+  uses the post-rounding critical-path rank (paper §4.1).
+* ``heft``              — insertion-based HEFT (Topcuoglu et al.) with the paper's
+  simplified rank (no communication): rank_j = avg_j + max_{i∈succ} rank_i,
+  avg_j = Σ_q m_q p_{j,q} / Σ_q m_q; each task goes to the (processor, gap)
+  minimizing its finish time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+
+import numpy as np
+
+from .dag import TaskGraph
+
+
+@dataclasses.dataclass
+class Schedule:
+    alloc: np.ndarray    # (n,) resource type per task
+    proc: np.ndarray     # (n,) processor index *within its type*
+    start: np.ndarray    # (n,)
+    finish: np.ndarray   # (n,)
+
+    @property
+    def makespan(self) -> float:
+        return float(self.finish.max()) if self.finish.size else 0.0
+
+    def validate(self, g: TaskGraph, counts: list[int], tol: float = 1e-9) -> None:
+        """Raise if the schedule is infeasible (used by tests, cheap to keep on)."""
+        t = g.alloc_times(self.alloc)
+        if not np.allclose(self.finish, self.start + t, atol=tol):
+            raise AssertionError("finish != start + processing time")
+        if (self.start < -tol).any():
+            raise AssertionError("negative start time")
+        for i, j in g.edges:
+            if self.start[j] < self.finish[i] - tol:
+                raise AssertionError(f"precedence violated on edge ({i},{j})")
+        for q in range(g.num_types):
+            if counts[q] == 0:
+                if (self.alloc == q).any():
+                    raise AssertionError(f"task allocated to empty type {q}")
+                continue
+            sel = np.flatnonzero(self.alloc == q)
+            if sel.size and (self.proc[sel].max() >= counts[q] or self.proc[sel].min() < 0):
+                raise AssertionError("processor index out of range")
+            order = sel[np.lexsort((self.start[sel], self.proc[sel]))]
+            for a, b in zip(order[:-1], order[1:]):
+                if self.proc[a] == self.proc[b] and self.start[b] < self.finish[a] - tol:
+                    raise AssertionError(f"overlap on type {q} proc {self.proc[a]}: {a},{b}")
+
+
+# -------------------------------------------------------------- offline: LS
+def list_schedule(g: TaskGraph, counts: list[int], alloc: np.ndarray,
+                  priority: np.ndarray | None = None) -> Schedule:
+    """Typed List Scheduling with fixed allocation.
+
+    ``priority``: higher runs first among simultaneously-ready tasks
+    (default: natural order == the paper's EST policy; pass the OLS rank for
+    HLP-OLS).  Event-driven: O((n + e) log n).
+    """
+    n = g.n
+    alloc = np.asarray(alloc, dtype=np.int32)
+    pr = np.zeros(n) if priority is None else np.asarray(priority, dtype=np.float64)
+    times = g.alloc_times(alloc)
+
+    indeg = np.diff(g.pred_ptr).astype(np.int64).copy()
+    ready_time = np.zeros(n)
+    start = np.full(n, -1.0)
+    finish = np.full(n, -1.0)
+    proc_of = np.full(n, -1, dtype=np.int32)
+
+    # Per-type: heap of (free_time, proc_id); ready PQ of (-priority, j);
+    # "becoming ready" heap of (ready_time, -priority, j).
+    free = [[(0.0, p) for p in range(counts[q])] for q in range(g.num_types)]
+    for h in free:
+        heapq.heapify(h)
+    ready: list[list] = [[] for _ in range(g.num_types)]
+    becoming: list[list] = [[] for _ in range(g.num_types)]
+
+    for j in np.flatnonzero(indeg == 0):
+        heapq.heappush(becoming[alloc[j]], (0.0, -pr[j], int(j)))
+
+    t = 0.0
+    scheduled = 0
+    while scheduled < n:
+        progressed = True
+        while progressed:
+            progressed = False
+            for q in range(g.num_types):
+                while becoming[q] and becoming[q][0][0] <= t + 1e-15:
+                    rt, np_, j = heapq.heappop(becoming[q])
+                    heapq.heappush(ready[q], (np_, j))
+                while ready[q] and free[q] and free[q][0][0] <= t + 1e-15:
+                    _, j = heapq.heappop(ready[q])
+                    f, pid = heapq.heappop(free[q])
+                    start[j] = t
+                    finish[j] = t + times[j]
+                    proc_of[j] = pid
+                    heapq.heappush(free[q], (finish[j], pid))
+                    scheduled += 1
+                    progressed = True
+                    for v in g.succs(j):
+                        ready_time[v] = max(ready_time[v], finish[j])
+                        indeg[v] -= 1
+                        if indeg[v] == 0:
+                            heapq.heappush(becoming[alloc[v]],
+                                           (ready_time[v], -pr[v], int(v)))
+        if scheduled == n:
+            break
+        # Advance to the next event.
+        nxt = np.inf
+        for q in range(g.num_types):
+            if ready[q] and free[q]:
+                nxt = min(nxt, free[q][0][0])
+            if becoming[q]:
+                nxt = min(nxt, becoming[q][0][0])
+        if not np.isfinite(nxt) or nxt <= t:
+            raise RuntimeError("scheduler stalled (disconnected allocation?)")
+        t = nxt
+    return Schedule(alloc=alloc, proc=proc_of, start=start, finish=finish)
+
+
+def ols_rank(g: TaskGraph, alloc: np.ndarray) -> np.ndarray:
+    """Paper §4.1: Rank(T_j) = allocated time + max_{succ} Rank — post-rounding."""
+    return g.upward_rank(g.alloc_times(alloc))
+
+
+def hlp_est(g: TaskGraph, counts: list[int], alloc: np.ndarray) -> Schedule:
+    """Scheduling phase of HLP-EST: greedy Earliest Starting Time == untied LS."""
+    return list_schedule(g, counts, alloc, priority=None)
+
+
+def hlp_ols(g: TaskGraph, counts: list[int], alloc: np.ndarray) -> Schedule:
+    """Scheduling phase of HLP-OLS: LS ordered by the post-allocation rank."""
+    return list_schedule(g, counts, alloc, priority=ols_rank(g, alloc))
+
+
+# ------------------------------------------------------------ offline: HEFT
+def heft(g: TaskGraph, counts: list[int]) -> Schedule:
+    """Insertion-based HEFT for Q typed resource pools (single-phase baseline)."""
+    n, Q = g.n, g.num_types
+    total = float(sum(counts))
+    avg = (g.proc * np.asarray(counts, dtype=np.float64)).sum(axis=1) / total
+    rank = g.upward_rank(avg)
+    order = np.argsort(-rank, kind="stable")
+
+    # Per (type, proc): sorted list of (start, finish) busy intervals.
+    busy: list[list[list[tuple[float, float]]]] = [
+        [[] for _ in range(counts[q])] for q in range(Q)]
+    ready_time = np.zeros(n)
+    start = np.zeros(n); finish = np.zeros(n)
+    alloc = np.zeros(n, dtype=np.int32); proc_of = np.zeros(n, dtype=np.int32)
+
+    def earliest_fit(intervals: list[tuple[float, float]], r: float, p: float) -> float:
+        """Earliest start >= r of a length-p slot (insertion/backfilling)."""
+        prev_end = 0.0
+        for (s, f) in intervals:
+            cand = max(r, prev_end)
+            if cand + p <= s + 1e-12:
+                return cand
+            prev_end = f
+        return max(r, prev_end)
+
+    for j in order:
+        j = int(j)
+        best = (np.inf, 0, 0, 0.0)  # (finish, q, pid, start)
+        for q in range(Q):
+            p = g.proc[j, q]
+            if not np.isfinite(p):
+                continue
+            for pid in range(counts[q]):
+                s = earliest_fit(busy[q][pid], ready_time[j], p)
+                f = s + p
+                # Tie-break toward GPUs (higher q) per the paper's Thm-1 convention.
+                if f < best[0] - 1e-12 or (abs(f - best[0]) <= 1e-12 and q > best[1]):
+                    best = (f, q, pid, s)
+        f, q, pid, s = best
+        alloc[j], proc_of[j], start[j], finish[j] = q, pid, s, f
+        iv = busy[q][pid]
+        iv.append((s, f))
+        iv.sort()
+        for v in g.succs(j):
+            ready_time[v] = max(ready_time[v], f)
+    return Schedule(alloc=alloc, proc=proc_of, start=start, finish=finish)

@@ -1,0 +1,138 @@
+"""On-line scheduling (paper §4.2): greedy rules R1–R3, ER-LS, EFT, Random.
+
+Tasks arrive one by one in an order respecting the precedences; the scheduler
+takes an *irrevocable* (allocation + processor + start time) decision at
+arrival, knowing only the tasks seen so far and the committed schedule.
+
+ER-LS (Enhanced Rules – List Scheduling), the paper's contribution:
+  Step 1: if p̄_j >= R_{j,gpu} + p_j  -> GPU side
+          (R_{j,gpu} = max(τ_gpu, max_{i∈Γ⁻(j)} C_i), τ_gpu = earliest idle GPU)
+  Step 2: otherwise rule R2: CPU iff p̄_j/√m <= p_j/√k.
+Each task is then scheduled as early as possible on its side.
+Competitive ratio: at most 4√(m/k) (Thm 3), at least √(m/k) (Thm 4).
+"""
+from __future__ import annotations
+
+import heapq
+
+import numpy as np
+
+from .dag import CPU, GPU, TaskGraph
+from .listsched import Schedule, list_schedule
+
+
+# ------------------------------------------------------------------- rules
+def rule_r1(pc: float, pg: float, m: int, k: int) -> int:
+    return CPU if pc / m <= pg / k else GPU
+
+
+def rule_r2(pc: float, pg: float, m: int, k: int) -> int:
+    return CPU if pc / np.sqrt(m) <= pg / np.sqrt(k) else GPU
+
+
+def rule_r3(pc: float, pg: float, m: int, k: int) -> int:
+    return CPU if pc <= pg else GPU
+
+
+RULES = {"R1": rule_r1, "R2": rule_r2, "R3": rule_r3}
+
+
+def _arrival_order(g: TaskGraph, rng: np.random.Generator | None = None) -> np.ndarray:
+    """A precedence-respecting arrival order (randomized topo if rng given)."""
+    if rng is None:
+        return g.topo
+    # Random linear extension: Kahn with random tie-breaking.
+    indeg = np.diff(g.pred_ptr).astype(np.int64).copy()
+    avail = list(np.flatnonzero(indeg == 0))
+    order = np.empty(g.n, dtype=np.int32)
+    for i in range(g.n):
+        j = avail.pop(int(rng.integers(len(avail))))
+        order[i] = j
+        for v in g.succs(int(j)):
+            indeg[v] -= 1
+            if indeg[v] == 0:
+                avail.append(int(v))
+    return order
+
+
+class _OnlineMachine:
+    """Committed schedule state: per-type heaps of (free_time, proc_id)."""
+
+    def __init__(self, counts: list[int]):
+        self.free = [[(0.0, p) for p in range(c)] for c in counts]
+        for h in self.free:
+            heapq.heapify(h)
+
+    def earliest_idle(self, q: int) -> float:
+        return self.free[q][0][0]
+
+    def commit(self, q: int, ready: float, p: float) -> tuple[int, float, float]:
+        f, pid = heapq.heappop(self.free[q])
+        s = max(ready, f)
+        heapq.heappush(self.free[q], (s + p, pid))
+        return pid, s, s + p
+
+
+def _run_online(g: TaskGraph, counts: list[int], decide, order: np.ndarray) -> Schedule:
+    """Drive an online policy; ``decide(j, ready) -> type`` sees machine state."""
+    n = g.n
+    mach = _OnlineMachine(counts)
+    alloc = np.zeros(n, dtype=np.int32)
+    proc = np.zeros(n, dtype=np.int32)
+    start = np.zeros(n); finish = np.zeros(n)
+    for j in order:
+        j = int(j)
+        pr = g.preds(j)
+        ready = float(finish[pr].max()) if pr.size else 0.0
+        q = decide(j, ready, mach)
+        alloc[j] = q
+        proc[j], start[j], finish[j] = mach.commit(q, ready, g.proc[j, q])
+    return Schedule(alloc=alloc, proc=proc, start=start, finish=finish)
+
+
+# ------------------------------------------------------------------ policies
+def er_ls(g: TaskGraph, counts: list[int], order: np.ndarray | None = None) -> Schedule:
+    """The paper's on-line algorithm (enhanced rules + list scheduling)."""
+    m, k = counts[CPU], counts[GPU]
+
+    def decide(j: int, ready: float, mach: _OnlineMachine) -> int:
+        pc, pg = g.proc[j, CPU], g.proc[j, GPU]
+        r_gpu = max(mach.earliest_idle(GPU), ready)
+        if pc >= r_gpu + pg:                       # Step 1
+            return GPU
+        return rule_r2(pc, pg, m, k)               # Step 2
+
+    return _run_online(g, counts, decide, g.topo if order is None else order)
+
+
+def eft_online(g: TaskGraph, counts: list[int], order: np.ndarray | None = None) -> Schedule:
+    """Baseline: commit each arriving task to the processor minimizing its EFT."""
+    def decide(j: int, ready: float, mach: _OnlineMachine) -> int:
+        best_q, best_f = 0, np.inf
+        for q in range(g.num_types):
+            p = g.proc[j, q]
+            if not np.isfinite(p):
+                continue
+            f = max(ready, mach.earliest_idle(q)) + p
+            if f < best_f - 1e-12 or (abs(f - best_f) <= 1e-12 and p < g.proc[j, best_q]):
+                best_q, best_f = q, f
+        return best_q
+
+    return _run_online(g, counts, decide, g.topo if order is None else order)
+
+
+def greedy_online(g: TaskGraph, counts: list[int],
+                  rule: str = "R3", order: np.ndarray | None = None) -> Schedule:
+    """Baseline: allocation by a processing-time-only rule, then List Scheduling."""
+    m, k = counts[CPU], counts[GPU]
+    fn = RULES[rule]
+    alloc = np.asarray([fn(g.proc[j, CPU], g.proc[j, GPU], m, k) for j in range(g.n)],
+                       dtype=np.int32)
+    return list_schedule(g, counts, alloc)
+
+
+def random_online(g: TaskGraph, counts: list[int], seed: int = 0) -> Schedule:
+    """Baseline: uniformly random side per task, then List Scheduling."""
+    rng = np.random.default_rng(seed)
+    alloc = rng.integers(0, g.num_types, size=g.n).astype(np.int32)
+    return list_schedule(g, counts, alloc)

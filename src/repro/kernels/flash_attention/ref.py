@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for flash attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True) -> jnp.ndarray:
+    """q: (BH, Sq, D); k, v: (BH, Sk, D) -> (BH, Sq, D)."""
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(d).astype(jnp.float32)
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask[None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", w,
+                      v.astype(jnp.float32)).astype(q.dtype)

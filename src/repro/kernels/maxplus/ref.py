@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the tropical matmul / longest-path closure."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def maxplus_matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """C[i, j] = max_k (A[i, k] + B[k, j]) — O(m·k·n) dense reference."""
+    return jnp.max(a[:, :, None].astype(jnp.float32)
+                   + b[None, :, :].astype(jnp.float32), axis=1)
+
+
+def longest_path_ref(adj: jnp.ndarray, times: jnp.ndarray) -> jnp.ndarray:
+    """Per-task finish times of a dense-adjacency DAG (numpy-style sweep).
+
+    adj[i, j] = 0.0 if edge i->j else NEG_INF; times: (n,).
+    Returns finish[j] = times[j] + max over paths into j.
+    """
+    n = times.shape[0]
+    finish = times.astype(jnp.float32)
+    for _ in range(n):   # n relaxation rounds = exact on any DAG
+        incoming = jnp.max(finish[:, None] + adj, axis=0)
+        finish = jnp.maximum(times, times + incoming)
+    return finish

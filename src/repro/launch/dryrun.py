@@ -1,0 +1,189 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: the multi-pod dry-run builds a (2,16,16) mesh
+#   of 512 placeholder host devices.  (Only this entry point does this; smoke
+#   tests and benchmarks see the real single device.)
+
+# Multi-pod dry-run: lower + compile EVERY (arch × shape × mesh) cell.
+#
+# For each cell we record memory_analysis (proves it fits), cost_analysis
+# (FLOPs/bytes for §Roofline), the parsed collective traffic, and the derived
+# three-term roofline — appended incrementally to artifacts/dryrun_results.jsonl
+# so a partial run is never lost.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k
+#   PYTHONPATH=src python -m repro.launch.dryrun --mesh multi_pod --fresh
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, get_config
+from repro.launch import mesh as mesh_lib
+from repro.launch.hlo_analysis import collective_stats, roofline_terms
+from repro.launch.jaxpr_cost import cost_of_fn
+from repro.launch.shapes import SHAPES, applicable, build_cell, lower_cell, \
+    model_flops
+
+# Gradient-accumulation microbatches for the train_4k shape: chosen so the
+# per-layer saved activations of the deep/wide archs fit 16 GiB HBM
+# (global_batch 256 stays fixed; see EXPERIMENTS.md §Dry-run).
+TRAIN_MICROBATCHES = {
+    "internvl2-76b": 16, "granite-34b": 16, "jamba-v0.1-52b": 16,
+    "qwen2-moe-a2.7b": 4, "granite-3-2b": 4, "qwen2-1.5b": 8,
+    "whisper-medium": 8, "granite-moe-1b-a400m": 4, "olmo-1b": 2,
+    "mamba2-130m": 2,
+}
+
+# Deep/wide archs additionally shard the saved layer-boundary residuals on
+# the tp axis (sequence-parallel-style saves; see DESIGN.md §5).
+TRAIN_SEQ_PARALLEL = {"granite-34b", "internvl2-76b", "jamba-v0.1-52b"}
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "..", "artifacts")
+MESHES = ("single_pod", "multi_pod")
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str,
+             overrides: dict | None = None) -> dict:
+    cfg = get_config(arch)
+    base_over = {}
+    if shape_name == "train_4k" and arch in TRAIN_MICROBATCHES:
+        base_over["train_microbatches"] = TRAIN_MICROBATCHES[arch]
+    if shape_name == "train_4k" and arch in TRAIN_SEQ_PARALLEL:
+        base_over["seq_parallel"] = True
+    if overrides:
+        base_over.update(overrides)
+    if base_over:
+        cfg = type(cfg)(**{**cfg.__dict__, **base_over})
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "family": cfg.family}
+    ok, reason = applicable(cfg, shape)
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return rec
+    mesh = mesh_lib.make_production_mesh(multi_pod=mesh_name == "multi_pod")
+    chips = mesh.size
+    t0 = time.time()
+    try:
+        cell = build_cell(cfg, shape, mesh)
+        jx_cost = cost_of_fn(cell.fn, *cell.args)  # loop-aware GLOBAL (x-check)
+        lowered = lower_cell(cfg, shape, mesh)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        mem = compiled.memory_analysis()
+        hlo_text = compiled.as_text()
+        from repro.launch.hlo_analysis import hlo_cost
+        cost = hlo_cost(hlo_text)                  # loop-aware PER-DEVICE
+        xla_cost = compiled.cost_analysis()
+        coll = collective_stats(hlo_text, chips)
+        mf = model_flops(cfg, shape)
+        roof = roofline_terms(cost, coll, mf, chips,
+                              mesh_lib.PEAK_FLOPS_BF16, mesh_lib.HBM_BW,
+                              mesh_lib.ICI_LINK_BW)
+        roof["jaxpr_flops_global"] = jx_cost["flops"]
+        roof["jaxpr_bytes_global"] = jx_cost["bytes"]
+        roof["xla_flops_per_dev_loop_once"] = float(xla_cost.get("flops", 0.0))
+        mem_rec = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        }
+        peak = sum(v for k, v in mem_rec.items()
+                   if v and k in ("argument_bytes", "temp_bytes"))
+        # donated inputs alias outputs on TPU (the CPU backend used for the
+        # dry-run does not honor donation, so its temp double-buffers them)
+        donated = 0
+        for i in cell.donate:
+            donated += sum(
+                int(np.prod(x.shape)) * x.dtype.itemsize
+                for x in jax.tree.leaves(cell.args[i]))
+        rec.update(
+            status="ok", chips=chips,
+            lower_s=round(t1 - t0, 2), compile_s=round(t2 - t1, 2),
+            memory=mem_rec,
+            fits_hbm=bool(peak <= mesh_lib.HBM_BYTES),
+            donated_gib=round(donated / chips / 2 ** 30, 2),
+            fits_hbm_tpu=bool(peak - donated / chips <= mesh_lib.HBM_BYTES),
+            hbm_headroom_gib=round((mesh_lib.HBM_BYTES - peak) / 2 ** 30, 2),
+            collectives=coll, roofline=roof)
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="", help="comma list; default all")
+    ap.add_argument("--shape", default="", help="comma list; default all")
+    ap.add_argument("--mesh", default="", help="single_pod,multi_pod; default both")
+    ap.add_argument("--fresh", action="store_true", help="ignore existing results")
+    ap.add_argument("--out", default=os.path.join(ART, "dryrun_results.jsonl"))
+    ap.add_argument("--set", default="",
+                    help="config overrides k=v[,k=v] (perf experiments)")
+    ap.add_argument("--tag", default="", help="tag recorded with each row")
+    args = ap.parse_args()
+
+    archs = [a for a in args.arch.split(",") if a] or ARCHS
+    shapes = [s for s in args.shape.split(",") if s] or list(SHAPES)
+    meshes = [m for m in args.mesh.split(",") if m] or list(MESHES)
+    overrides = {}
+    for kv in args.set.split(","):
+        if not kv:
+            continue
+        k, v = kv.split("=")
+        overrides[k] = (int(v) if v.lstrip("-").isdigit()
+                        else float(v) if "." in v
+                        else v == "True" if v in ("True", "False") else v)
+
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    done = set()
+    if not args.fresh and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    if r.get("tag", "") == args.tag:
+                        done.add((r["arch"], r["shape"], r["mesh"]))
+                except json.JSONDecodeError:
+                    pass
+
+    total = ok = 0
+    for mesh_name in meshes:
+        for arch in archs:
+            for shape_name in shapes:
+                key = (arch, shape_name, mesh_name)
+                if key in done:
+                    continue
+                total += 1
+                rec = run_cell(arch, shape_name, mesh_name, overrides or None)
+                rec["tag"] = args.tag
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
+                status = rec["status"]
+                ok += status in ("ok", "skipped")
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (f"dom={r['dominant']} frac={r['roofline_fraction']:.3f} "
+                             f"compile={rec['compile_s']}s fits={rec['fits_hbm']}")
+                elif status == "error":
+                    extra = rec["error"][:160]
+                else:
+                    extra = rec["reason"][:60]
+                print(f"[{mesh_name}] {arch} × {shape_name}: {status} {extra}",
+                      flush=True)
+    print(f"done: {ok}/{total} cells ok/skipped")
+
+
+if __name__ == "__main__":
+    main()

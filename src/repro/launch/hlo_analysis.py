@@ -1,0 +1,355 @@
+"""Post-SPMD HLO analysis: collective bytes + roofline terms.
+
+``compiled.cost_analysis()`` gives per-device FLOPs and bytes accessed, but
+NOT collective traffic — we parse the optimized per-device HLO module and sum
+the *operand* sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute, deriving operand size from the printed
+result shape and the replica-group size where needed.
+
+Two collective figures are reported:
+  * ``collective_bytes``   — the brief's convention: Σ operand bytes (per
+    device) — comparable across iterations of the perf loop;
+  * ``link_bytes_modeled`` — ring-algorithm modeled bytes actually crossing a
+    device's links: AG/RS ≈ (g-1)·operand, AR ≈ 2·(g-1)/g·operand·…
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_ITOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _result_bytes(line: str) -> int:
+    """Byte size of the result shape(s) of an HLO instruction line.
+
+    Tuple results of async ``*-start`` ops hold (operand, result) — only the
+    last shape counts; plain tuple results (e.g. fused all-reduce of several
+    tensors) are summed.
+    """
+    head = line.split(" = ", 1)[1]
+    opname_pos = min((head.find(c) for c in _COLLECTIVES if c in head),
+                     default=-1)
+    shapes = _SHAPE_RE.findall(head[:opname_pos])
+    if not shapes:
+        return 0
+    if "-start(" in head:
+        dt, dims = shapes[-1]
+        return _shape_bytes(dt, dims)
+    return sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = _GROUPS_ITOTA_RE.search(line)
+    if m:
+        ngroups, _ = int(m.group(1)), int(m.group(2))
+        # iota format: [num_groups, group_size]<=[total]
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return total_devices
+
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\{\s*$")
+_WHILE_RE = re.compile(
+    r"while\((%[\w.\-]+)\), condition=(%[\w.\-]+), body=(%[\w.\-]+)")
+
+
+def _computations(hlo_text: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        m = _COMP_HDR.match(line)
+        if m and " = " not in line:
+            cur = m.group(1)
+            comps[cur] = []
+        elif line.startswith("}"):
+            cur = None
+        elif cur is not None:
+            comps[cur].append(line.strip())
+    return comps
+
+
+def _loop_multipliers(comps: dict[str, list[str]]) -> dict[str, float]:
+    """Trip-count multiplier per computation.
+
+    XLA hoists each while loop's bound into its CONDITION computation as a
+    scalar s32 constant compared against the loop counter — so the trip count
+    is simply the (max) scalar s32 constant defined in the condition.
+    Multipliers propagate multiplicatively through nested whiles.
+    """
+    whiles: dict[str, list[tuple[str, str]]] = {}  # comp -> [(cond, body)]
+    for name, lines in comps.items():
+        ws = []
+        for ls in lines:
+            mw = _WHILE_RE.search(ls)
+            if mw:
+                ws.append((mw.group(2).lstrip("%"), mw.group(3).lstrip("%")))
+        whiles[name] = ws
+
+    def cond_trip(cond: str) -> int:
+        best = 1
+        for ls in comps.get(cond, []):
+            mc = re.search(r"s32\[\] constant\((\d+)\)", ls)
+            if mc:
+                best = max(best, int(mc.group(1)))
+        return best
+
+    mult: dict[str, float] = defaultdict(lambda: 1.0)
+    for _ in range(8):   # fixpoint over nesting depth
+        for name, ws in whiles.items():
+            base = mult[name]
+            for cond, body in ws:
+                mult[body] = max(mult[body], base * cond_trip(cond))
+            mult[name] = base
+    return dict(mult)
+
+
+def collective_stats(hlo_text: str, total_devices: int) -> dict:
+    per_op_bytes: dict[str, float] = defaultdict(float)
+    link_modeled = 0.0
+    count = 0
+    comps = _computations(hlo_text)
+    mults = _loop_multipliers(comps)
+    for comp_name, lines in comps.items():
+        m = mults.get(comp_name, 1.0)
+        for ls in lines:
+            self_coll = _collective_on_line(ls, total_devices)
+            if self_coll is None:
+                continue
+            op, operand, link = self_coll
+            per_op_bytes[op] += operand * m
+            link_modeled += link * m
+            count += 1
+    return {"collective_bytes": float(sum(per_op_bytes.values())),
+            "link_bytes_modeled": float(link_modeled),
+            "per_op_bytes": dict(per_op_bytes),
+            "num_collectives": count}
+
+
+def _collective_on_line(ls: str, total_devices: int):
+    if " = " not in ls:
+        return None
+    rhs = ls.split(" = ", 1)[1]
+    op = next((c for c in _COLLECTIVES
+               if re.search(rf"\b{c}(-start)?\(", rhs)), None)
+    if op is None or f"{op}-done" in rhs:
+        return None
+    res = _result_bytes(ls)
+    if res == 0:
+        return None
+    g = max(_group_size(ls, total_devices), 1)
+    if op == "all-gather":
+        operand = res / g
+        link = operand * (g - 1)
+    elif op == "reduce-scatter":
+        operand = res * g
+        link = res * (g - 1)
+    elif op == "all-reduce":
+        operand = res
+        link = 2.0 * res * (g - 1) / g
+    elif op == "all-to-all":
+        operand = res
+        link = res * (g - 1) / g
+    else:  # collective-permute
+        operand = res
+        link = res
+    return op, operand, link
+
+
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_PARAM_RE = re.compile(r"([\w.\-]+): ((?:\([^)]*\))|(?:\w+\[[\d,]*\]))")
+_OP_RE = re.compile(r"\b([a-z][a-z0-9_\-]*)\(")
+_VAR_RE = re.compile(r"%[\w.\-]+")
+
+
+def _parse_shapes(type_str: str) -> list[tuple[str, list[int]]]:
+    return [(dt, [int(d) for d in dims.split(",") if d])
+            for dt, dims in _SHAPE_RE.findall(type_str)]
+
+
+def _shapes_bytes(shapes: list[tuple[str, list[int]]]) -> int:
+    total = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def hlo_cost(hlo_text: str) -> dict:
+    """Loop-aware, fusion-aware per-device flops & bytes from optimized HLO.
+
+    * flops: every ``dot`` (in any computation) x its execution multiplier
+      (fusion/reducer bodies inherit their call sites' multipliers).
+    * bytes: XLA's bytes-accessed convention — operands + results of each
+      top-level instruction (fusions are single units) x loop multipliers;
+      called bodies are skipped for bytes (accounted at the call site).
+    """
+    comps = _computations(hlo_text)
+    mults = _loop_multipliers(comps)
+
+    # parameter shapes per computation (from headers)
+    param_shapes: dict[str, dict[str, list]] = {}
+    for line in hlo_text.splitlines():
+        m = _COMP_HDR.match(line)
+        if m and " = " not in line:
+            param_shapes[m.group(1)] = {
+                "%" + pm.group(1): _parse_shapes(pm.group(2))
+                for pm in _PARAM_RE.finditer(line)}
+
+    # propagate execution multipliers into fusion / reducer bodies
+    called_mult: dict[str, float] = defaultdict(float)
+    call_sites: dict[str, list] = defaultdict(list)
+    for name, lines_ in comps.items():
+        m = mults.get(name, 1.0)
+        for ls in lines_:
+            for cm in re.finditer(r"(?:calls|to_apply)=(%[\w.\-]+)", ls):
+                called_mult[cm.group(1).lstrip("%")] += m
+
+    # fusion params consumed ONLY by dynamic-slice: the call site should be
+    # charged the slice, not the whole (often layer-stacked) operand.
+    slice_only: dict[str, dict[int, int]] = {}
+    for name, lines_ in comps.items():
+        if name not in called_mult:
+            continue
+        pidx: dict[str, int] = {}
+        uses: dict[str, list] = defaultdict(list)
+        shapes_f: dict[str, list] = {}
+        for ls in lines_:
+            if " = " not in ls:
+                continue
+            lhs_txt, head = ls.split(" = ", 1)
+            var = "%" + lhs_txt.strip().lstrip("%")
+            mp = re.search(r"parameter\((\d+)\)", head)
+            if mp:
+                pidx[var] = int(mp.group(1))
+                shapes_f[var] = _parse_shapes(head[:head.find(" parameter")])
+                continue
+            opm = _OP_RE.search(head)
+            if not opm:
+                continue
+            shapes_f[var] = _parse_shapes(head[:opm.start()])
+            rb = _shapes_bytes(shapes_f[var])
+            close = head.find(")", opm.end())
+            for o in _VAR_RE.findall(head[opm.end():max(close, opm.end())]):
+                uses[o].append((opm.group(1), rb))
+        so = {}
+        for var, idx in pidx.items():
+            us = uses.get(var, [])
+            if us and all(u[0] == "dynamic-slice" for u in us):
+                so[idx] = max(u[1] for u in us)
+        if so:
+            slice_only[name] = so
+
+    flops = 0.0
+    byts = 0.0
+    for name, lines_ in comps.items():
+        is_called = name in called_mult
+        m = called_mult[name] if is_called else mults.get(name, 1.0)
+        shapes: dict[str, list] = dict(param_shapes.get(name, {}))
+        for ls in lines_:
+            if " = " not in ls:
+                continue
+            lhs_txt, head = ls.split(" = ", 1)
+            var = "%" + lhs_txt.strip().lstrip("%")
+            opm = _OP_RE.search(head)
+            if not opm:
+                continue
+            op = opm.group(1)
+            result_shapes = _parse_shapes(head[:opm.start()])
+            shapes[var] = result_shapes
+            close = head.find(")", opm.end())
+            operand_names = _VAR_RE.findall(
+                head[opm.end():max(close, opm.end())])
+            if op == "dot":
+                lc = _LHS_CONTRACT_RE.search(head)
+                lhs_shape = shapes.get(operand_names[0]) if operand_names else None
+                k = 1
+                if lc and lhs_shape:
+                    dims = lhs_shape[0][1]
+                    for i in (int(x) for x in lc.group(1).split(",") if x):
+                        if i < len(dims):
+                            k *= dims[i]
+                out_elems = 1
+                if result_shapes:
+                    for d in result_shapes[-1][1]:
+                        out_elems *= d
+                flops += 2.0 * out_elems * k * m
+            if not is_called:
+                if op in ("get-tuple-element", "tuple", "parameter",
+                          "bitcast", "after-all", "constant",
+                          "partition-id", "replica-id"):
+                    continue   # no data movement
+                callee = None
+                cmm = re.search(r"(?:calls|to_apply)=(%[\w.\-]+)", head)
+                if cmm:
+                    callee = cmm.group(1).lstrip("%")
+                so = slice_only.get(callee, {}) if callee else {}
+                if op == "dynamic-slice":
+                    byts += 2.0 * _shapes_bytes(result_shapes) * m
+                elif op == "dynamic-update-slice":
+                    upd = (_shapes_bytes(shapes.get(operand_names[1], []))
+                           if len(operand_names) > 1 else 0)
+                    byts += 2.0 * upd * m
+                else:
+                    ob = 0.0
+                    for i, o in enumerate(operand_names):
+                        if i in so:
+                            ob += so[i]
+                        else:
+                            ob += _shapes_bytes(shapes.get(o, []))
+                    byts += (_shapes_bytes(result_shapes) + ob) * m
+    return {"flops": flops, "bytes": byts}
+
+
+def roofline_terms(cost: dict, coll: dict, model_fl: float, chips: int,
+                   peak_flops: float, hbm_bw: float, link_bw: float) -> dict:
+    """The three roofline terms (seconds) + dominant bottleneck.
+
+    ``cost`` carries PER-DEVICE flops/bytes from the loop-aware walk of the
+    compiled per-device HLO module (see hlo_cost).
+    """
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes", 0.0))
+    compute_s = flops_dev / peak_flops
+    memory_s = bytes_dev / hbm_bw
+    collective_s = coll["collective_bytes"] / link_bw
+    collective_modeled_s = coll["link_bytes_modeled"] / link_bw
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    ideal_s = model_fl / chips / peak_flops
+    bound_s = max(terms.values())
+    return {
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s,
+        "collective_modeled_s": collective_modeled_s,
+        "dominant": dominant,
+        "hlo_flops_per_dev": flops_dev, "hlo_bytes_per_dev": bytes_dev,
+        "model_flops_total": model_fl,
+        "useful_flops_ratio": model_fl / max(flops_dev * chips, 1.0),
+        "ideal_s": ideal_s,
+        "roofline_fraction": ideal_s / max(bound_s, 1e-30),
+    }

@@ -1,0 +1,98 @@
+"""Training driver (single-host real execution; same code path the pods run).
+
+Wires together: config registry -> sharded params -> data pipeline ->
+jitted train_step -> resilient loop (checkpoint / restart / watchdog).
+
+  PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --smoke \\
+      --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import checkpoint as ckpt_lib
+from repro.configs import get_config, get_smoke_config
+from repro.data.pipeline import DataConfig, Prefetcher
+from repro.launch.mesh import make_host_mesh
+from repro.models import model as M
+from repro.optim import adamw
+from repro.runtime.fault import FaultConfig, resilient_train_loop
+from repro.sharding.act import activation_sharding
+from repro.sharding.rules import ShardingRules
+from repro.train.step import make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
+    mesh = make_host_mesh()
+    rules = ShardingRules(mesh=mesh, cfg=cfg)
+    oc = adamw.OptConfig(lr=args.lr, warmup_steps=20, total_steps=args.steps)
+    step_fn = make_train_step(cfg, oc, num_microbatches=args.microbatches)
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                          global_batch=args.batch)
+
+    with activation_sharding(mesh, dp=rules.dp_axes, tp=rules.tp_axis):
+        jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+
+        def init_state():
+            params = M.init_params(cfg, jax.random.PRNGKey(0))
+            return {"params": params, "opt": adamw.init(params)}
+
+        def one_step(state, batch):
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            params, opt, metrics = jitted(state["params"], state["opt"], batch)
+            return {"params": params, "opt": opt}, metrics
+
+        losses = []
+
+        def on_metrics(step, metrics):
+            if step % args.log_every == 0:
+                loss = float(metrics["loss"])
+                losses.append((step, loss))
+                print(f"step {step:5d}  loss {loss:.4f}  "
+                      f"lr {float(metrics['lr']):.2e}  "
+                      f"gnorm {float(metrics['grad_norm']):.3f}", flush=True)
+
+        t0 = time.time()
+        if args.ckpt_dir:
+            fc = FaultConfig(ckpt_dir=args.ckpt_dir,
+                             ckpt_every=args.ckpt_every)
+            state, metrics, info = resilient_train_loop(
+                init_state, one_step, data_cfg, args.steps, fc,
+                on_metrics=on_metrics)
+            print(f"done in {time.time()-t0:.1f}s; restarts={info['restarts']}")
+        else:
+            state = init_state()
+            pf = Prefetcher(data_cfg)
+            try:
+                for step in range(args.steps):
+                    _, batch = pf.next()
+                    state, metrics = one_step(state, batch)
+                    on_metrics(step, metrics)
+            finally:
+                pf.close()
+            print(f"done in {time.time()-t0:.1f}s; "
+                  f"final loss {float(metrics['loss']):.4f}")
+
+
+if __name__ == "__main__":
+    main()

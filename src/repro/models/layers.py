@@ -1,0 +1,483 @@
+"""Model building blocks — pure-JAX functional layers (params = pytrees).
+
+Everything here is written for SPMD lowering under pjit: no python-level
+device logic, memory-bounded attention (query-chunked online softmax),
+sort-based dropping MoE (no (N, E, C) dispatch tensors), and a chunked
+Mamba2/SSD scan.  Compute dtype is cfg.dtype (bf16), params cfg.param_dtype.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.sharding.act import shard
+
+Params = dict
+
+
+def _cdt(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _pdt(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def dense_init(rng, shape, in_axis_size: int, dtype) -> jnp.ndarray:
+    scale = 1.0 / np.sqrt(max(in_axis_size, 1))
+    return (jax.random.normal(rng, shape) * scale).astype(dtype)
+
+
+# ------------------------------------------------------------------- norms
+def norm_init(cfg: ModelConfig, d: int) -> Params:
+    if cfg.norm == "np_layernorm":       # olmo-1b: non-parametric LN
+        return {}
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,), _pdt(cfg)), "bias": jnp.zeros((d,), _pdt(cfg))}
+    return {"scale": jnp.ones((d,), _pdt(cfg))}
+
+
+def norm_apply(cfg: ModelConfig, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + 1e-6)
+        return (xf * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    xf = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+    if cfg.norm == "layernorm":
+        xf = xf * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return xf.astype(x.dtype)
+
+
+# -------------------------------------------------------------------- rope
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, Dh); positions: (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs          # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------- attention
+def attn_init(cfg: ModelConfig, rng) -> Params:
+    d, h, hk, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(rng, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h, hd), d, _pdt(cfg)),
+        "wk": dense_init(ks[1], (d, hk, hd), d, _pdt(cfg)),
+        "wv": dense_init(ks[2], (d, hk, hd), d, _pdt(cfg)),
+        "wo": dense_init(ks[3], (h, hd, d), h * hd, _pdt(cfg)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), _pdt(cfg))
+        p["bk"] = jnp.zeros((hk, hd), _pdt(cfg))
+        p["bv"] = jnp.zeros((hk, hd), _pdt(cfg))
+    return p
+
+
+def _qkv(cfg: ModelConfig, p: Params, x: jnp.ndarray):
+    cdt = _cdt(cfg)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cdt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(cdt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(cdt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(cdt)
+        k = k + p["bk"].astype(cdt)
+        v = v + p["bv"].astype(cdt)
+    return shard(q, "bshd"), shard(k, "bshd"), shard(v, "bshd")
+
+
+def best_chunk(s: int, target: int) -> int:
+    """Largest divisor of s that is <= target (chunked-scan block size)."""
+    c = min(s, target)
+    while s % c:
+        c -= 1
+    return c
+
+
+def _sdpa_chunked(q, k, v, *, causal: bool, q_chunk: int = 512,
+                  q_offset: int = 0) -> jnp.ndarray:
+    """Query-chunked softmax attention with GQA; memory O(B·H·Cq·S).
+
+    q: (B, Sq, H, Dh); k, v: (B, Skv, Hkv, Dh).  H = G·Hkv.
+    The q-chunk loop is a lax.scan, so the lowered HLO stays small and the
+    per-chunk logits never exceed (B, H, Cq, Skv).
+    """
+    b, sq, h, dh = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    scale = 1.0 / np.sqrt(dh)
+    cq = best_chunk(sq, q_chunk)
+    nchunks = sq // cq
+    # GQA via kv-head repeat along the (possibly tp-sharded) q-head dim —
+    # a (hkv, g) reshape of sharded heads forces SPMD full-rematerialization,
+    # whereas the repeat lowers to a local gather of each shard's kv heads.
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    k = shard(k, "bshd")
+    v = shard(v, "bshd")
+    qc = q.reshape(b, nchunks, cq, h, dh)
+
+    def one_chunk(ci, qi):
+        # qi: (B, Cq, H, Dh)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", qi, k).astype(jnp.float32) * scale
+        if causal:
+            qpos = q_offset + ci * cq + jnp.arange(cq)
+            kpos = jnp.arange(skv)
+            mask = qpos[:, None] >= kpos[None, :]
+            logits = jnp.where(mask[None, None], logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+        return jnp.einsum("bhqk,bkhd->bqhd", w, v)
+
+    if nchunks == 1:
+        out = one_chunk(0, qc[:, 0])
+    else:
+        out = jax.lax.map(lambda args: one_chunk(*args),
+                          (jnp.arange(nchunks), qc.swapaxes(0, 1)))
+        out = out.swapaxes(0, 1)
+    return out.reshape(b, sq, h, dh)
+
+
+def attn_apply(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+               positions: jnp.ndarray, *, causal: bool = True,
+               return_kv: bool = False):
+    """Self-attention over a full sequence (train / prefill / encoder)."""
+    q, k, v = _qkv(cfg, p, x)
+    if cfg.use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    if cfg.use_pallas and causal and q.shape[1] >= 128:
+        from repro.kernels.flash_attention import ops as fa_ops
+        out = fa_ops.flash_attention(q, k, v, causal=True)
+    else:
+        out = _sdpa_chunked(q, k, v, causal=causal)
+    out = shard(out, "bshd")
+    y = shard(jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(_cdt(cfg))), "bsd")
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def attn_decode(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                cache_k: jnp.ndarray, cache_v: jnp.ndarray,
+                pos: jnp.ndarray):
+    """Single-token decode. x: (B, 1, D); cache: (B, Smax, Hkv, Dh); pos: (B,)."""
+    cdt = _cdt(cfg)
+    q, k, v = _qkv(cfg, p, x)
+    if cfg.use_rope:
+        q = rope(q, pos[:, None], cfg.rope_theta)
+        k = rope(k, pos[:, None], cfg.rope_theta)
+    # write the new kv at position `pos` (same for all batch rows via vmap)
+    def upd(c, new, i):
+        return jax.lax.dynamic_update_slice(c, new.astype(c.dtype), (i, 0, 0))
+    cache_k = jax.vmap(upd)(cache_k, k, pos)
+    cache_v = jax.vmap(upd)(cache_v, v, pos)
+
+    b, _, h, dh = q.shape
+    hkv = cache_k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, 1, hkv, g, dh)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, cache_k).astype(jnp.float32)
+    logits = logits / np.sqrt(dh)
+    kpos = jnp.arange(cache_k.shape[1])
+    mask = kpos[None, :] <= pos[:, None]                  # (B, Smax)
+    logits = jnp.where(mask[:, None, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(cdt)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, cache_v).reshape(b, 1, h, dh)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cdt))
+    return y, (cache_k, cache_v)
+
+
+def cross_attn_apply(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                     enc_k: jnp.ndarray, enc_v: jnp.ndarray) -> jnp.ndarray:
+    """Cross-attention (whisper decoder): kv precomputed from encoder output."""
+    cdt = _cdt(cfg)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cdt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(cdt)
+    out = _sdpa_chunked(q, enc_k, enc_v, causal=False)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cdt))
+
+
+def cross_kv(cfg: ModelConfig, p: Params, enc_out: jnp.ndarray):
+    cdt = _cdt(cfg)
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(cdt))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(cdt))
+    if cfg.qkv_bias:
+        k = k + p["bk"].astype(cdt)
+        v = v + p["bv"].astype(cdt)
+    return k, v
+
+
+# ---------------------------------------------------------------------- MLP
+def mlp_init(cfg: ModelConfig, rng, d_ff: int | None = None,
+             gelu: bool = False) -> Params:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    p = {"w_up": dense_init(ks[0], (d, f), d, _pdt(cfg)),
+         "w_down": dense_init(ks[1], (f, d), f, _pdt(cfg))}
+    if not gelu:
+        p["w_gate"] = dense_init(ks[2], (d, f), d, _pdt(cfg))
+    return p
+
+
+def mlp_apply(cfg: ModelConfig, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    cdt = _cdt(cfg)
+    up = x @ p["w_up"].astype(cdt)
+    if "w_gate" in p:
+        h = jax.nn.silu(x @ p["w_gate"].astype(cdt)) * up
+    else:
+        h = jax.nn.gelu(up)
+    h = shard(h, "bsf")
+    return shard(h @ p["w_down"].astype(cdt), "bsd")
+
+
+# ---------------------------------------------------------------------- MoE
+def moe_init(cfg: ModelConfig, rng) -> Params:
+    d, f, e = cfg.d_model, cfg.moe_ff, cfg.moe_num_experts
+    ks = jax.random.split(rng, 5)
+    p = {
+        "router": dense_init(ks[0], (d, e), d, jnp.float32),
+        "w_gate": dense_init(ks[1], (e, d, f), d, _pdt(cfg)),
+        "w_up": dense_init(ks[2], (e, d, f), d, _pdt(cfg)),
+        "w_down": dense_init(ks[3], (e, f, d), f, _pdt(cfg)),
+    }
+    if cfg.moe_num_shared:
+        p["shared"] = mlp_init(cfg, ks[4], d_ff=cfg.moe_ff * cfg.moe_num_shared)
+    return p
+
+
+def moe_apply(cfg: ModelConfig, p: Params, x: jnp.ndarray):
+    """Sort-based dropping MoE with LOCAL per-data-shard dispatch.
+
+    Tokens are grouped by data-parallel shard; each group routes into its own
+    per-expert capacity rows, so dispatch/combine scatters are purely local
+    (no cross-device scatter -> no TB-scale all-reduces; the only collective
+    left is the FSDP weight gather).  Expert FFNs run as one batched einsum
+    over (groups, experts, cap_local).  Returns (out, aux_loss).
+    """
+    from repro.sharding.act import dp_shards
+    cdt = _cdt(cfg)
+    b, s, d = x.shape
+    e, k = cfg.moe_num_experts, cfg.moe_top_k
+    n = b * s
+    ns = dp_shards(n)                                   # dispatch groups
+    nl = n // ns
+    xg = shard(x.reshape(ns, nl, d), "bsd")             # (G, NL, D)
+
+    logits = xg.astype(jnp.float32) @ p["router"]       # (G, NL, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, top_e = jax.lax.top_k(probs, k)          # (G, NL, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # load-balancing aux loss (Switch-style), global over all tokens
+    density = jnp.mean(jax.nn.one_hot(top_e[..., 0], e), axis=(0, 1))
+    aux = e * jnp.sum(density * jnp.mean(probs, axis=(0, 1)))
+
+    cap = max(int(np.ceil(nl * k / e * cfg.capacity_factor / 8.0)) * 8, 8)
+    cap = min(cap, nl)
+
+    flat_e = top_e.reshape(ns, nl * k)                  # (G, NL·k)
+    flat_g = gate_vals.reshape(ns, nl * k)
+    order = jnp.argsort(flat_e, axis=1, stable=True)
+    se = jnp.take_along_axis(flat_e, order, axis=1)
+    st = order // k                                     # source token in group
+    sg = jnp.take_along_axis(flat_g, order, axis=1)
+    first = jax.vmap(lambda row: jnp.searchsorted(row, jnp.arange(e),
+                                                  side="left"))(se)  # (G, E)
+    pos = jnp.arange(nl * k)[None, :] - jnp.take_along_axis(first, se, axis=1)
+    keep = pos < cap
+    slot = jnp.minimum(se * cap + pos, e * cap - 1)     # dropped -> last row,
+    #                                                     contribution zeroed
+
+    gathered = jnp.take_along_axis(xg, st[..., None], axis=1)
+    gathered = (gathered * keep[..., None]).astype(cdt)  # (G, NL·k, D)
+    buf = jax.vmap(lambda bf, sl, gv: bf.at[sl].add(gv))(
+        jnp.zeros((ns, e * cap, d), cdt), slot, gathered)
+    h = shard(buf.reshape(ns, e, cap, d), "bsd")        # groups on dp, local
+
+    # gather the (small) FSDP weight shards instead of reducing activations
+    w_gate = shard(p["w_gate"].astype(cdt), "edf")
+    w_up = shard(p["w_up"].astype(cdt), "edf")
+    w_down = shard(p["w_down"].swapaxes(-1, -2).astype(cdt), "edf")
+    hg = jax.nn.silu(jnp.einsum("gecd,edf->gecf", h, w_gate))
+    hu = jnp.einsum("gecd,edf->gecf", h, w_up)
+    ho = shard(jnp.einsum("gecf,edf->gecd", hg * hu, w_down), "bsd")
+    ho = ho.reshape(ns, e * cap, d)
+
+    back = jnp.take_along_axis(ho, slot[..., None], axis=1)
+    back = back * (sg * keep).astype(cdt)[..., None]    # (G, NL·k, D)
+    out = jax.vmap(lambda o, tt, bb: o.at[tt].add(bb))(
+        jnp.zeros((ns, nl, d), cdt), st, back)
+    out = shard(out, "bsd").reshape(n, d)
+    if cfg.moe_num_shared:
+        out = out + mlp_apply(cfg, p["shared"], x.reshape(n, d).astype(cdt))
+    return out.reshape(b, s, d), aux
+
+
+# ------------------------------------------------------------- Mamba2 (SSD)
+def ssm_init(cfg: ModelConfig, rng) -> Params:
+    """Mamba2/SSD block params.  The input projection is SPLIT into separate
+    z/x/B/C/dt matrices (and per-stream conv filters) instead of one packed
+    in_proj: each output dim then shards cleanly on the TP axis without the
+    packed-slice resharding a fused projection would force under SPMD."""
+    d, di, ns, nh = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_num_heads
+    cw = cfg.ssm_conv_width
+    ks = jax.random.split(rng, 9)
+    return {
+        "w_z": dense_init(ks[0], (d, di), d, _pdt(cfg)),
+        "w_x": dense_init(ks[1], (d, di), d, _pdt(cfg)),
+        "w_B": dense_init(ks[2], (d, ns), d, _pdt(cfg)),
+        "w_C": dense_init(ks[3], (d, ns), d, _pdt(cfg)),
+        "w_dt": dense_init(ks[4], (d, nh), d, _pdt(cfg)),
+        "conv_x": dense_init(ks[5], (cw, di), cw, _pdt(cfg)),
+        "conv_B": dense_init(ks[6], (cw, ns), cw, _pdt(cfg)),
+        "conv_C": dense_init(ks[7], (cw, ns), cw, _pdt(cfg)),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": {"scale": jnp.ones((di,), _pdt(cfg))},
+        "w_out": dense_init(ks[8], (di, d), di, _pdt(cfg)),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv along time. x: (B,S,C); w: (cw,C)."""
+    cw, s = w.shape[0], x.shape[1]
+    pad = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    return sum(pad[:, i:i + s] * w[i] for i in range(cw))
+
+
+def _gated_rmsnorm(p: Params, x: jnp.ndarray, z: jnp.ndarray) -> jnp.ndarray:
+    xf = (x * jax.nn.silu(z)).astype(jnp.float32)
+    xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + 1e-6)
+    return (xf * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def ssm_apply(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+              return_state: bool = False):
+    """Chunked SSD (state-space duality) forward over a full sequence.
+
+    x: (B, S, D).  Within chunks of length Lc the recurrence is evaluated as
+    decay-masked matmuls (MXU-friendly); across chunks a lax.scan carries the
+    (B, nh, hd, ns) state — the TPU-native formulation of Mamba-2.
+    """
+    cdt = _cdt(cfg)
+    b, s_in, d = x.shape
+    di, ns, nh, hd = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_num_heads, cfg.ssm_head_dim
+    lc = min(cfg.ssm_chunk, s_in)
+    # pad to a chunk multiple; padded steps get dt=0 => identity state update
+    s = ((s_in + lc - 1) // lc) * lc
+    if s != s_in:
+        x = jnp.pad(x, ((0, 0), (0, s - s_in), (0, 0)))
+    valid = (jnp.arange(s) < s_in)
+    nc = s // lc
+    cw = cfg.ssm_conv_width
+
+    z = shard(x @ p["w_z"].astype(cdt), "bsf", heads=nh)
+    xp = shard(x @ p["w_x"].astype(cdt), "bsf", heads=nh)
+    Bp = x @ p["w_B"].astype(cdt)
+    Cp = x @ p["w_C"].astype(cdt)
+    xin = jax.nn.silu(_causal_conv(xp, p["conv_x"].astype(cdt)))
+    Bmat = jax.nn.silu(_causal_conv(Bp, p["conv_B"].astype(cdt)))
+    Cmat = jax.nn.silu(_causal_conv(Cp, p["conv_C"].astype(cdt)))
+    dt = x @ p["w_dt"].astype(cdt)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B, S, nh)
+    dt = dt * valid[None, :, None]                               # freeze padded steps
+    A = -jnp.exp(p["A_log"])                                     # (nh,)
+    xh = shard(xin.reshape(b, s, nh, hd), "bshd")
+    mask = jnp.tril(jnp.ones((lc, lc), bool))
+
+    def chunk_step(state, inp):
+        # state: (b, nh, hd, ns); one chunk of inputs
+        dtc, xc, Bc, Cc = inp          # (b,lc,nh) (b,lc,nh,hd) (b,lc,ns) (b,lc,ns)
+        cums = jnp.cumsum(dtc * A, axis=1)                       # (b,lc,nh)
+        seg = cums[:, -1, :]                                     # (b,nh)
+        # intra-chunk: y[i] += C_i·B_j · exp(cums_i - cums_j) · dt_j x_j, j<=i
+        decay = jnp.exp(cums[:, :, None, :] - cums[:, None, :, :])
+        cb = jnp.einsum("bin,bjn->bij", Cc, Bc)
+        att = cb[..., None] * decay * dtc[:, None, :, :]
+        att = jnp.where(mask[None, :, :, None], att, 0.0)
+        y = jnp.einsum("bijh,bjhp->bihp", att.astype(cdt), xc)
+        # inter-chunk: y[i] += exp(cums_i) · C_i · S_prev
+        y = y + jnp.einsum("bin,bhpn,bih->bihp", Cc, state,
+                           jnp.exp(cums).astype(cdt))
+        # state update: S <- exp(seg)·S + Σ_j exp(seg - cums_j) dt_j B_j ⊗ x_j
+        sdecay = (jnp.exp(seg[:, None, :] - cums) * dtc).astype(cdt)
+        contrib = jnp.einsum("bjn,bjh,bjhp->bhpn", Bc, sdecay, xc)
+        new_state = state * jnp.exp(seg)[:, :, None, None].astype(cdt) + contrib
+        return shard(new_state, "bhds"), shard(y, "bshd")
+
+    chunks = (shard(dt.reshape(b, nc, lc, nh).swapaxes(0, 1), "xbs"),
+              shard(xh.reshape(b, nc, lc, nh, hd).swapaxes(0, 1), "xbs"),
+              shard(Bmat.reshape(b, nc, lc, ns).swapaxes(0, 1), "xbs"),
+              shard(Cmat.reshape(b, nc, lc, ns).swapaxes(0, 1), "xbs"))
+    s0 = jnp.zeros((b, nh, hd, ns), cdt)
+    step = chunk_step if cfg.remat == "none" else jax.checkpoint(chunk_step)
+    final_state, ys = jax.lax.scan(step, s0, chunks)
+    y = ys.swapaxes(0, 1).reshape(b, s, nh, hd)
+    y = y + xh * p["D"][None, None, :, None].astype(cdt)
+    y = shard(y[:, :s_in].reshape(b, s_in, di), "bsf", heads=nh)
+    y = _gated_rmsnorm(p["norm"], y, z[:, :s_in])
+    out = shard(y @ p["w_out"].astype(cdt), "bsd")
+    if return_state:
+        # pre-conv projection tail, layout [xp (di), Bp (ns), Cp (ns)]
+        if cw > 1:
+            conv_tail = jnp.concatenate(
+                [xp[:, s_in - (cw - 1):s_in], Bp[:, s_in - (cw - 1):s_in],
+                 Cp[:, s_in - (cw - 1):s_in]], axis=-1)
+        else:
+            conv_tail = jnp.zeros((b, 0, di + 2 * ns), cdt)
+        return out, (final_state, conv_tail)
+    return out
+
+
+def ssm_decode(cfg: ModelConfig, p: Params, x: jnp.ndarray, state):
+    """Single-token SSD step. x: (B, 1, D); state = (ssm (B,nh,hd,ns), conv tail)."""
+    cdt = _cdt(cfg)
+    ssm_state, conv_tail = state
+    b = x.shape[0]
+    di, ns, nh, hd = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_num_heads, cfg.ssm_head_dim
+    cw = cfg.ssm_conv_width
+
+    z = x @ p["w_z"].astype(cdt)
+    xp = x @ p["w_x"].astype(cdt)                                # (B,1,di)
+    Bp = x @ p["w_B"].astype(cdt)
+    Cp = x @ p["w_C"].astype(cdt)
+    dt = x @ p["w_dt"].astype(cdt)
+    new_tail = jnp.concatenate([xp, Bp, Cp], axis=-1)            # (B,1,di+2ns)
+    window = jnp.concatenate([conv_tail, new_tail], axis=1)      # (B,cw,·)
+
+    def dconv(w, lo, hi):
+        win = window[..., lo:hi]
+        return jax.nn.silu(sum(win[:, i] * w[i].astype(cdt) for i in range(cw)))
+
+    xin = dconv(p["conv_x"], 0, di)                              # (B, di)
+    Bv = dconv(p["conv_B"], di, di + ns)
+    Cv = dconv(p["conv_C"], di + ns, di + 2 * ns)
+
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,nh)
+    A = -jnp.exp(p["A_log"])
+    da = jnp.exp(dtv * A)                                        # (B,nh)
+    xh = xin.reshape(b, nh, hd)
+    new_state = ssm_state * da[:, :, None, None].astype(cdt) + \
+        jnp.einsum("bn,bhp,bh->bhpn", Bv, xh, dtv.astype(cdt))
+    y = jnp.einsum("bn,bhpn->bhp", Cv, new_state)
+    y = y + xh * p["D"][None, :, None].astype(cdt)
+    y = y.reshape(b, 1, di)
+    y = _gated_rmsnorm(p["norm"], y, z)
+    out = y @ p["w_out"].astype(cdt)
+    return out, (new_state, window[:, 1:])

@@ -1,0 +1,477 @@
+"""Model assembly: init / train_loss / prefill / decode for every family.
+
+Layer stacks are ``lax.scan``s over stacked per-layer params, so the lowered
+HLO size is independent of depth (88-layer granite-34b compiles as fast as a
+2-layer smoke model) and activation memory follows the remat policy.
+
+Families:
+  dense | vlm     — decoder-only GQA transformer (vlm prepends patch embeds)
+  moe             — decoder with (shared + routed top-k) MoE FFNs
+  ssm             — Mamba2/SSD stack (attention-free)
+  hybrid          — Jamba: periods of SSD blocks with one attention layer and
+                    alternating MLP/MoE FFNs
+  encdec          — Whisper-style encoder-decoder with cross-attention
+                    (audio frontend is a STUB: precomputed frame embeddings)
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.sharding.act import shard
+
+Params = dict
+
+
+# ------------------------------------------------------------ param helpers
+def _stacked_init(fn, rng, n: int):
+    """vmap an init fn over n layer rngs -> params with leading layer dim."""
+    return jax.vmap(fn)(jax.random.split(rng, n))
+
+
+def _remat(cfg: ModelConfig, body):
+    if cfg.remat == "none":
+        return body
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return jax.checkpoint(body)
+
+
+def _layer_init(cfg: ModelConfig, rng, *, attn: bool, ffn: str) -> Params:
+    """One decoder layer: (attn|ssm) + optional (mlp|moe) with pre-norms."""
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    p: Params = {"ln1": L.norm_init(cfg, cfg.d_model)}
+    if attn:
+        p["attn"] = L.attn_init(cfg, k1)
+    else:
+        p["ssm"] = L.ssm_init(cfg, k1)
+    if ffn == "mlp":
+        p["ln2"] = L.norm_init(cfg, cfg.d_model)
+        p["mlp"] = L.mlp_init(cfg, k2, gelu=cfg.family == "encdec")
+    elif ffn == "moe":
+        p["ln2"] = L.norm_init(cfg, cfg.d_model)
+        p["moe"] = L.moe_init(cfg, k3)
+    return p
+
+
+def _enc_layer_init(cfg: ModelConfig, rng) -> Params:
+    k1, k2 = jax.random.split(rng)
+    return {"ln1": L.norm_init(cfg, cfg.d_model), "attn": L.attn_init(cfg, k1),
+            "ln2": L.norm_init(cfg, cfg.d_model),
+            "mlp": L.mlp_init(cfg, k2, gelu=True)}
+
+
+def _dec_layer_init_encdec(cfg: ModelConfig, rng) -> Params:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {"ln1": L.norm_init(cfg, cfg.d_model), "attn": L.attn_init(cfg, k1),
+            "lnx": L.norm_init(cfg, cfg.d_model), "xattn": L.attn_init(cfg, k2),
+            "ln2": L.norm_init(cfg, cfg.d_model),
+            "mlp": L.mlp_init(cfg, k3, gelu=True)}
+
+
+def _layer_kinds(cfg: ModelConfig) -> list[tuple[bool, str]]:
+    """Per layer: (is_attention, ffn kind). ssm family has no FFN (Mamba2)."""
+    kinds = []
+    for i in range(cfg.num_layers):
+        attn = cfg.is_attn_layer(i)
+        if cfg.family == "ssm":
+            ffn = "none"
+        elif cfg.is_moe_layer(i):
+            ffn = "moe"
+        else:
+            ffn = "mlp" if cfg.d_ff else "none"
+        kinds.append((attn, ffn))
+    return kinds
+
+
+def init_params(cfg: ModelConfig, rng) -> Params:
+    ks = jax.random.split(rng, 8)
+    pdt = jnp.dtype(cfg.param_dtype)
+    params: Params = {
+        "embed": (jax.random.normal(ks[0], (cfg.padded_vocab, cfg.d_model)) * 0.02
+                  ).astype(pdt),
+        "final_norm": L.norm_init(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(ks[1], (cfg.d_model, cfg.padded_vocab),
+                                         cfg.d_model, pdt)
+    kinds = _layer_kinds(cfg)
+    if cfg.family == "hybrid":
+        period = cfg.attn_every
+        assert cfg.num_layers % period == 0
+        nper = cfg.num_layers // period
+
+        def period_init(r):
+            rs = jax.random.split(r, period)
+            return {f"sub{i}": _layer_init(cfg, rs[i], attn=kinds[i][0],
+                                           ffn=kinds[i][1])
+                    for i in range(period)}
+
+        params["blocks"] = _stacked_init(period_init, ks[2], nper)
+    else:
+        attn, ffn = kinds[0]
+        assert all(k == (attn, ffn) for k in kinds), \
+            f"{cfg.name}: non-uniform layers need family=hybrid"
+        params["blocks"] = _stacked_init(
+            lambda r: _layer_init(cfg, r, attn=attn, ffn=ffn), ks[3],
+            cfg.num_layers)
+    if cfg.family == "encdec":
+        params["enc_blocks"] = _stacked_init(
+            lambda r: _enc_layer_init(cfg, r), ks[4], cfg.encoder_layers)
+        params["enc_norm"] = L.norm_init(cfg, cfg.d_model)
+        params["blocks"] = _stacked_init(
+            lambda r: _dec_layer_init_encdec(cfg, r), ks[5], cfg.num_layers)
+    return params
+
+
+# ----------------------------------------------------------------- forward
+def _apply_sublayer(cfg: ModelConfig, p: Params, x, positions, *,
+                    enc_kv=None):
+    """Residual (attn|ssm) + residual (mlp|moe); returns (x, aux)."""
+    x = shard(x, "bsd")
+    aux = jnp.zeros((), jnp.float32)
+    if "attn" in p:
+        x = x + L.attn_apply(cfg, p["attn"], L.norm_apply(cfg, p["ln1"], x),
+                             positions, causal=True)
+    else:
+        x = x + L.ssm_apply(cfg, p["ssm"], L.norm_apply(cfg, p["ln1"], x))
+    if "xattn" in p:
+        k, v = enc_kv
+        x = x + L.cross_attn_apply(cfg, p["xattn"],
+                                   L.norm_apply(cfg, p["lnx"], x), k, v)
+    if "mlp" in p:
+        x = x + L.mlp_apply(cfg, p["mlp"], L.norm_apply(cfg, p["ln2"], x))
+    elif "moe" in p:
+        h, a = L.moe_apply(cfg, p["moe"], L.norm_apply(cfg, p["ln2"], x))
+        x = x + h
+        aux = aux + a
+    return x, aux
+
+
+def _run_stack(cfg: ModelConfig, blocks: Params, x, positions, *, enc_kv=None):
+    """Scan the (possibly period-structured) decoder stack. Returns (x, aux)."""
+
+    def body(carry, layer_p):
+        h, aux = carry
+        if cfg.seq_parallel:
+            h = shard(h, "bsd_sp")   # saved-for-backward residual is sharded
+        if cfg.family == "hybrid":
+            for i in range(cfg.attn_every):
+                h, a = _apply_sublayer(cfg, layer_p[f"sub{i}"], h, positions)
+                aux = aux + a
+        else:
+            h, a = _apply_sublayer(cfg, layer_p, h, positions, enc_kv=enc_kv)
+            aux = aux + a
+        return (h, aux), ()
+
+    (x, aux), _ = jax.lax.scan(_remat(cfg, body),
+                               (x, jnp.zeros((), jnp.float32)), blocks)
+    return x, aux
+
+
+def _run_encoder(cfg: ModelConfig, params: Params, embeds):
+    positions = jnp.broadcast_to(jnp.arange(embeds.shape[1]), embeds.shape[:2])
+    x = embeds + _sinusoidal(embeds.shape[1], cfg.d_model, embeds.dtype)
+
+    def body(h, layer_p):
+        h = h + L.attn_apply(cfg, layer_p["attn"],
+                             L.norm_apply(cfg, layer_p["ln1"], h),
+                             positions, causal=False)
+        h = h + L.mlp_apply(cfg, layer_p["mlp"],
+                            L.norm_apply(cfg, layer_p["ln2"], h))
+        return h, ()
+
+    x, _ = jax.lax.scan(_remat(cfg, lambda c, p: body(c, p)), x,
+                        params["enc_blocks"])
+    return L.norm_apply(cfg, params["enc_norm"], x)
+
+
+def _sinusoidal(s: int, d: int, dtype) -> jnp.ndarray:
+    pos = np.arange(s)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * dim / d)
+    table = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(table, dtype)[None]
+
+
+def _embed_inputs(cfg: ModelConfig, params: Params, batch) -> jnp.ndarray:
+    cdt = jnp.dtype(cfg.dtype)
+    tok = params["embed"][batch["tokens"]].astype(cdt)
+    if cfg.frontend == "vision_stub":
+        return jnp.concatenate([batch["vision_embeds"].astype(cdt), tok], axis=1)
+    if cfg.frontend == "audio_stub" and cfg.family != "encdec":
+        return jnp.concatenate([batch["audio_embeds"].astype(cdt), tok], axis=1)
+    if cfg.family == "encdec":
+        return tok + _sinusoidal(tok.shape[1], cfg.d_model, cdt)
+    return tok
+
+
+def _vocab_mask(cfg: ModelConfig):
+    """Additive -inf mask over padded vocabulary rows (or None if unpadded)."""
+    if cfg.padded_vocab == cfg.vocab_size:
+        return None
+    return jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab_size, 0.0, -1e30)
+
+
+def lm_loss(cfg: ModelConfig, params: Params, h, targets, loss_mask,
+            s_chunk: int = 512):
+    """Sequence-chunked cross entropy (never materializes (B, S, V) at once)."""
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    vmask = _vocab_mask(cfg)
+    b, s, d = h.shape
+    cs = L.best_chunk(s, s_chunk)
+    nchunk = s // cs
+    hc = h.reshape(b, nchunk, cs, d).swapaxes(0, 1)
+    tc = targets.reshape(b, nchunk, cs).swapaxes(0, 1)
+    mc = loss_mask.reshape(b, nchunk, cs).swapaxes(0, 1)
+
+    def chunk_loss(carry, inp):
+        hx, tx, mx = inp
+        logits = shard((hx @ head.astype(hx.dtype)).astype(jnp.float32),
+                       "logits")
+        if vmask is not None:
+            logits = logits + vmask
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tx[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mx
+        return (carry[0] + nll.sum(), carry[1] + mx.sum()), ()
+
+    (tot, cnt), _ = jax.lax.scan(chunk_loss, (jnp.zeros(()), jnp.zeros(())),
+                                 (hc, tc, mc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def train_loss(cfg: ModelConfig, params: Params, batch):
+    """batch: tokens (B,S_tok), targets (B,S_tok), loss_mask (B,S_tok),
+    [vision|audio]_embeds (B,T,D) for stub frontends.  Returns (loss, metrics)."""
+    x = shard(_embed_inputs(cfg, params, batch), "bsd")
+    b, s = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    enc_kv = None
+    if cfg.family == "encdec":
+        enc_out = _run_encoder(cfg, params, batch["audio_embeds"].astype(x.dtype))
+        # cross-attn K/V shared across decoder layers would be unfaithful;
+        # each scanned layer computes its own K/V from enc_out instead.
+        enc_kv = enc_out
+    x, aux = _run_stack_encaware(cfg, params, x, positions, enc_out=enc_kv)
+    x = L.norm_apply(cfg, params["final_norm"], x)
+    # frontend positions carry no LM loss
+    n_front = x.shape[1] - batch["targets"].shape[1]
+    x = x[:, n_front:]
+    loss = lm_loss(cfg, params, x, batch["targets"], batch["loss_mask"])
+    total = loss + cfg.router_aux_weight * aux
+    return total, {"lm_loss": loss, "aux_loss": aux}
+
+
+def _run_stack_encaware(cfg: ModelConfig, params: Params, x, positions, *,
+                        enc_out=None):
+    if cfg.family != "encdec":
+        return _run_stack(cfg, params["blocks"], x, positions)
+
+    def body(carry, layer_p):
+        h, aux = carry
+        kv = L.cross_kv(cfg, layer_p["xattn"], enc_out)
+        h, a = _apply_sublayer(cfg, layer_p, h, positions, enc_kv=kv)
+        return (h, aux + a), ()
+
+    (x, aux), _ = jax.lax.scan(_remat(cfg, body),
+                               (x, jnp.zeros((), jnp.float32)),
+                               params["blocks"])
+    return x, aux
+
+
+# ------------------------------------------------------------------ serving
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    """Decode cache pytree (stacked over layers / periods)."""
+    cdt = jnp.dtype(cfg.dtype)
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+
+    def attn_cache():
+        return {"k": jnp.zeros((batch, max_len, hkv, hd), cdt),
+                "v": jnp.zeros((batch, max_len, hkv, hd), cdt)}
+
+    def ssm_cache():
+        return {"state": jnp.zeros((batch, cfg.ssm_num_heads, cfg.ssm_head_dim,
+                                    cfg.ssm_state), cdt),
+                "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1,
+                                   cfg.ssm_d_inner + 2 * cfg.ssm_state), cdt)}
+
+    def stack(fn, n):
+        return jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape), fn())
+
+    kinds = _layer_kinds(cfg)
+    if cfg.family == "hybrid":
+        period, nper = cfg.attn_every, cfg.num_layers // cfg.attn_every
+        per = {f"sub{i}": (attn_cache() if kinds[i][0] else ssm_cache())
+               for i in range(period)}
+        cache = jax.tree.map(lambda x: jnp.broadcast_to(x, (nper,) + x.shape), per)
+    elif cfg.family == "ssm":
+        cache = stack(ssm_cache, cfg.num_layers)
+    else:
+        cache = stack(attn_cache, cfg.num_layers)
+    out = {"layers": cache, "pos": jnp.zeros((batch,), jnp.int32)}
+    if cfg.family == "encdec":
+        out["cross_kv"] = {
+            "k": jnp.zeros((cfg.num_layers, batch, cfg.encoder_seq, hkv, hd), cdt),
+            "v": jnp.zeros((cfg.num_layers, batch, cfg.encoder_seq, hkv, hd), cdt)}
+    return out
+
+
+def _decode_sublayer(cfg: ModelConfig, p: Params, c: Params, x, pos, *,
+                     cross_kv=None):
+    if "attn" in p:
+        h, (ck, cv) = L.attn_decode(cfg, p["attn"],
+                                    L.norm_apply(cfg, p["ln1"], x),
+                                    c["k"], c["v"], pos)
+        x = x + h
+        c = {"k": ck, "v": cv}
+    else:
+        h, (st, conv) = L.ssm_decode(cfg, p["ssm"],
+                                     L.norm_apply(cfg, p["ln1"], x),
+                                     (c["state"], c["conv"]))
+        x = x + h
+        c = {"state": st, "conv": conv}
+    if "xattn" in p:
+        x = x + L.cross_attn_apply(cfg, p["xattn"],
+                                   L.norm_apply(cfg, p["lnx"], x),
+                                   cross_kv["k"], cross_kv["v"])
+    if "mlp" in p:
+        x = x + L.mlp_apply(cfg, p["mlp"], L.norm_apply(cfg, p["ln2"], x))
+    elif "moe" in p:
+        h, _ = L.moe_apply(cfg, p["moe"], L.norm_apply(cfg, p["ln2"], x))
+        x = x + h
+    return x, c
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Params, tokens):
+    """One token for every sequence. tokens: (B, 1) int32 -> (logits, cache)."""
+    cdt = jnp.dtype(cfg.dtype)
+    x = params["embed"][tokens].astype(cdt)
+    if cfg.family == "encdec":
+        x = x + _sinusoidal_at(cache["pos"], cfg.d_model, cdt)
+    pos = cache["pos"]
+
+    def body(h, scanned):
+        layer_p, layer_c = scanned[0], scanned[1]
+        cross = scanned[2] if cfg.family == "encdec" else None
+        if cfg.family == "hybrid":
+            new_c = {}
+            for i in range(cfg.attn_every):
+                h, new_c[f"sub{i}"] = _decode_sublayer(
+                    cfg, layer_p[f"sub{i}"], layer_c[f"sub{i}"], h, pos)
+        else:
+            h, new_c = _decode_sublayer(cfg, layer_p, layer_c, h, pos,
+                                        cross_kv=cross)
+        return h, new_c
+
+    scanned = (params["blocks"], cache["layers"])
+    if cfg.family == "encdec":
+        scanned = scanned + (cache["cross_kv"],)
+    x, new_layers = jax.lax.scan(body, x, scanned)
+    x = L.norm_apply(cfg, params["final_norm"], x)
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = (x @ head.astype(cdt)).astype(jnp.float32)
+    vmask = _vocab_mask(cfg)
+    if vmask is not None:
+        logits = logits + vmask
+    new_cache = dict(cache, layers=new_layers, pos=cache["pos"] + 1)
+    return logits[:, 0], new_cache
+
+
+def _sinusoidal_at(pos, d, dtype):
+    dim = jnp.arange(d // 2)[None, :]
+    ang = pos[:, None].astype(jnp.float32) / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)],
+                           axis=-1)[:, None].astype(dtype)
+
+
+def prefill(cfg: ModelConfig, params: Params, batch, cache: Params):
+    """Process the full prompt, fill the cache, return last-position logits.
+
+    For attention layers the per-layer K/V computed during the forward pass
+    are written into the cache; SSD layers store their final state.
+    """
+    cdt = jnp.dtype(cfg.dtype)
+    x = _embed_inputs(cfg, params, batch)
+    b, s = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = _run_encoder(cfg, params, batch["audio_embeds"].astype(cdt))
+
+    max_len = jax.tree.leaves(cache["layers"])[0].shape[2] if cfg.family not in (
+        "ssm",) else None
+
+    def body(h, scanned):
+        layer_p, layer_c = scanned[0], scanned[1]
+        new_c = {}
+
+        def one(pp, cc, hh):
+            if "attn" in pp:
+                y, (k, v) = L.attn_apply(cfg, pp["attn"],
+                                         L.norm_apply(cfg, pp["ln1"], hh),
+                                         positions, causal=True, return_kv=True)
+                hh = hh + y
+                nk = jax.lax.dynamic_update_slice(
+                    cc["k"], k.astype(cc["k"].dtype), (0, 0, 0, 0))
+                nv = jax.lax.dynamic_update_slice(
+                    cc["v"], v.astype(cc["v"].dtype), (0, 0, 0, 0))
+                ncc = {"k": nk, "v": nv}
+            else:
+                y, (st, conv) = L.ssm_apply(cfg, pp["ssm"],
+                                            L.norm_apply(cfg, pp["ln1"], hh),
+                                            return_state=True)
+                hh = hh + y
+                ncc = {"state": st.astype(cc["state"].dtype),
+                       "conv": conv.astype(cc["conv"].dtype)}
+            if "xattn" in pp:
+                kx, vx = L.cross_kv(cfg, pp["xattn"], enc_out)
+                hh = hh + L.cross_attn_apply(cfg, pp["xattn"],
+                                             L.norm_apply(cfg, pp["lnx"], hh),
+                                             kx, vx)
+            if "mlp" in pp:
+                hh = hh + L.mlp_apply(cfg, pp["mlp"],
+                                      L.norm_apply(cfg, pp["ln2"], hh))
+            elif "moe" in pp:
+                y, _ = L.moe_apply(cfg, pp["moe"],
+                                   L.norm_apply(cfg, pp["ln2"], hh))
+                hh = hh + y
+            return hh, ncc
+
+        if cfg.family == "hybrid":
+            for i in range(cfg.attn_every):
+                h, new_c[f"sub{i}"] = one(layer_p[f"sub{i}"], layer_c[f"sub{i}"], h)
+        else:
+            h, new_c = one(layer_p, layer_c, h)
+        if cfg.family == "encdec":
+            kx, vx = L.cross_kv(cfg, layer_p["xattn"], enc_out)
+            new_c = (new_c, {"k": kx, "v": vx})
+        return h, new_c
+
+    x, new_layers = jax.lax.scan(_remat(cfg, body), x,
+                                 (params["blocks"], cache["layers"]))
+    if cfg.family == "encdec":
+        new_layers, cross = new_layers
+        cache = dict(cache, cross_kv=cross)
+    x = L.norm_apply(cfg, params["final_norm"], x)
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    last = x[:, -1:]
+    logits = (last @ head.astype(cdt)).astype(jnp.float32)
+    vmask = _vocab_mask(cfg)
+    if vmask is not None:
+        logits = logits + vmask
+    new_cache = dict(cache, layers=new_layers,
+                     pos=jnp.full((b,), s, jnp.int32))
+    return logits[:, 0], new_cache

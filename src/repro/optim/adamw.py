@@ -1,0 +1,81 @@
+"""AdamW + LR schedules + global-norm clipping (self-contained, pytree-based).
+
+The optimizer state mirrors the parameter tree, so the sharding specs of the
+parameters apply verbatim to (mu, nu) — optimizer state is ZeRO-sharded for
+free under the FSDP partitioning rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    betas: tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"           # cosine | linear | constant
+    min_lr_frac: float = 0.1
+
+
+def lr_at(oc: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(oc.warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - oc.warmup_steps)
+                    / jnp.maximum(oc.total_steps - oc.warmup_steps, 1), 0.0, 1.0)
+    if oc.schedule == "cosine":
+        decay = oc.min_lr_frac + (1 - oc.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    elif oc.schedule == "linear":
+        decay = 1.0 - (1 - oc.min_lr_frac) * frac
+    else:
+        decay = jnp.float32(1.0)
+    return oc.lr * warm * decay
+
+
+def init(params) -> dict:
+    zeros = lambda p: jax.tree.map(lambda x: jnp.zeros_like(x), p)
+    return {"mu": zeros(params), "nu": zeros(params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply(oc: OptConfig, grads, state, params):
+    """One AdamW update; returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, oc.clip_norm / (gnorm + 1e-9))
+    count = state["count"] + 1
+    lr = lr_at(oc, count)
+    b1, b2 = oc.betas
+    bc1 = 1 - b1 ** count.astype(jnp.float32)
+    bc2 = 1 - b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, n):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        n = b2 * n + (1 - b2) * g * g
+        step = (m / bc1) / (jnp.sqrt(n / bc2) + oc.eps)
+        new_p = p.astype(jnp.float32) - lr * (step + oc.weight_decay * p.astype(jnp.float32))
+        return new_p.astype(p.dtype), m, n
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["mu"])
+    flat_n = jax.tree.leaves(state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_m, flat_n)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_state = {"mu": jax.tree.unflatten(treedef, [o[1] for o in out]),
+                 "nu": jax.tree.unflatten(treedef, [o[2] for o in out]),
+                 "count": count}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

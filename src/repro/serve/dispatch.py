@@ -1,0 +1,140 @@
+"""On-line request dispatch over heterogeneous pools — the paper's ER-LS as
+the serving scheduler, with a Step-1-based straggler backup rule.
+
+A serving fleet has Q heterogeneous worker pools (e.g. prefill-optimized
+pods vs decode-optimized pods vs CPU-host overflow; or new-gen vs old-gen
+accelerators).  Each request is a 2-task chain  prefill ≺ decode-phase  with
+per-pool processing-time estimates from a calibrated cost model — exactly the
+paper's (CPU, GPU) | prec | C_max setting, arriving online.  ER-LS takes the
+irrevocable pool decision at arrival:
+
+  Step 1: if the slow-pool time >= (fast pool's earliest idle + fast time),
+          send it to the fast pool (the paper's  p̄ >= R_gpu + p  rule);
+  Step 2: otherwise rule R2 (sqrt-weighted time comparison).
+
+Straggler mitigation reuses Step 1 as a *backup* rule: when a running task
+exceeds its estimate by ``straggler_factor``, a duplicate is enqueued iff the
+other pool could finish it before the straggler's revised estimate — the
+same comparison, applied at detection time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Pool:
+    """A homogeneous group of workers (one resource type)."""
+    name: str
+    workers: int
+    speed: float = 1.0             # relative throughput multiplier
+
+    def __post_init__(self):
+        self.free = [(0.0, w) for w in range(self.workers)]
+        heapq.heapify(self.free)
+
+    def earliest_idle(self) -> float:
+        return self.free[0][0]
+
+    def commit(self, ready: float, work: float) -> tuple[int, float, float]:
+        f, wid = heapq.heappop(self.free)
+        start = max(ready, f)
+        finish = start + work / self.speed
+        heapq.heappush(self.free, (finish, wid))
+        return wid, start, finish
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt_tokens: int
+    decode_tokens: int
+    arrival: float
+
+
+@dataclasses.dataclass
+class Placement:
+    rid: int
+    phase: str                 # prefill | decode
+    pool: str
+    worker: int
+    start: float
+    finish: float
+    backup: bool = False
+
+
+class ERLSDispatcher:
+    """Irrevocable two-pool dispatch (paper §4.2) + straggler backups."""
+
+    def __init__(self, slow: Pool, fast: Pool, cost_model,
+                 straggler_factor: float = 3.0):
+        assert slow.workers >= fast.workers, "paper convention: m >= k"
+        self.slow, self.fast = slow, fast
+        self.cost = cost_model          # (request, phase, pool) -> seconds
+        self.sf = straggler_factor
+        self.log: list[Placement] = []
+
+    def _decide(self, req: Request, phase: str, ready: float) -> Pool:
+        p_slow = self.cost(req, phase, self.slow)
+        p_fast = self.cost(req, phase, self.fast)
+        r_fast = max(self.fast.earliest_idle(), ready)
+        if p_slow >= r_fast + p_fast:                       # Step 1
+            return self.fast
+        m, k = self.slow.workers, self.fast.workers        # Step 2 (R2)
+        return self.slow if p_slow / np.sqrt(m) <= p_fast / np.sqrt(k) \
+            else self.fast
+
+    def submit(self, req: Request) -> list[Placement]:
+        """Dispatch the prefill ≺ decode chain; returns the placements."""
+        out = []
+        ready = req.arrival
+        for phase in ("prefill", "decode"):
+            pool = self._decide(req, phase, ready)
+            work = self.cost(req, phase, pool) * pool.speed
+            wid, start, finish = pool.commit(ready, work)
+            out.append(Placement(req.rid, phase, pool.name, wid, start, finish))
+            ready = finish
+        self.log.extend(out)
+        return out
+
+    def maybe_backup(self, pl: Placement, observed_elapsed: float,
+                     req: Request) -> Placement | None:
+        """Straggler rule: expected finish under the straggler estimate vs a
+        fresh run on the other pool (paper Step 1 at detection time)."""
+        expected = pl.finish - pl.start
+        if observed_elapsed < self.sf * expected:
+            return None
+        other = self.fast if pl.pool == self.slow.name else self.slow
+        p_other = self.cost(req, pl.phase, other)
+        revised_finish = pl.start + self.sf * expected
+        if revised_finish >= other.earliest_idle() + p_other:
+            wid, start, finish = other.commit(pl.start + observed_elapsed,
+                                              p_other * other.speed)
+            bk = Placement(pl.rid, pl.phase, other.name, wid, start, finish,
+                           backup=True)
+            self.log.append(bk)
+            return bk
+        return None
+
+    @property
+    def makespan(self) -> float:
+        return max((p.finish for p in self.log), default=0.0)
+
+
+def token_cost_model(prefill_flops_per_tok: float = 2e9,
+                     decode_flops_per_tok: float = 2e9,
+                     pool_flops: dict | None = None):
+    """Analytic per-pool cost model (seconds) from token counts."""
+    pool_flops = pool_flops or {}
+
+    def cost(req: Request, phase: str, pool: Pool) -> float:
+        rate = pool_flops.get(pool.name, 1e12) * pool.speed
+        if phase == "prefill":
+            return req.prompt_tokens * prefill_flops_per_tok / rate
+        return req.decode_tokens * decode_flops_per_tok / rate
+
+    return cost

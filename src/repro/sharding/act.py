@@ -1,0 +1,117 @@
+"""Activation sharding constraints (logical-axis -> mesh-axis).
+
+GSPMD propagates parameter shardings, but on deep scanned stacks it can pick
+pathological activation layouts (e.g. replicating the batch and sharding
+d_model on the TP axis), blowing up memory and collective traffic.  As in
+MaxText/T5X, we pin the canonical activation layouts at layer boundaries with
+``with_sharding_constraint``.
+
+Model code calls ``shard(x, kind)`` with a *logical* kind; the mapping to
+mesh axes is installed by the launcher via ``activation_sharding(...)``.
+Without an installed context (pure-CPU unit tests) it is a no-op, so layer
+code stays mesh-agnostic.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar("act_sharding",
+                                                      default=None)
+
+
+@dataclasses.dataclass(frozen=True)
+class ActCtx:
+    mesh: Mesh
+    dp: tuple            # batch axes, e.g. ("pod", "data")
+    tp: str | None       # tensor-parallel axis
+
+    def size(self, axis) -> int:
+        if axis is None:
+            return 1
+        if isinstance(axis, tuple):
+            out = 1
+            for a in axis:
+                out *= self.mesh.shape[a]
+            return out
+        return self.mesh.shape[axis]
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, dp=("data",), tp="model"):
+    tok = _CTX.set(ActCtx(mesh=mesh, dp=tuple(dp), tp=tp))
+    try:
+        yield
+    finally:
+        _CTX.reset(tok)
+
+
+def dp_shards(n: int) -> int:
+    """Largest power-of-two count of data-parallel dispatch groups dividing n
+    (1 without an installed context).  Used by the MoE local dispatch."""
+    ctx: ActCtx | None = _CTX.get()
+    if ctx is None:
+        return 1
+    total = 1
+    for a in ctx.dp:
+        total *= ctx.mesh.shape[a]
+    while total > 1 and n % total:
+        total //= 2
+    return total
+
+
+def _fit(ctx: ActCtx, dim: int, axis):
+    return axis if (axis is not None and dim % ctx.size(axis) == 0) else None
+
+
+def shard(x, kind: str, heads: int | None = None):
+    """Constrain an activation to its canonical layout (no-op w/o context)."""
+    ctx: ActCtx | None = _CTX.get()
+    if ctx is None:
+        return x
+    dp = ctx.dp if len(ctx.dp) > 1 else (ctx.dp[0] if ctx.dp else None)
+    b = _fit(ctx, x.shape[0], dp)
+    if b is None and ctx.dp:  # try a prefix (e.g. batch 1 can't shard at all)
+        b = _fit(ctx, x.shape[0], ctx.dp[-1])
+    if kind == "bsd":          # (B, S, D) residual stream
+        spec = P(b, *([None] * (x.ndim - 1)))
+    elif kind == "bsd_sp":     # residual saved sharded on tp (seq-parallel)
+        spec = P(b, *([None] * (x.ndim - 2)), _fit(ctx, x.shape[-1], ctx.tp))
+    elif kind == "bsf":        # (B, S, F) TP-sharded hidden (mlp / ssm inner)
+        f = ctx.tp
+        if heads is not None and (f is None or heads % ctx.size(f) != 0):
+            f = None           # head-blocked inner dims must stay aligned
+        spec = P(b, *([None] * (x.ndim - 2)), _fit(ctx, x.shape[-1], f))
+    elif kind == "bshd":       # (B, S, H, hd) attention / SSD heads
+        h = _fit(ctx, x.shape[2], ctx.tp)
+        spec = P(b, None, h, None)
+    elif kind == "xbs":        # (nc, B, ...) chunk-scan xs: batch at dim 1
+        b1 = _fit(ctx, x.shape[1], dp)
+        if b1 is None and ctx.dp:
+            b1 = _fit(ctx, x.shape[1], ctx.dp[-1])
+        spec = P(None, b1, *([None] * (x.ndim - 2)))
+    elif kind == "bhds":       # (B, H, hd, state) SSD chunk state
+        h = _fit(ctx, x.shape[1], ctx.tp)
+        spec = P(b, h, *([None] * (x.ndim - 2)))
+    elif kind == "logits":     # (B, S, V)
+        v = _fit(ctx, x.shape[-1], ctx.tp)
+        spec = P(b, *([None] * (x.ndim - 2)), v)
+    elif kind == "rows":       # (N, D) token-major flat layouts (MoE buffers)
+        spec = P(_fit(ctx, x.shape[0], dp), *([None] * (x.ndim - 1)))
+    elif kind == "ecd":        # (E, cap, D) expert buffers
+        e = _fit(ctx, x.shape[0], ctx.tp)
+        c = None if e is not None else _fit(ctx, x.shape[1], dp)
+        spec = P(e, c, *([None] * (x.ndim - 2)))
+    elif kind == "edf":        # (E, D, F) expert weights at COMPUTE time:
+        # expert-sharded when E divides the tp axis (EP), else F-sharded
+        # (TP-in-expert); the FSDP (dp) shard of the stored copy is gathered.
+        e = _fit(ctx, x.shape[0], ctx.tp)
+        f = None if e is not None else _fit(ctx, x.shape[-1], ctx.tp)
+        spec = P(e, *([None] * (x.ndim - 2)), f)
+    else:
+        raise ValueError(f"unknown activation kind {kind!r}")
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))

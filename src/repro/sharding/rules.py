@@ -1,0 +1,192 @@
+"""SPMD partitioning rules: DP / FSDP(ZeRO-3) / TP / EP / sequence sharding.
+
+Mesh axes (see launch.mesh): ``pod`` (cross-pod data parallel), ``data``
+(in-pod FSDP/data parallel), ``model`` (tensor/expert parallel).
+
+All rules are divisibility-aware: a dimension is only sharded on an axis if
+its size divides evenly (GQA kv-heads of 1/2/8 silently fall back to
+replication on a 16-way model axis; a 49155 vocab falls back from vocab- to
+d_model-sharding; 60 experts fall back from EP to per-expert TP).  This keeps
+every (arch x shape x mesh) cell lowerable with the same rule set.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+@dataclasses.dataclass
+class ShardingRules:
+    """Computes PartitionSpecs for params / batches / caches of one config."""
+    mesh: Mesh
+    cfg: ModelConfig
+    fsdp_axis: str | None = "data"        # parameter shard axis (ZeRO-3)
+    tp_axis: str | None = "model"         # tensor-parallel axis
+    dp_axes: tuple[str, ...] = ("data",)  # batch axes (pod added if present)
+    seq_axis_for_cache: Any = "model"     # decode KV-cache sequence sharding
+
+    def __post_init__(self):
+        names = tuple(self.mesh.axis_names)
+        if "pod" in names and "pod" not in self.dp_axes:
+            self.dp_axes = ("pod",) + tuple(self.dp_axes)
+
+    # -------------------------------------------------------------- helpers
+    def _fit(self, dim_size: int, axis) -> bool:
+        return axis is not None and dim_size % _axis_size(self.mesh, axis) == 0
+
+    def _pick(self, shape: tuple[int, ...], prefs: list[tuple[int, Any]]) -> P:
+        """Greedy divisibility-aware assignment of axes to dims."""
+        spec: list[Any] = [None] * len(shape)
+        used: set = set()
+        for dim, axis in prefs:
+            if axis is None or dim >= len(shape):
+                continue
+            key = tuple(axis) if isinstance(axis, (tuple, list)) else (axis,)
+            if any(a in used for a in key):
+                continue
+            if spec[dim] is None and self._fit(shape[dim], axis):
+                spec[dim] = axis
+                used.update(key)
+        return P(*spec)
+
+    def batch_spec(self, global_batch: int) -> Any:
+        """Sharding for the batch dim (drops axes that don't divide)."""
+        axes = []
+        remaining = global_batch
+        for a in self.dp_axes:
+            s = _axis_size(self.mesh, a)
+            if remaining % s == 0:
+                axes.append(a)
+                remaining //= s
+        return tuple(axes) if axes else None
+
+    # --------------------------------------------------------------- params
+    def param_specs(self, abstract_params) -> Any:
+        """PartitionSpec tree matching the abstract param tree (FSDP + TP)."""
+        f, t = self.fsdp_axis, self.tp_axis
+
+        # SSD inner dim may shard on tp only if the (heads, head_dim) reshape
+        # stays block-aligned: nh must divide evenly over the tp axis.
+        nh = self.cfg.ssm_num_heads if self.cfg.ssm_state else 0
+        t_ssm = t if (nh and t is not None and
+                      nh % _axis_size(self.mesh, t) == 0) else None
+
+        def rule(path: str, x) -> P:
+            s = x.shape
+            nd = len(s)
+            # Small params: replicate.  FSDP savings are negligible (<32 MiB)
+            # and sharding their contracting dims invites GSPMD into
+            # re-sharding the (much larger) activations instead.  Judged on
+            # the PER-LAYER slice (blocks carry a stacked leading dim).
+            import numpy as _np
+            per_layer = int(_np.prod(s))
+            if re.search(r"\bblocks\b", path) and len(s) > 1:
+                per_layer //= s[0]
+            if per_layer < (1 << 23):
+                return P(*([None] * nd))
+            if "embed" in path:                       # (V, D)
+                return self._pick(s, [(0, t), (1, f)])
+            if "lm_head" in path:                     # (D, V)
+                return self._pick(s, [(1, t), (0, f)])
+            # All block params carry a leading layer/period scan dim -> None.
+            o = 1 if re.search(r"\bblocks\b", path) else 0
+            if "router" in path:                      # (L, D, E)
+                return self._pick(s, [(o, f)])
+            if re.search(r"moe/w_(gate|up)", path):   # (L, E, D, F)
+                return self._pick(s, [(o, t), (o + 1, f), (o + 2, t)])
+            if re.search(r"moe/w_down", path):        # (L, E, F, D)
+                return self._pick(s, [(o, t), (o + 1, t), (o + 2, f)])
+            if re.search(r"w_(gate|up)$", path):      # (L, D, F) mlp
+                return self._pick(s, [(o + 1, t), (o, f)])
+            if re.search(r"w_down$", path):           # (L, F, D)
+                return self._pick(s, [(o, t), (o + 1, f)])
+            if re.search(r"/(wq|wk|wv)$", path):      # (L, D, H, hd)
+                return self._pick(s, [(o + 1, t), (o, f)])
+            if re.search(r"/wo$", path):              # (L, H, hd, D)
+                return self._pick(s, [(o, t), (o + 2, f)])
+            if re.search(r"/(bq|bk|bv)$", path):      # (L, H, hd)
+                return self._pick(s, [(o, t)])
+            if re.search(r"/(w_z|w_x)$", path):       # (L, D, di)
+                return self._pick(s, [(o + 1, t_ssm), (o, f)])
+            if re.search(r"/(w_B|w_C|w_dt)$", path):  # (L, D, ns|nh)
+                return self._pick(s, [(o, f)])
+            if "w_out" in path:                       # (L, di, D)
+                return self._pick(s, [(o, t_ssm), (o + 1, f)])
+            if "conv_x" in path:                      # (L, cw, di)
+                return self._pick(s, [(o + 1, t_ssm)])
+            if re.search(r"conv_(B|C)", path):        # (L, cw, ns)
+                return P(*([None] * nd))
+            return P()                                # norms, A_log, D, dt_bias
+
+        def walk(tree, path=""):
+            if isinstance(tree, dict):
+                return {k: walk(v, f"{path}/{k}") for k, v in tree.items()}
+            return rule(path, tree)
+
+        return walk(abstract_params)
+
+    # ---------------------------------------------------------------- batch
+    def batch_specs(self, abstract_batch) -> Any:
+        bspec = None
+
+        def rule(x):
+            b = self.batch_spec(x.shape[0])
+            return P(b, *([None] * (x.ndim - 1)))
+
+        return jax.tree.map(rule, abstract_batch)
+
+    # ---------------------------------------------------------------- cache
+    def cache_specs(self, abstract_cache) -> Any:
+        """Decode cache: batch on dp axes; KV sequence on the tp axis (2-D
+        sharded KV => 32k x 128-batch caches fit); SSM state heads on tp."""
+
+        def rule(path: str, x):
+            s = x.shape
+            if path.endswith("/pos"):
+                return P(self.batch_spec(s[0]))
+            b = self.batch_spec(s[1])
+            if "cross_kv" in path:                    # (L, B, S, Hkv, hd)
+                return self._pick(s, [(1, b), (3, self.tp_axis),
+                                      (2, self.seq_axis_for_cache)])
+            if path.endswith("/k") or path.endswith("/v"):
+                # (L, B, Smax, Hkv, hd): sequence-shard on tp; when the batch
+                # can't use the dp axes (e.g. long_500k B=1) fold them into
+                # the sequence sharding so the 512k cache still spreads out.
+                every = tuple(self.dp_axes) + (self.tp_axis,)
+                return self._pick(s, [(1, b), (2, every),
+                                      (2, self.seq_axis_for_cache)])
+            if "state" in path:                       # (L, B, nh, hd, ns)
+                return self._pick(s, [(1, b), (2, self.tp_axis)])
+            if "conv" in path:                        # (L, B, cw-1, C)
+                return self._pick(s, [(1, b), (3, self.tp_axis)])
+            return P()
+
+        def walk(tree, path=""):
+            if isinstance(tree, dict):
+                return {k: walk(v, f"{path}/{k}") for k, v in tree.items()}
+            return rule(path, tree)
+
+        return walk(abstract_cache)
+
+    # ------------------------------------------------------------- wrappers
+    def shardings(self, spec_tree) -> Any:
+        return jax.tree.map(lambda sp: NamedSharding(self.mesh, sp), spec_tree,
+                            is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,24 @@
+import numpy as np
+import pytest
+
+from repro.core.dag import TaskGraph
+
+
+def random_dag(seed: int, n: int | None = None, num_types: int = 2,
+               p_edge: float = 0.15, scale: float = 10.0) -> TaskGraph:
+    """Random layered DAG with positive processing times (test workhorse)."""
+    rng = np.random.default_rng(seed)
+    if n is None:
+        n = int(rng.integers(2, 30))
+    edges = []
+    for i in range(n):
+        for j in range(i + 1, n):
+            if rng.random() < p_edge:
+                edges.append((i, j))
+    proc = rng.uniform(0.1, scale, size=(n, num_types))
+    return TaskGraph.build(proc, edges)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,64 @@
+"""Unit + property tests for the task-graph substrate."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dag import CPU, GPU, TaskGraph, chain
+from conftest import random_dag
+
+
+def test_build_simple():
+    g = TaskGraph.build(np.array([[2.0, 1.0], [3.0, 1.5], [1.0, 4.0]]),
+                        [(0, 1), (0, 2)])
+    assert g.n == 3 and g.num_edges == 2
+    assert list(g.preds(1)) == [0] and set(g.succs(0)) == {1, 2}
+    assert g.level.tolist() == [0, 1, 1]
+
+
+def test_cycle_rejected():
+    with pytest.raises(ValueError):
+        TaskGraph.build(np.ones((2, 2)), [(0, 1), (1, 0)])
+
+
+def test_critical_path_chain():
+    g = chain(np.array([[1.0, 2.0], [3.0, 4.0], [5.0, 6.0]]))
+    assert g.critical_path(g.proc[:, CPU]) == pytest.approx(9.0)
+    assert g.critical_path(g.proc[:, GPU]) == pytest.approx(12.0)
+
+
+def test_upward_rank_matches_cp():
+    g = random_dag(seed=7, n=40)
+    t = g.proc[:, CPU]
+    rank = g.upward_rank(t)
+    assert rank.max() == pytest.approx(g.critical_path(t))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_cp_bounds_property(seed):
+    """CP >= any single task; CP <= sum of all tasks; rank decreasing on edges."""
+    g = random_dag(seed)
+    t = g.proc[:, 0]
+    cp = g.critical_path(t)
+    assert cp >= t.max() - 1e-9
+    assert cp <= t.sum() + 1e-9
+    rank = g.upward_rank(t)
+    for i, j in g.edges:
+        assert rank[i] >= rank[j] + t[i] - 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_frac_times_interpolates(seed):
+    g = random_dag(seed)
+    assert np.allclose(g.frac_times(np.ones(g.n)), g.proc[:, CPU])
+    assert np.allclose(g.frac_times(np.zeros(g.n)), g.proc[:, GPU])
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_earliest_ready_consistent(seed):
+    g = random_dag(seed)
+    t = g.proc[:, 1]
+    est = g.earliest_ready(t)
+    assert (est + t).max() == pytest.approx(g.critical_path(t))

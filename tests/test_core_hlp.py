@@ -1,0 +1,73 @@
+"""HLP / QHLP allocation LP: exactness, rounding rules, bounds."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bruteforce import brute_force_opt
+from repro.core.dag import CPU, GPU, TaskGraph
+from repro.core.hlp import solve_hlp, solve_qhlp
+from repro.core.hlp_jax import solve_hlp_jax
+from conftest import random_dag
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_lp_value_is_exact_lambda_of_x(seed):
+    """The LP objective equals the exact λ(x) at the returned fractional x."""
+    g = random_dag(seed, n=12)
+    sol = solve_hlp(g, 3, 2)
+    assert g.lp_objective([3, 2], sol.x_frac) == pytest.approx(sol.lp_value, rel=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_lp_lower_bounds_opt(seed):
+    """LP* <= brute-force OPT (the paper uses LP* as the ratio denominator)."""
+    g = random_dag(seed, n=5, p_edge=0.3)
+    counts = [2, 1]
+    sol = solve_hlp(g, *counts)
+    opt = brute_force_opt(g, counts)
+    assert sol.lp_value <= opt + 1e-6
+
+
+def test_rounding_rule():
+    g = random_dag(seed=3, n=20)
+    sol = solve_hlp(g, 4, 2)
+    assert np.all((sol.x_frac >= 0.5) == (sol.alloc == CPU))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_qhlp_matches_hlp_on_two_types(seed):
+    """QHLP with Q=2 must agree with the hybrid HLP objective."""
+    g = random_dag(seed, n=10)
+    a = solve_hlp(g, 3, 2)
+    b = solve_qhlp(g, [3, 2])
+    assert a.lp_value == pytest.approx(b.lp_value, rel=1e-5)
+
+
+def test_qhlp_three_types_rounding_ge_one_over_q():
+    g = random_dag(seed=11, n=15, num_types=3)
+    sol = solve_qhlp(g, [4, 2, 2])
+    # rounding picks argmax => x_{j,alloc_j} >= 1/Q (Eq. 17's premise)
+    picked = sol.x_frac[np.arange(g.n), sol.alloc]
+    assert np.all(picked >= 1.0 / 3 - 1e-9)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_jax_solver_near_optimal(seed):
+    """First-order JAX solver within 3% of the exact LP optimum."""
+    g = random_dag(seed, n=15)
+    exact = solve_hlp(g, 4, 2)
+    approx = solve_hlp_jax(g, 4, 2, iters=300)
+    assert approx.lp_value >= exact.lp_value - 1e-9  # feasible => upper bound
+    assert approx.lp_value <= exact.lp_value * 1.03
+
+
+def test_infeasible_gpu_task_forced_to_cpu():
+    """A task with effectively infinite GPU time must be allocated to CPU."""
+    proc = np.array([[5.0, 1e9], [1.0, 0.1]])
+    g = TaskGraph.build(proc, [(0, 1)])
+    sol = solve_hlp(g, 2, 2)
+    assert sol.alloc[0] == CPU

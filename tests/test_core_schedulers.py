@@ -1,0 +1,114 @@
+"""Scheduling-phase policies: feasibility invariants + approximation bounds."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bruteforce import brute_force_opt
+from repro.core.dag import CPU, GPU, TaskGraph
+from repro.core.hlp import solve_hlp, solve_qhlp
+from repro.core.listsched import heft, hlp_est, hlp_ols, list_schedule, ols_rank
+from repro.core.online import er_ls, eft_online, greedy_online, random_online
+from conftest import random_dag
+
+MACHINES = [(2, 1), (4, 2), (8, 2), (3, 3)]
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10 ** 6), st.sampled_from(MACHINES))
+def test_all_policies_produce_feasible_schedules(seed, mk):
+    """Property: every policy yields a precedence-respecting, non-overlapping
+    schedule whose makespan is at least every lower bound."""
+    g = random_dag(seed)
+    counts = list(mk)
+    sol = solve_hlp(g, *counts)
+    scheds = {
+        "hlp_est": hlp_est(g, counts, sol.alloc),
+        "hlp_ols": hlp_ols(g, counts, sol.alloc),
+        "heft": heft(g, counts),
+        "er_ls": er_ls(g, counts),
+        "eft": eft_online(g, counts),
+        "greedy": greedy_online(g, counts),
+        "random": random_online(g, counts, seed=seed),
+    }
+    for name, s in scheds.items():
+        s.validate(g, counts)
+        assert s.makespan >= sol.lp_value - 1e-6, name
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10 ** 6), st.sampled_from(MACHINES))
+def test_hlp_six_approx_guarantee(seed, mk):
+    """C_max(HLP-EST/OLS) <= 6 LP* — the paper's proof bounds directly vs LP*
+    (W/m, W/k, CP are each <= 2 λ^R after 1/2-rounding)."""
+    g = random_dag(seed)
+    counts = list(mk)
+    sol = solve_hlp(g, *counts)
+    for sched in (hlp_est(g, counts, sol.alloc), hlp_ols(g, counts, sol.alloc)):
+        assert sched.makespan <= 6.0 * sol.lp_value + 1e-6
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_qhlp_q_times_q_plus_one_guarantee(seed):
+    """C_max(QHLP-EST) <= Q(Q+1) λ^R for Q = 3 (Theorem 5's chain of bounds)."""
+    g = random_dag(seed, n=12, num_types=3)
+    counts = [3, 2, 2]
+    sol = solve_qhlp(g, counts)
+    s = hlp_est(g, counts, sol.alloc)
+    s.validate(g, counts)
+    assert s.makespan <= 3 * 4 * sol.lp_value + 1e-6
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_erls_competitive_vs_bruteforce_opt(seed):
+    """ER-LS <= 4 sqrt(m/k) OPT on exhaustive-verifiable instances (Thm 3)."""
+    g = random_dag(seed, n=5, p_edge=0.3)
+    m, k = 2, 1
+    s = er_ls(g, [m, k])
+    s.validate(g, [m, k])
+    opt = brute_force_opt(g, [m, k])
+    assert s.makespan <= 4.0 * np.sqrt(m / k) * opt + 1e-6
+    # LS family sanity: any list schedule is within W/m + W/k + CP.
+    t = s.alloc == CPU
+    bound = (g.alloc_times(s.alloc)[t].sum() / m
+             + g.alloc_times(s.alloc)[~t].sum() / k
+             + g.critical_path(g.alloc_times(s.alloc)))
+    assert s.makespan <= bound + 1e-6
+
+
+def test_ols_rank_respects_allocation():
+    g = random_dag(seed=5, n=20)
+    alloc = np.zeros(g.n, dtype=np.int32)
+    r_cpu = ols_rank(g, alloc)
+    assert r_cpu.max() == pytest.approx(g.critical_path(g.proc[:, CPU]))
+
+
+def test_list_schedule_packs_independent_tasks():
+    """m independent unit tasks on m CPUs all start at 0."""
+    proc = np.tile([[1.0, 9.0]], (4, 1))
+    g = TaskGraph.build(proc, [])
+    s = list_schedule(g, [4, 1], np.zeros(4, dtype=np.int32))
+    assert np.allclose(s.start, 0.0) and s.makespan == pytest.approx(1.0)
+
+
+def test_chain_runs_sequentially():
+    proc = np.array([[1.0, 5.0], [2.0, 5.0], [3.0, 5.0]])
+    g = TaskGraph.build(proc, [(0, 1), (1, 2)])
+    s = hlp_est(g, [2, 1], np.zeros(3, dtype=np.int32))
+    assert s.makespan == pytest.approx(6.0)
+    assert s.start.tolist() == [0.0, 1.0, 3.0]
+
+
+def test_heft_beats_or_ties_single_task():
+    proc = np.array([[4.0, 1.0]])
+    g = TaskGraph.build(proc, [])
+    s = heft(g, [2, 1])
+    assert s.alloc[0] == GPU and s.makespan == pytest.approx(1.0)
+
+
+def test_online_policies_are_irrevocable_consistent():
+    """Online schedules must coincide when re-run (determinism)."""
+    g = random_dag(seed=42, n=25)
+    a = er_ls(g, [4, 2]); b = er_ls(g, [4, 2])
+    assert np.allclose(a.start, b.start) and np.array_equal(a.alloc, b.alloc)

@@ -1,0 +1,62 @@
+"""Numerical validation of the paper's lower-bound theorems (§3, §4.2)."""
+import numpy as np
+import pytest
+
+from repro.core.dag import CPU, GPU
+from repro.core.hlp import solve_hlp
+from repro.core.listsched import heft, hlp_est, hlp_ols
+from repro.core.online import er_ls
+from repro.core import theory
+
+
+@pytest.mark.parametrize("m,k", [(16, 4), (25, 5), (36, 6)])
+def test_theorem1_heft_lower_bound(m, k):
+    """HEFT on Table-1 instance: ratio >= (m+k)/k² (1 - r^m) with r = m/(m+k)
+    (the e^{-k} in the theorem is the m→∞ limit of r^m)."""
+    g = theory.heft_worstcase(m, k)
+    s = heft(g, [m, k])
+    s.validate(g, [m, k])
+    r = m / (m + k)
+    expected_ms = r * (1 - r ** m) / (1 - r)      # sum_{i=1..m} r^i
+    assert s.makespan == pytest.approx(expected_ms, rel=1e-6)
+    opt_upper = k * m / (m + k)                    # constructed schedule
+    ratio = s.makespan / opt_upper
+    exact_bound = (m + k) / k ** 2 * (1 - r ** m)
+    assert ratio >= exact_bound - 1e-9
+    # the theorem's asymptotic form is within a few % of the exact bound
+    assert ratio >= 0.95 * theory.heft_worstcase_bound(m, k)
+
+
+@pytest.mark.parametrize("m", [5, 10, 20])
+def test_theorem2_hlp_tightness(m):
+    """Any policy after rounding Prop-1's optimal fractional solution hits
+    makespan 6(2m-1); ratio = 6 - O(1/m) vs LP*."""
+    g = theory.hlp_worstcase(m)
+    x = theory.hlp_worstcase_fractional(m)
+    lam = g.lp_objective([m, m], x)
+    assert lam == pytest.approx(theory.hlp_worstcase_lp_value(m), rel=1e-9)
+    sol = solve_hlp(g, m, m)                        # solver's optimum agrees
+    assert sol.lp_value == pytest.approx(lam, rel=1e-5)
+    assert sol.x_frac[0] == pytest.approx(1.0, abs=1e-6)  # x_A forced to CPU
+
+    alloc = np.where(x >= 0.5, CPU, GPU).astype(np.int32)
+    for sched in (hlp_est(g, [m, m], alloc), hlp_ols(g, [m, m], alloc)):
+        sched.validate(g, [m, m])
+        assert sched.makespan == pytest.approx(theory.hlp_worstcase_makespan(m))
+    ratio = theory.hlp_worstcase_makespan(m) / lam
+    exact = 6 * (2 * m - 1) * (m - 1) / (m * (2 * m + 1))
+    assert ratio == pytest.approx(exact, rel=1e-9)
+    assert ratio <= 6.0
+
+
+@pytest.mark.parametrize("m,k", [(16, 4), (64, 4), (64, 16)])
+def test_theorem4_erls_lower_bound(m, k):
+    """ER-LS on the Table-3 instance achieves exactly sqrt(m/k) vs OPT."""
+    g, order = theory.erls_worstcase(m, k)
+    s = er_ls(g, [m, k], order)
+    s.validate(g, [m, k])
+    assert s.makespan == pytest.approx(m * np.sqrt(m), rel=1e-9)
+    opt = theory.erls_optimal_makespan(m, k)
+    assert s.makespan / opt == pytest.approx(np.sqrt(m / k), rel=1e-9)
+    # and the upper bound of Thm 3 holds with room to spare
+    assert s.makespan <= 4 * np.sqrt(m / k) * opt + 1e-9

@@ -1,0 +1,63 @@
+"""Benchmark generators: Table 4 / Table 5 structural fidelity."""
+import numpy as np
+import pytest
+
+from repro.core.workloads import (BLOCK_SIZES, CHAMELEON_APPS, chameleon,
+                                  fork_join)
+
+TABLE4 = {
+    "getrf": {5: 55, 10: 385, 20: 2870},
+    "posv": {5: 65, 10: 330, 20: 1960},
+    "potrf": {5: 35, 10: 220, 20: 1540},
+    "potri": {5: 105, 10: 660, 20: 4620},
+    "potrs": {5: 30, 10: 110, 20: 420},
+}
+
+
+@pytest.mark.parametrize("app", CHAMELEON_APPS)
+@pytest.mark.parametrize("nb", [5, 10, 20])
+def test_table4_task_counts(app, nb):
+    g = chameleon(app, nb, 320)
+    assert g.n == TABLE4[app][nb]
+
+
+@pytest.mark.parametrize("w,p,total", [(100, 2, 203), (200, 2, 403),
+                                       (100, 5, 506), (500, 5, 2506),
+                                       (100, 10, 1011), (500, 10, 5011)])
+def test_table5_task_counts(w, p, total):
+    assert fork_join(w, p).n == total
+
+
+def test_block_size_does_not_change_structure():
+    gs = [chameleon("potrf", 5, b) for b in BLOCK_SIZES]
+    assert len({g.n for g in gs}) == 1
+    assert len({g.num_edges for g in gs}) == 1
+
+
+def test_determinism():
+    a = chameleon("getrf", 5, 128, seed=1)
+    b = chameleon("getrf", 5, 128, seed=1)
+    assert np.array_equal(a.proc, b.proc)
+    c = chameleon("getrf", 5, 128, seed=2)
+    assert not np.array_equal(a.proc, c.proc)
+
+
+def test_forkjoin_acceleration_recipe():
+    """5% of parallel tasks per phase decelerated (accel < 0.5 ⇒ GPU slower)."""
+    g = fork_join(200, 5, seed=3)
+    par = [j for j, nm in enumerate(g.names) if nm.startswith("par")]
+    accel = g.proc[par, 0] / g.proc[par, 1]
+    frac_slow = np.mean(accel < 1.0)
+    assert 0.02 <= frac_slow <= 0.25     # ≈5% decelerated + part of [0.5,1)
+    assert accel.max() <= 50.5 and accel.min() >= 0.09
+
+
+def test_chameleon_heterogeneity_small_blocks():
+    """Small blocks: factorization kernels slower on GPU (accel < 1)."""
+    g = chameleon("potrf", 5, 64)
+    potrf_ids = [j for j, nm in enumerate(g.names) if nm.startswith("potrf")]
+    gemm_ids = [j for j, nm in enumerate(g.names) if nm.startswith("gemm")]
+    assert np.median(g.proc[potrf_ids, 0] / g.proc[potrf_ids, 1]) < 1.0
+    g2 = chameleon("potrf", 5, 960)
+    gemm2 = [j for j, nm in enumerate(g2.names) if nm.startswith("gemm")]
+    assert np.median(g2.proc[gemm2, 0] / g2.proc[gemm2, 1]) > 10.0
