@@ -5,6 +5,9 @@ One function per paper figure:
   * ``offline_3type``  — Fig. 5: QHLP-EST vs QHLP-OLS vs QHEFT.
   * ``online_2type``   — Fig. 6/7: ER-LS vs EFT vs Greedy vs Random,
                           + mean competitive ratio as a function of sqrt(m/k).
+  * ``sim_sweep``      — beyond-paper: every ``repro.sim`` adapter over the
+                          scenario suite under seeded runtime noise; static
+                          plans are batch-evaluated in one vmapped JAX pass.
 
 Each writes a per-instance CSV under artifacts/ and returns aggregate stats
 used by ``benchmarks.run`` to print the summary and check the paper's claims.
@@ -145,3 +148,71 @@ def online_2type(full: bool = False, verbose: bool = False) -> dict:
                 for s, d in curve.items()])
     return {"ratios": {k: float(np.mean(v)) for k, v in agg.items()},
             "curve": curve, "runs": n_runs}
+
+
+# ------------------------------------------------------- unified sim sweep
+def sim_sweep(full: bool = False, noise_scale: float = 0.2,
+              num_seeds: int | None = None, verbose: bool = False) -> dict:
+    """Every scheduler adapter × every scenario family × noise seeds.
+
+    Static adapters (hlp_est / hlp_ols / heft / hlp_jax_ols) allocate once
+    per scenario and evaluate all noise realizations through
+    ``repro.sim.batch`` (one vmapped scan); arrival-driven adapters
+    (er_ls / eft / greedy / random) run the scalar engine per seed.  Reports
+    the mean makespan, the lower-bound ratio, and the noise *degradation*
+    (mean noisy / noise-free makespan) per adapter.
+    """
+    from repro.core.theory import makespan_lower_bound
+    from repro.sim import NoiseModel, make_scheduler, simulate
+    from repro.sim.batch import batch_makespans, sample_actual_batch
+    from repro.sim.scenarios import default_suite
+
+    num_seeds = num_seeds or (32 if full else 8)
+    noise = NoiseModel("lognormal", noise_scale)
+    seeds = list(range(num_seeds))
+    suite = default_suite(seed=0)
+    if full:
+        suite += default_suite(seed=100, counts=(16, 4))
+    static = ["hlp_est", "hlp_ols", "heft"] + (["hlp_jax_ols"] if full else [])
+    online = ["er_ls", "eft", "greedy_r2", "random"]
+
+    rows, agg = [], defaultdict(list)
+    n_runs = 0
+    for sc in suite:
+        lb = makespan_lower_bound(sc.graph, sc.counts)
+        for name in static + online:
+            if name in static:
+                # allocate once; clean + noisy sweeps reuse the same plan
+                plan = make_scheduler(name).allocate(sc.graph, sc.machine)
+                clean = float(batch_makespans(
+                    sc.graph, plan,
+                    sample_actual_batch(sc.graph, plan, NoiseModel(), [0]))[0])
+                ms = batch_makespans(
+                    sc.graph, plan,
+                    sample_actual_batch(sc.graph, plan, noise, seeds))
+            else:
+                # the random policy must draw a fresh stream per run
+                kw = {"seed": 0} if name == "random" else {}
+                clean = simulate(sc.graph, sc.machine,
+                                 make_scheduler(name, **kw),
+                                 seed=0).makespan
+                ms = np.array([simulate(
+                    sc.graph, sc.machine,
+                    make_scheduler(name, **({"seed": s} if name == "random"
+                                            else {})),
+                    noise=noise, seed=s).makespan for s in seeds])
+            n_runs += len(seeds)
+            mean = float(ms.mean())
+            agg[name].append(mean / lb)
+            agg[f"degrade_{name}"].append(mean / clean)
+            rows.append([sc.name, sc.family, name, lb, clean, mean,
+                         float(ms.std()), len(seeds)])
+        if verbose:
+            print(f"  sim_sweep {sc.name} done")
+    _write_csv("sim_sweep.csv",
+               ["scenario", "family", "scheduler", "lower_bound",
+                "makespan_clean", "makespan_noisy_mean", "makespan_noisy_std",
+                "seeds"], rows)
+    return {"ratios": {k: float(np.mean(v)) for k, v in agg.items()},
+            "schedulers": static + online, "runs": n_runs,
+            "scenarios": len(suite)}

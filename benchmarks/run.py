@@ -80,6 +80,27 @@ def bench_online(full: bool) -> list[str]:
     return lines
 
 
+def bench_sim(full: bool) -> list[str]:
+    """Unified repro.sim sweep: all adapters × scenario families × noise."""
+    from . import campaign
+    t0 = time.perf_counter()
+    r = campaign.sim_sweep(full=full)
+    dt = time.perf_counter() - t0
+    per = dt / max(r["runs"], 1) * 1e6
+    lines = []
+    for alg in r["schedulers"]:
+        lines.append(f"sim/{alg},{per:.0f},"
+                     f"mean_ratio_lb={r['ratios'][alg]:.4f};"
+                     f"noise_degrade={r['ratios']['degrade_' + alg]:.4f}")
+    print(f"# sim: {r['runs']} runs over {r['scenarios']} scenarios in "
+          f"{dt:.1f}s | LB ratios " +
+          " ".join(f"{a}={r['ratios'][a]:.3f}" for a in r["schedulers"]))
+    print("#   noise degradation (noisy/clean): " +
+          " ".join(f"{a}={r['ratios']['degrade_' + a]:.3f}"
+                   for a in r["schedulers"]))
+    return lines
+
+
 def bench_roofline(full: bool) -> list[str]:
     """Summarize dry-run roofline artifacts (produced by repro.launch.dryrun)."""
     art = os.path.join(os.path.dirname(__file__), "..", "artifacts",
@@ -136,6 +157,7 @@ BENCHES = {
     "offline2": bench_offline2,
     "offline3": bench_offline3,
     "online": bench_online,
+    "sim": bench_sim,
     "solver": bench_solver,
     "kernels": bench_kernels,
     "roofline": bench_roofline,

@@ -1,13 +1,18 @@
 # The paper's primary contribution: two-phase (allocation, scheduling) for
 # heterogeneous platforms — HLP/QHLP allocation LPs (exact + JAX-native),
 # List-Scheduling variants (EST/OLS/HEFT), and the on-line ER-LS algorithm.
+from .bruteforce import brute_force_opt, brute_force_schedule
 from .dag import CPU, GPU, TaskGraph
 from .hlp import HLPSolution, lp_lower_bound, solve_hlp, solve_qhlp
 from .listsched import Schedule, heft, hlp_est, hlp_ols, list_schedule, ols_rank
-from .online import er_ls, eft_online, greedy_online, random_online, RULES
+from .online import (er_ls, eft_online, erls_decide, greedy_online,
+                     random_online, RULES)
+from .theory import makespan_lower_bound
 
 __all__ = [
     "CPU", "GPU", "TaskGraph", "HLPSolution", "lp_lower_bound", "solve_hlp",
     "solve_qhlp", "Schedule", "heft", "hlp_est", "hlp_ols", "list_schedule",
-    "ols_rank", "er_ls", "eft_online", "greedy_online", "random_online", "RULES",
+    "ols_rank", "er_ls", "eft_online", "erls_decide", "greedy_online",
+    "random_online", "RULES", "brute_force_opt", "brute_force_schedule",
+    "makespan_lower_bound",
 ]

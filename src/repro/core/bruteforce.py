@@ -14,10 +14,12 @@ import itertools
 import numpy as np
 
 from .dag import TaskGraph
+from .listsched import Schedule
 
 
 def _chain_makespan(g: TaskGraph, alloc: np.ndarray,
-                    machine_of: np.ndarray, pos_of: np.ndarray) -> float | None:
+                    machine_of: np.ndarray, pos_of: np.ndarray,
+                    return_starts: bool = False):
     """Longest path of precedence + machine-chain edges; None if cyclic."""
     n = g.n
     t = g.alloc_times(alloc)
@@ -48,15 +50,16 @@ def _chain_makespan(g: TaskGraph, alloc: np.ndarray,
                 stack.append(v)
     if seen != n:
         return None  # cycle -> machine order conflicts with precedences
+    if return_starts:
+        return float(finish.max()), start
     return float(finish.max())
 
 
-def brute_force_opt(g: TaskGraph, counts: list[int]) -> float:
-    """Exact optimal makespan (hybrid or Q-type).  O(Q^n · n! · Π m_q^n)."""
+def _search(g: TaskGraph, counts: list[int]):
+    """Yield every feasible (makespan, alloc, machine_of, pos_of) combination."""
     n, Q = g.n, g.num_types
     if n > 7:
         raise ValueError("brute force limited to n <= 7")
-    best = np.inf
     for alloc_tuple in itertools.product(range(Q), repeat=n):
         alloc = np.asarray(alloc_tuple, dtype=np.int32)
         if not np.all(np.isfinite(g.alloc_times(alloc))):
@@ -70,7 +73,31 @@ def brute_force_opt(g: TaskGraph, counts: list[int]) -> float:
                 pos_of[j] = p
             for mach_tuple in itertools.product(
                     *[range(counts[alloc[j]]) for j in range(n)]):
-                ms = _chain_makespan(g, alloc, np.asarray(mach_tuple), pos_of)
-                if ms is not None and ms < best:
-                    best = ms
-    return best
+                machine_of = np.asarray(mach_tuple)
+                ms = _chain_makespan(g, alloc, machine_of, pos_of)
+                if ms is not None:
+                    yield ms, alloc, machine_of, pos_of
+
+
+def brute_force_opt(g: TaskGraph, counts: list[int]) -> float:
+    """Exact optimal makespan (hybrid or Q-type).  O(Q^n · n! · Π m_q^n)."""
+    return min((ms for ms, *_ in _search(g, counts)), default=np.inf)
+
+
+def brute_force_schedule(g: TaskGraph, counts: list[int]) -> Schedule:
+    """Exact optimal *schedule* (same search, keeps the argmin combination).
+
+    Lets ``repro.sim.adapters`` expose the oracle through the same
+    ``Scheduler`` protocol as the polynomial algorithms on tiny instances.
+    """
+    best = None
+    for ms, alloc, machine_of, pos_of in _search(g, counts):
+        if best is None or ms < best[0]:
+            best = (ms, alloc.copy(), machine_of.copy(), pos_of.copy())
+    if best is None:
+        raise RuntimeError("no feasible schedule (empty machine?)")
+    _, alloc, machine_of, pos_of = best
+    _, start = _chain_makespan(g, alloc, machine_of, pos_of, return_starts=True)
+    t = g.alloc_times(alloc)
+    return Schedule(alloc=alloc, proc=machine_of.astype(np.int32),
+                    start=start, finish=start + t)

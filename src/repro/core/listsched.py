@@ -39,6 +39,19 @@ class Schedule:
     def makespan(self) -> float:
         return float(self.finish.max()) if self.finish.size else 0.0
 
+    def machine_sequences(self, counts: list[int]) -> dict[tuple[int, int], list[int]]:
+        """Per-(type, processor) task sequence ordered by start time.
+
+        This is the *static plan* view of a schedule — what ``repro.sim``
+        replays under stochastic runtimes: each processor executes its
+        sequence in order, starting each task when its predecessors finish.
+        """
+        seqs: dict[tuple[int, int], list[int]] = {
+            (q, p): [] for q in range(len(counts)) for p in range(counts[q])}
+        for j in np.argsort(self.start, kind="stable"):
+            seqs[(int(self.alloc[j]), int(self.proc[j]))].append(int(j))
+        return seqs
+
     def validate(self, g: TaskGraph, counts: list[int], tol: float = 1e-9) -> None:
         """Raise if the schedule is infeasible (used by tests, cheap to keep on)."""
         t = g.alloc_times(self.alloc)

@@ -37,6 +37,19 @@ def rule_r3(pc: float, pg: float, m: int, k: int) -> int:
 RULES = {"R1": rule_r1, "R2": rule_r2, "R3": rule_r3}
 
 
+def erls_decide(pc: float, pg: float, m: int, k: int, r_gpu: float) -> int:
+    """The ER-LS allocation decision for one arriving task.
+
+    ``r_gpu`` is the task's earliest possible start on the GPU side
+    (max of earliest idle GPU and the task's ready time).  Exposed as a pure
+    function so ``repro.sim.adapters`` can drive the identical rule from the
+    simulation engine's arrival loop.
+    """
+    if pc >= r_gpu + pg:                           # Step 1
+        return GPU
+    return rule_r2(pc, pg, m, k)                   # Step 2
+
+
 def _arrival_order(g: TaskGraph, rng: np.random.Generator | None = None) -> np.ndarray:
     """A precedence-respecting arrival order (randomized topo if rng given)."""
     if rng is None:
@@ -98,9 +111,7 @@ def er_ls(g: TaskGraph, counts: list[int], order: np.ndarray | None = None) -> S
     def decide(j: int, ready: float, mach: _OnlineMachine) -> int:
         pc, pg = g.proc[j, CPU], g.proc[j, GPU]
         r_gpu = max(mach.earliest_idle(GPU), ready)
-        if pc >= r_gpu + pg:                       # Step 1
-            return GPU
-        return rule_r2(pc, pg, m, k)               # Step 2
+        return erls_decide(pc, pg, m, k, r_gpu)
 
     return _run_online(g, counts, decide, g.topo if order is None else order)
 

@@ -81,3 +81,31 @@ def erls_worstcase(m: int, k: int) -> tuple[TaskGraph, np.ndarray]:
 def erls_optimal_makespan(m: int, k: int) -> float:
     """OPT for the Thm-4 instance: A on CPUs (√m), B chain on GPUs (m·√k)."""
     return max(np.sqrt(m), m * np.sqrt(k))
+
+
+def erls_competitive_bound(m: int, k: int) -> float:
+    """Theorem 3: ER-LS is at most 4·√(m/k)-competitive (m CPUs, k GPUs)."""
+    return 4.0 * np.sqrt(m / k)
+
+
+# --------------------------------------------------- universal lower bounds
+def makespan_lower_bound(g: TaskGraph, counts) -> float:
+    """A bound every feasible schedule obeys, independent of the algorithm:
+
+        max( CP under per-task best-type times,
+             total best-type work / total machine count,
+             largest single best-type task ).
+
+    Weaker than LP* but valid for *any* allocation (LP* assumes the
+    allocation is free to be fractional; this never exceeds OPT either) —
+    the property tests in ``tests/test_sim_*`` check every simulated
+    schedule against it.
+    """
+    tmin = np.min(g.proc, axis=1)
+    if not np.all(np.isfinite(tmin)):
+        tmin = np.where(np.isfinite(tmin), tmin, 0.0)
+    cp = g.critical_path(tmin)
+    total = float(sum(counts))
+    area = float(tmin.sum()) / total if total else 0.0
+    longest = float(tmin.max()) if tmin.size else 0.0
+    return max(cp, area, longest)

@@ -71,8 +71,12 @@ def _group_size(line: str, total_devices: int) -> int:
 
 
 _COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\{\s*$")
+# Matches both the legacy ``while((%tuple))`` and the current
+# ``while((s32[], ...) %tuple.68)`` operand spellings — only the
+# condition/body references matter for trip-count recovery.
 _WHILE_RE = re.compile(
-    r"while\((%[\w.\-]+)\), condition=(%[\w.\-]+), body=(%[\w.\-]+)")
+    r"\bwhile\(.*?\), condition=(%[\w.\-]+), body=(%[\w.\-]+)")
+_TRIP_COUNT_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
 
 
 def _computations(hlo_text: str) -> dict[str, list[str]]:
@@ -93,18 +97,23 @@ def _computations(hlo_text: str) -> dict[str, list[str]]:
 def _loop_multipliers(comps: dict[str, list[str]]) -> dict[str, float]:
     """Trip-count multiplier per computation.
 
-    XLA hoists each while loop's bound into its CONDITION computation as a
-    scalar s32 constant compared against the loop counter — so the trip count
-    is simply the (max) scalar s32 constant defined in the condition.
-    Multipliers propagate multiplicatively through nested whiles.
+    The optimized module annotates each while with
+    ``backend_config={"known_trip_count":{"n":...}}`` — that is authoritative.
+    When absent (older XLA / unsimplified loops) we fall back to the bound XLA
+    hoists into the CONDITION computation as a scalar s32 constant compared
+    against the loop counter.  Multipliers propagate multiplicatively through
+    nested whiles.
     """
-    whiles: dict[str, list[tuple[str, str]]] = {}  # comp -> [(cond, body)]
+    # comp -> [(cond, body, trip_or_None)]
+    whiles: dict[str, list[tuple[str, str, int | None]]] = {}
     for name, lines in comps.items():
         ws = []
         for ls in lines:
             mw = _WHILE_RE.search(ls)
             if mw:
-                ws.append((mw.group(2).lstrip("%"), mw.group(3).lstrip("%")))
+                mt = _TRIP_COUNT_RE.search(ls)
+                ws.append((mw.group(1).lstrip("%"), mw.group(2).lstrip("%"),
+                           int(mt.group(1)) if mt else None))
         whiles[name] = ws
 
     def cond_trip(cond: str) -> int:
@@ -119,8 +128,10 @@ def _loop_multipliers(comps: dict[str, list[str]]) -> dict[str, float]:
     for _ in range(8):   # fixpoint over nesting depth
         for name, ws in whiles.items():
             base = mult[name]
-            for cond, body in ws:
-                mult[body] = max(mult[body], base * cond_trip(cond))
+            for cond, body, trip in ws:
+                trips = trip if trip is not None else cond_trip(cond)
+                mult[body] = max(mult[body], base * trips)
+                mult[cond] = max(mult[cond], base * trips)
             mult[name] = base
     return dict(mult)
 

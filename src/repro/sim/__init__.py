@@ -1,0 +1,45 @@
+"""repro.sim — discrete-event scheduler simulation over one unified protocol.
+
+The paper's experimental section (§6) is a large simulation campaign: run
+every algorithm (HLP-EST/OLS, HEFT, ER-LS, greedy rules, …) over libraries
+of task graphs and machine configurations, and compare makespans against the
+LP lower bound.  The seed repo exposed each scheduler through an ad-hoc entry
+point; this package unifies them behind one ``Scheduler`` protocol and one
+event-driven engine (design after ESTEE, Kobzol et al.), adding what the
+paper's static pipeline could not express:
+
+  * **stochastic runtimes** — ``proc`` entries are *estimates*; the engine
+    perturbs them with a seeded ``NoiseModel`` (lognormal / uniform) and
+    replays static plans dynamically, so robustness-to-misprediction becomes
+    measurable;
+  * **arrival streams** — tasks may carry release times, turning any offline
+    instance into an online one;
+  * **scenario families** — ``repro.sim.scenarios`` generates the paper's
+    workloads (chains, fork-join, layered/STG, tiled Cholesky/LU) and a
+    bridge to ``repro.core.workloads``, each parameterized by
+    ``(n, Q, counts, speedup distribution, seed)``;
+  * **a vectorized JAX path** — ``repro.sim.batch`` evaluates a whole batch
+    of (scenario × noise-seed) makespans for a static plan in one vmapped
+    scan, which is what the campaign sweep in ``benchmarks`` runs on.
+
+Entry points::
+
+    from repro.sim import simulate, make_scheduler, ADAPTERS
+    from repro.sim.scenarios import default_suite
+
+    for sc in default_suite(seed=0):
+        for name in ADAPTERS:
+            r = simulate(sc.graph, sc.machine, make_scheduler(name),
+                         noise=NoiseModel("lognormal", 0.1), seed=sc.seed)
+            print(sc.name, name, r.makespan)
+"""
+from .adapters import ADAPTERS, make_scheduler
+from .engine import (Machine, NoiseModel, Plan, Scheduler, SimResult,
+                     TraceEvent, simulate)
+from .scenarios import SCENARIO_FAMILIES, Scenario, default_suite, make_scenario
+
+__all__ = [
+    "ADAPTERS", "make_scheduler", "Machine", "NoiseModel", "Plan",
+    "Scheduler", "SimResult", "TraceEvent", "simulate",
+    "SCENARIO_FAMILIES", "Scenario", "default_suite", "make_scenario",
+]

@@ -1,0 +1,201 @@
+"""Scheduler adapters: every algorithm in ``repro.core`` behind one protocol.
+
+Static (plan-first) adapters run the paper's two-phase pipeline on the
+*estimated* ``proc`` matrix and hand the engine a full ``Plan``; the engine
+then replays it under realized runtimes.  Arrival-driven adapters implement
+``on_task_arrival`` and decide irrevocably per task, exactly the paper's
+§4.2 model.
+
+Registry (``ADAPTERS`` / ``make_scheduler``):
+
+  static:   ``hlp_est``, ``hlp_ols``, ``hlp_jax_ols``, ``heft``,
+            ``bruteforce`` (n ≤ 7 oracle)
+  online:   ``er_ls``, ``eft``, ``greedy_r1``/``greedy_r2``/``greedy_r3``,
+            ``random``
+
+All adapters are stateless between ``simulate`` calls except ``random``,
+which derives its stream from the adapter seed so campaigns stay
+reproducible.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.bruteforce import brute_force_schedule
+from repro.core.dag import CPU, GPU, TaskGraph
+from repro.core.hlp import solve_hlp, solve_qhlp
+from repro.core.hlp_jax import solve_hlp_jax
+from repro.core.listsched import heft, hlp_est, hlp_ols
+from repro.core.online import RULES, erls_decide
+
+from .engine import Machine, MachineState, Plan
+
+
+class StaticScheduler:
+    """Base: wrap a ``(g, counts) -> Schedule`` solver into the protocol."""
+
+    name = "static"
+
+    def _solve(self, g: TaskGraph, counts: list[int]):
+        raise NotImplementedError
+
+    def allocate(self, g: TaskGraph, machine: Machine) -> Plan:
+        counts = list(machine.counts)
+        return Plan.from_schedule(self._solve(g, counts), counts)
+
+    def on_task_arrival(self, j: int, ready: float, state: MachineState) -> int:
+        raise RuntimeError(f"{self.name} is a static scheduler")
+
+
+class HLPESTScheduler(StaticScheduler):
+    """Paper §3/§5: HLP/QHLP allocation LP + EST list scheduling."""
+
+    name = "hlp_est"
+
+    def _allocate_lp(self, g: TaskGraph, counts: list[int]) -> np.ndarray:
+        if g.num_types == 2:
+            return solve_hlp(g, counts[0], counts[1]).alloc
+        return solve_qhlp(g, counts).alloc
+
+    def _solve(self, g, counts):
+        return hlp_est(g, counts, self._allocate_lp(g, counts))
+
+
+class HLPOLSScheduler(HLPESTScheduler):
+    """Paper §4.1: HLP/QHLP allocation + Ordered List Scheduling."""
+
+    name = "hlp_ols"
+
+    def _solve(self, g, counts):
+        return hlp_ols(g, counts, self._allocate_lp(g, counts))
+
+
+class HLPJaxOLSScheduler(HLPOLSScheduler):
+    """Beyond-paper: the jitted first-order HLP solver + OLS (Q=2 only)."""
+
+    name = "hlp_jax_ols"
+
+    def __init__(self, iters: int = 300, seed: int = 0):
+        self.iters, self.seed = iters, seed
+
+    def _allocate_lp(self, g, counts):
+        if g.num_types != 2:
+            raise ValueError("hlp_jax_ols requires Q=2")
+        return solve_hlp_jax(g, counts[0], counts[1], iters=self.iters,
+                             seed=self.seed).alloc
+
+
+class HEFTScheduler(StaticScheduler):
+    """Insertion-based HEFT baseline (single phase)."""
+
+    name = "heft"
+
+    def _solve(self, g, counts):
+        return heft(g, counts)
+
+
+class BruteForceScheduler(StaticScheduler):
+    """Exhaustive optimum — the oracle adapter for tiny instances (n ≤ 7)."""
+
+    name = "bruteforce"
+
+    def _solve(self, g, counts):
+        return brute_force_schedule(g, counts)
+
+
+# ----------------------------------------------------------- arrival-driven
+class OnlineScheduler:
+    """Base for arrival-driven policies: no static plan."""
+
+    name = "online"
+
+    def allocate(self, g: TaskGraph, machine: Machine) -> None:
+        self._g = g
+        self._machine = machine
+        return None
+
+    def on_task_arrival(self, j: int, ready: float, state: MachineState) -> int:
+        raise NotImplementedError
+
+
+class ERLSScheduler(OnlineScheduler):
+    """Paper §4.2: Enhanced Rules + List Scheduling (4·√(m/k)-competitive)."""
+
+    name = "er_ls"
+
+    def on_task_arrival(self, j, ready, state):
+        g, machine = self._g, self._machine
+        pc, pg = g.proc[j, CPU], g.proc[j, GPU]
+        r_gpu = max(state.earliest_idle(GPU), ready)
+        return erls_decide(pc, pg, machine.counts[CPU], machine.counts[GPU],
+                           r_gpu)
+
+
+class EFTScheduler(OnlineScheduler):
+    """Commit each arriving task to the type minimizing its estimated EFT."""
+
+    name = "eft"
+
+    def on_task_arrival(self, j, ready, state):
+        g = self._g
+        best_q, best_f = 0, np.inf
+        for q in range(g.num_types):
+            p = g.proc[j, q]
+            if not np.isfinite(p):
+                continue
+            f = max(ready, state.earliest_idle(q)) + p
+            if f < best_f - 1e-12 or (abs(f - best_f) <= 1e-12
+                                      and p < g.proc[j, best_q]):
+                best_q, best_f = q, f
+        return best_q
+
+
+class GreedyRuleScheduler(OnlineScheduler):
+    """Processing-time-only rules R1–R3 (paper §4.2 baselines, Q=2)."""
+
+    def __init__(self, rule: str = "R2"):
+        self.rule = RULES[rule]
+        self.name = f"greedy_{rule.lower()}"
+
+    def on_task_arrival(self, j, ready, state):
+        g, machine = self._g, self._machine
+        return self.rule(g.proc[j, CPU], g.proc[j, GPU],
+                         machine.counts[CPU], machine.counts[GPU])
+
+
+class RandomScheduler(OnlineScheduler):
+    """Uniformly random type per task (seeded at allocate time)."""
+
+    name = "random"
+
+    def __init__(self, seed: int = 0):
+        self.seed = seed
+
+    def allocate(self, g, machine):
+        super().allocate(g, machine)
+        self._rng = np.random.default_rng(self.seed)
+        return None
+
+    def on_task_arrival(self, j, ready, state):
+        return int(self._rng.integers(0, self._g.num_types))
+
+
+ADAPTERS = {
+    "hlp_est": HLPESTScheduler,
+    "hlp_ols": HLPOLSScheduler,
+    "hlp_jax_ols": HLPJaxOLSScheduler,
+    "heft": HEFTScheduler,
+    "er_ls": ERLSScheduler,
+    "eft": EFTScheduler,
+    "greedy_r1": lambda: GreedyRuleScheduler("R1"),
+    "greedy_r2": lambda: GreedyRuleScheduler("R2"),
+    "greedy_r3": lambda: GreedyRuleScheduler("R3"),
+    "random": RandomScheduler,
+    "bruteforce": BruteForceScheduler,
+}
+
+
+def make_scheduler(name: str, **kw):
+    if name not in ADAPTERS:
+        raise ValueError(f"unknown scheduler {name!r}; have {sorted(ADAPTERS)}")
+    return ADAPTERS[name](**kw) if kw else ADAPTERS[name]()

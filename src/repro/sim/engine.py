@@ -1,0 +1,297 @@
+"""Event-driven scheduler simulation engine.
+
+The engine runs one instance = (``TaskGraph`` of runtime *estimates*,
+``Machine`` of typed processor pools, ``Scheduler``) to completion under
+*actual* runtimes sampled from a seeded ``NoiseModel``, producing a
+validated ``Schedule`` plus a trace of (time, event, task, type, proc)
+records.
+
+Scheduler protocol (one interface for offline and online algorithms):
+
+  * ``allocate(g, machine) -> Plan | None`` — called once before the clock
+    starts, seeing only the *estimated* ``g.proc``.  Offline algorithms
+    return a full static ``Plan`` (type + processor + per-processor order);
+    online algorithms return ``None`` and take decisions per arrival.
+  * ``on_task_arrival(j, ready, state) -> int`` — called when task ``j``
+    arrives (all predecessors committed, release time passed); returns the
+    resource type to commit the task to.  The engine then starts it as early
+    as possible on that side, the paper's §4.2 semantics.  ``state`` is a
+    ``MachineState`` view of the committed schedule.
+
+Execution semantics for a static ``Plan`` (the "replay" model of ESTEE-style
+simulators): each processor executes its planned task sequence *in order*;
+a task starts when (a) every DAG predecessor has finished, (b) the previous
+task in its processor's sequence has finished, and (c) its release time has
+passed.  Under zero noise this reproduces the planning schedule exactly;
+under noise it measures the plan's robustness without re-optimizing.
+
+Determinism: ``simulate(..., seed=s)`` is bit-reproducible — the only
+randomness is the ``NoiseModel`` stream derived from ``seed``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core.dag import TaskGraph
+from repro.core.listsched import Schedule
+
+
+# ------------------------------------------------------------------ machine
+@dataclasses.dataclass(frozen=True)
+class Machine:
+    """Typed processor pools: ``counts[q]`` identical processors of type q."""
+
+    counts: tuple[int, ...]
+    names: tuple[str, ...] | None = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "counts", tuple(int(c) for c in self.counts))
+        if any(c < 0 for c in self.counts):
+            raise ValueError("negative processor count")
+
+    @property
+    def num_types(self) -> int:
+        return len(self.counts)
+
+    @property
+    def total(self) -> int:
+        return sum(self.counts)
+
+    @staticmethod
+    def hybrid(m: int, k: int) -> "Machine":
+        return Machine((m, k), names=("cpu", "gpu"))
+
+
+# -------------------------------------------------------------------- noise
+@dataclasses.dataclass(frozen=True)
+class NoiseModel:
+    """Multiplicative runtime perturbation of the ``proc`` estimates.
+
+    kind:
+      * ``"none"``       — actual == estimate (pure replay).
+      * ``"lognormal"``  — actual = estimate · LogNormal(-scale²/2, scale)
+                            (unit mean, matching the workload synthesis in
+                            ``repro.core.workloads``).
+      * ``"uniform"``    — actual = estimate · U[1-scale, 1+scale].
+
+    The same multiplier applies across all types of one task (the noise
+    models *misprediction of the task*, not of the machine).
+    """
+
+    kind: str = "none"
+    scale: float = 0.0
+
+    def sample(self, proc: np.ndarray, rng: np.random.Generator) -> np.ndarray:
+        if self.kind == "none" or self.scale == 0.0:
+            return proc
+        n = proc.shape[0]
+        if self.kind == "lognormal":
+            mult = rng.lognormal(-0.5 * self.scale ** 2, self.scale, size=n)
+        elif self.kind == "uniform":
+            if not 0.0 <= self.scale < 1.0:
+                raise ValueError("uniform noise needs 0 <= scale < 1")
+            mult = rng.uniform(1.0 - self.scale, 1.0 + self.scale, size=n)
+        else:
+            raise ValueError(f"unknown noise kind {self.kind!r}")
+        return proc * mult[:, None]
+
+
+# --------------------------------------------------------------------- plan
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """Static scheduling decision: full assignment + per-processor order."""
+
+    alloc: np.ndarray                 # (n,) resource type per task
+    proc: np.ndarray                  # (n,) processor index within its type
+    sequences: dict[tuple[int, int], list[int]]   # (q, pid) -> ordered tasks
+
+    @staticmethod
+    def from_schedule(sched: Schedule, counts) -> "Plan":
+        return Plan(alloc=np.asarray(sched.alloc, dtype=np.int32),
+                    proc=np.asarray(sched.proc, dtype=np.int32),
+                    sequences=sched.machine_sequences(list(counts)))
+
+
+class MachineState:
+    """The committed schedule as seen by an online scheduler at arrival time."""
+
+    def __init__(self, counts: tuple[int, ...]):
+        self.free = [[(0.0, p) for p in range(c)] for c in counts]
+        for h in self.free:
+            heapq.heapify(h)
+
+    def earliest_idle(self, q: int) -> float:
+        return self.free[q][0][0] if self.free[q] else np.inf
+
+    def commit(self, q: int, ready: float, p: float) -> tuple[int, float, float]:
+        if not self.free[q]:
+            raise RuntimeError(f"no processors of type {q}")
+        f, pid = heapq.heappop(self.free[q])
+        s = max(ready, f)
+        heapq.heappush(self.free[q], (s + p, pid))
+        return pid, s, s + p
+
+
+@runtime_checkable
+class Scheduler(Protocol):
+    """The unified protocol every adapter in ``repro.sim.adapters`` satisfies."""
+
+    name: str
+
+    def allocate(self, g: TaskGraph, machine: Machine) -> Plan | None:
+        """Static plan from estimates, or None for arrival-driven policies."""
+        ...
+
+    def on_task_arrival(self, j: int, ready: float, state: MachineState) -> int:
+        """Resource type for arriving task ``j`` (online policies only)."""
+        ...
+
+
+# -------------------------------------------------------------------- trace
+@dataclasses.dataclass(frozen=True)
+class TraceEvent:
+    time: float
+    event: str          # "start" | "finish"
+    task: int
+    rtype: int
+    proc: int
+
+
+@dataclasses.dataclass(frozen=True)
+class SimResult:
+    schedule: Schedule
+    actual: np.ndarray          # (n, Q) realized processing times
+    trace: tuple[TraceEvent, ...]
+    scheduler: str
+
+    @property
+    def makespan(self) -> float:
+        return self.schedule.makespan
+
+
+# ------------------------------------------------------------------- engine
+def _execute_plan(g: TaskGraph, plan: Plan, times: np.ndarray,
+                  release: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Dynamic replay of a static plan under realized task ``times``."""
+    n = g.n
+    start = np.zeros(n)
+    finish = np.zeros(n)
+    prev_on_proc = np.full(n, -1, dtype=np.int64)
+    next_on_proc = np.full(n, -1, dtype=np.int64)
+    for seq in plan.sequences.values():
+        for a, b in zip(seq[:-1], seq[1:]):
+            prev_on_proc[b] = a
+            next_on_proc[a] = b
+    remaining = np.diff(g.pred_ptr).astype(np.int64) + (prev_on_proc >= 0)
+    heap: list[tuple[float, int]] = []
+    for j in np.flatnonzero(remaining == 0):
+        heapq.heappush(heap, (float(release[j]), int(j)))
+    done = 0
+    while heap:
+        r, j = heapq.heappop(heap)
+        start[j] = r
+        finish[j] = r + times[j]
+        done += 1
+        # Each finished task releases one slot per dependency role: one per
+        # outgoing DAG edge, plus one for its successor in the processor
+        # sequence (which may be the same task — it then holds two slots).
+        succ = list(map(int, g.succs(j)))
+        nxt = int(next_on_proc[j])
+        for v in succ + ([nxt] if nxt >= 0 else []):
+            remaining[v] -= 1
+            if remaining[v] == 0:
+                ready = float(release[v])
+                pv = g.preds(v)
+                if pv.size:
+                    ready = max(ready, float(finish[pv].max()))
+                if prev_on_proc[v] >= 0:
+                    ready = max(ready, float(finish[prev_on_proc[v]]))
+                heapq.heappush(heap, (ready, v))
+    if done != n:
+        raise RuntimeError("plan execution deadlocked (bad plan sequences?)")
+    return start, finish
+
+
+def _run_arrivals(g: TaskGraph, machine: Machine, scheduler: Scheduler,
+                  times_matrix: np.ndarray, release: np.ndarray,
+                  order: np.ndarray):
+    """Arrival-driven loop: irrevocable (type, proc, start) per arrival."""
+    n = g.n
+    state = MachineState(machine.counts)
+    alloc = np.zeros(n, dtype=np.int32)
+    proc = np.zeros(n, dtype=np.int32)
+    start = np.zeros(n)
+    finish = np.zeros(n)
+    for j in order:
+        j = int(j)
+        pr = g.preds(j)
+        ready = max(float(release[j]),
+                    float(finish[pr].max()) if pr.size else 0.0)
+        q = int(scheduler.on_task_arrival(j, ready, state))
+        if not 0 <= q < machine.num_types:
+            raise ValueError(f"scheduler {scheduler.name} returned bad type {q}")
+        alloc[j] = q
+        proc[j], start[j], finish[j] = state.commit(q, ready, times_matrix[j, q])
+    return alloc, proc, start, finish
+
+
+def simulate(g: TaskGraph, machine: Machine, scheduler: Scheduler, *,
+             noise: NoiseModel | None = None, seed: int = 0,
+             release: np.ndarray | None = None,
+             order: np.ndarray | None = None,
+             validate: bool = True, trace: bool = False) -> SimResult:
+    """Run one scheduler over one instance under seeded stochastic runtimes.
+
+    Args:
+      g:        task graph whose ``proc`` holds runtime *estimates*.
+      machine:  typed processor pools.
+      scheduler: any object satisfying the ``Scheduler`` protocol.
+      noise:    multiplicative runtime perturbation (default: none).
+      seed:     RNG seed — same seed, same result, bit-for-bit.
+      release:  optional (n,) release/arrival times (tasks cannot start
+                earlier); turns the instance into an online one.
+      order:    optional precedence-respecting arrival order for
+                arrival-driven schedulers (default: ``g.topo``).
+      validate: check the two feasibility invariants on the result.
+      trace:    record start/finish ``TraceEvent``s (off by default: cheap
+                campaigns don't pay for them).
+    """
+    rng = np.random.default_rng(seed)
+    actual = (noise or NoiseModel()).sample(g.proc, rng)
+    release = np.zeros(g.n) if release is None else np.asarray(release, float)
+    if release.shape != (g.n,):
+        raise ValueError(f"release must be (n,), got {release.shape}")
+
+    plan = scheduler.allocate(g, machine)
+    if plan is not None:
+        times = actual[np.arange(g.n), np.asarray(plan.alloc, dtype=np.int64)]
+        start, finish = _execute_plan(g, plan, times, release)
+        sched = Schedule(alloc=np.asarray(plan.alloc, dtype=np.int32),
+                         proc=np.asarray(plan.proc, dtype=np.int32),
+                         start=start, finish=finish)
+    else:
+        alloc, proc, start, finish = _run_arrivals(
+            g, machine, scheduler, actual, release,
+            g.topo if order is None else order)
+        sched = Schedule(alloc=alloc, proc=proc, start=start, finish=finish)
+
+    if validate:
+        g_actual = dataclasses.replace(g, proc=actual)
+        sched.validate(g_actual, list(machine.counts))
+
+    events: tuple[TraceEvent, ...] = ()
+    if trace:
+        ev = [TraceEvent(float(sched.start[j]), "start", j,
+                         int(sched.alloc[j]), int(sched.proc[j]))
+              for j in range(g.n)]
+        ev += [TraceEvent(float(sched.finish[j]), "finish", j,
+                          int(sched.alloc[j]), int(sched.proc[j]))
+               for j in range(g.n)]
+        events = tuple(sorted(ev, key=lambda e: (e.time, e.event == "finish",
+                                                 e.task)))
+    return SimResult(schedule=sched, actual=actual, trace=events,
+                     scheduler=getattr(scheduler, "name", type(scheduler).__name__))

@@ -1,0 +1,188 @@
+"""Scenario generators for the simulation campaigns.
+
+A ``Scenario`` bundles everything one simulation run needs: a ``TaskGraph``
+of runtime estimates, a ``Machine``, and the seed that generated both.
+Families cover the paper's §6.1 workloads and beyond:
+
+  * ``chain``     — serial chain (no intra-parallelism; stresses allocation).
+  * ``fork_join`` — GGen fork-join, the paper's Table-5 recipe
+                    (via ``repro.core.workloads.fork_join``).
+  * ``layered``   — STG-style random layered DAG: ``layers`` ranks, random
+                    width, edges only between consecutive ranks.
+  * ``cholesky``  — tiled right-looking Cholesky (Chameleon ``potrf``).
+  * ``lu``        — tiled LU without pivoting (Chameleon ``getrf``).
+  * ``random``    — Erdős–Rényi-over-topological-order DAG (the tests'
+                    workhorse shape).
+  * ``from_workloads`` — bridge to any ``repro.core.workloads.chameleon``
+                    application (posv, potri, potrs, …).
+
+Synthetic families draw per-task CPU times and per-type speedups from the
+paper's recipe: a small fraction of tasks is *slower* on the accelerator
+(speedup in [0.1, 0.5]), the rest accelerated up to 50× — the qualitative
+heterogeneity that makes the allocation phase matter.
+
+Every generator is a pure function of its parameters + ``seed``:
+``make_scenario(family, seed=s, **params)`` always returns the same
+scenario, which is what makes campaign sweeps and golden tests reproducible.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from repro.core.dag import TaskGraph
+from repro.core.workloads import chameleon, fork_join
+
+from .engine import Machine
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    name: str
+    family: str
+    graph: TaskGraph
+    machine: Machine
+    seed: int
+
+    @property
+    def counts(self) -> list[int]:
+        return list(self.machine.counts)
+
+
+# ------------------------------------------------------- processing times
+def heterogeneous_times(n: int, num_types: int, rng: np.random.Generator, *,
+                        cpu_mean: float = 10.0, slow_frac: float = 0.05,
+                        speedup: tuple[float, float] = (0.5, 50.0)) -> np.ndarray:
+    """(n, Q) estimates: CPU ~ lognormal around ``cpu_mean``; each extra type
+    accelerates most tasks by U[speedup] and *slows* a ``slow_frac`` fraction
+    by U[0.1, 0.5] (the paper's §6.1 recipe)."""
+    cpu = cpu_mean * rng.lognormal(0.0, 0.5, size=n)
+    proc = np.empty((n, num_types))
+    proc[:, 0] = cpu
+    for q in range(1, num_types):
+        acc = rng.uniform(*speedup, size=n)
+        nslow = int(round(slow_frac * n))
+        if nslow:
+            slow = rng.choice(n, size=nslow, replace=False)
+            acc[slow] = rng.uniform(0.1, 0.5, size=nslow)
+        proc[:, q] = cpu / acc
+    return proc
+
+
+def _machine(counts, rng: np.random.Generator | None = None) -> Machine:
+    if counts is not None:
+        return Machine(tuple(counts))
+    assert rng is not None
+    m = int(rng.choice((4, 8, 16, 32)))
+    k = int(rng.choice((1, 2, 4)))
+    return Machine.hybrid(m, k)
+
+
+# ------------------------------------------------------------------ families
+def chain_scenario(n: int = 20, num_types: int = 2, counts=None,
+                   seed: int = 0, **kw) -> Scenario:
+    rng = np.random.default_rng(seed)
+    proc = heterogeneous_times(n, num_types, rng, **kw)
+    g = TaskGraph.build(proc, [(i, i + 1) for i in range(n - 1)])
+    return Scenario(f"chain_n{n}_s{seed}", "chain", g, _machine(counts, rng), seed)
+
+
+def fork_join_scenario(width: int = 50, phases: int = 3, num_types: int = 2,
+                       counts=None, seed: int = 0) -> Scenario:
+    rng = np.random.default_rng(seed)
+    g = fork_join(width, phases, num_types=num_types, seed=seed)
+    return Scenario(f"forkjoin_w{width}_p{phases}_s{seed}", "fork_join", g,
+                    _machine(counts, rng), seed)
+
+
+def layered_scenario(n: int = 60, layers: int = 6, p_edge: float = 0.35,
+                     num_types: int = 2, counts=None, seed: int = 0,
+                     **kw) -> Scenario:
+    """STG-style: tasks binned into ranks, edges between consecutive ranks."""
+    rng = np.random.default_rng(seed)
+    rank = np.sort(rng.integers(0, layers, size=n))
+    edges = []
+    for lo in range(layers - 1):
+        a = np.flatnonzero(rank == lo)
+        b = np.flatnonzero(rank == lo + 1)
+        added = False
+        for i in a:
+            for j in b:
+                if rng.random() < p_edge:
+                    edges.append((int(i), int(j)))
+                    added = True
+        # keep consecutive ranks connected so the depth is really `layers`
+        if a.size and b.size and not added:
+            edges.append((int(rng.choice(a)), int(rng.choice(b))))
+    proc = heterogeneous_times(n, num_types, rng, **kw)
+    g = TaskGraph.build(proc, edges)
+    return Scenario(f"layered_n{n}_l{layers}_s{seed}", "layered", g,
+                    _machine(counts, rng), seed)
+
+
+def cholesky_scenario(nb_blocks: int = 5, block_size: int = 320,
+                      num_types: int = 2, counts=None, seed: int = 0) -> Scenario:
+    rng = np.random.default_rng(seed)
+    g = chameleon("potrf", nb_blocks, block_size, num_types=num_types, seed=seed)
+    return Scenario(f"cholesky_nb{nb_blocks}_b{block_size}_s{seed}", "cholesky",
+                    g, _machine(counts, rng), seed)
+
+
+def lu_scenario(nb_blocks: int = 5, block_size: int = 320,
+                num_types: int = 2, counts=None, seed: int = 0) -> Scenario:
+    rng = np.random.default_rng(seed)
+    g = chameleon("getrf", nb_blocks, block_size, num_types=num_types, seed=seed)
+    return Scenario(f"lu_nb{nb_blocks}_b{block_size}_s{seed}", "lu", g,
+                    _machine(counts, rng), seed)
+
+
+def random_scenario(n: int = 25, p_edge: float = 0.15, num_types: int = 2,
+                    counts=None, seed: int = 0, **kw) -> Scenario:
+    rng = np.random.default_rng(seed)
+    edges = [(i, j) for i in range(n) for j in range(i + 1, n)
+             if rng.random() < p_edge]
+    proc = heterogeneous_times(n, num_types, rng, **kw)
+    g = TaskGraph.build(proc, edges)
+    return Scenario(f"random_n{n}_s{seed}", "random", g, _machine(counts, rng),
+                    seed)
+
+
+def from_workloads(app: str = "posv", nb_blocks: int = 5, block_size: int = 320,
+                   num_types: int = 2, counts=None, seed: int = 0) -> Scenario:
+    """Bridge: any Chameleon application from ``repro.core.workloads``."""
+    rng = np.random.default_rng(seed)
+    g = chameleon(app, nb_blocks, block_size, num_types=num_types, seed=seed)
+    return Scenario(f"{app}_nb{nb_blocks}_b{block_size}_s{seed}", "workloads",
+                    g, _machine(counts, rng), seed)
+
+
+SCENARIO_FAMILIES: dict[str, Callable[..., Scenario]] = {
+    "chain": chain_scenario,
+    "fork_join": fork_join_scenario,
+    "layered": layered_scenario,
+    "cholesky": cholesky_scenario,
+    "lu": lu_scenario,
+    "random": random_scenario,
+    "from_workloads": from_workloads,
+}
+
+
+def make_scenario(family: str, **params) -> Scenario:
+    if family not in SCENARIO_FAMILIES:
+        raise ValueError(f"unknown family {family!r}; "
+                         f"have {sorted(SCENARIO_FAMILIES)}")
+    return SCENARIO_FAMILIES[family](**params)
+
+
+def default_suite(seed: int = 0, *, counts=(8, 2)) -> list[Scenario]:
+    """A small cross-family suite (≥ 5 families) for tests and smoke sweeps."""
+    return [
+        chain_scenario(n=16, counts=counts, seed=seed),
+        fork_join_scenario(width=20, phases=2, counts=counts, seed=seed + 1),
+        layered_scenario(n=40, layers=5, counts=counts, seed=seed + 2),
+        cholesky_scenario(nb_blocks=4, counts=counts, seed=seed + 3),
+        lu_scenario(nb_blocks=4, counts=counts, seed=seed + 4),
+        random_scenario(n=24, counts=counts, seed=seed + 5),
+    ]

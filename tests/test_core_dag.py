@@ -1,6 +1,7 @@
 """Unit + property tests for the task-graph substrate."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # dev extra: pip install -r requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
 from repro.core.dag import CPU, GPU, TaskGraph, chain

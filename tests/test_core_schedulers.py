@@ -1,6 +1,7 @@
 """Scheduling-phase policies: feasibility invariants + approximation bounds."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # dev extra: pip install -r requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
 from repro.core.bruteforce import brute_force_opt

@@ -1,0 +1,65 @@
+"""Theory-facing checks: ER-LS competitive bound, exact-vs-JAX HLP parity.
+
+* ER-LS is at most 4·√(m/k)-competitive (paper Thm 3).  We check it against
+  the *exhaustive* optimum on small instances — a strictly stronger
+  denominator than the LP bound the campaign uses.
+* The jitted first-order HLP solver must stay within tolerance of the exact
+  HiGHS LP: its λ(x) is feasible (never below LP*), the gap is sub-percent,
+  and the rounded allocation schedules to a comparable makespan (the LP
+  optimum is not unique, so allocations may legitimately differ task-wise).
+"""
+import numpy as np
+import pytest
+
+from repro.core.bruteforce import brute_force_opt, brute_force_schedule
+from repro.core.hlp import solve_hlp
+from repro.core.hlp_jax import solve_hlp_jax
+from repro.core.listsched import hlp_ols
+from repro.core.theory import erls_competitive_bound
+from repro.sim import Machine, make_scheduler, simulate
+from conftest import random_dag
+
+# (m, k, n): brute force is O(2^n · n! · m^n), so n shrinks as m grows
+SMALL_MACHINES = [(2, 1, 5), (3, 1, 5), (2, 2, 5), (4, 2, 4)]
+
+
+@pytest.mark.parametrize("mkn", SMALL_MACHINES)
+def test_erls_respects_competitive_bound_vs_bruteforce(mkn):
+    """ER-LS makespan <= 4·√(m/k) · OPT on exhaustive small instances."""
+    m, k, n = mkn
+    bound = erls_competitive_bound(m, k)
+    for seed in range(3):
+        g = random_dag(seed=200 + seed, n=n, p_edge=0.3)
+        opt = brute_force_opt(g, [m, k])
+        er = simulate(g, Machine.hybrid(m, k), make_scheduler("er_ls"),
+                      seed=0).makespan
+        assert er <= bound * opt + 1e-9, (mkn, seed, er / opt)
+
+
+def test_bruteforce_schedule_achieves_bruteforce_opt():
+    for seed in range(3):
+        g = random_dag(seed=300 + seed, n=5, p_edge=0.25)
+        counts = [2, 1]
+        sched = brute_force_schedule(g, counts)
+        sched.validate(g, counts)
+        assert sched.makespan == pytest.approx(brute_force_opt(g, counts))
+
+
+@pytest.mark.parametrize("seed", [0, 3, 7])
+def test_hlp_jax_matches_exact_lp_within_tolerance(seed):
+    """Shared-seed parity: feasible λ, sub-percent gap, comparable rounding."""
+    g = random_dag(seed, n=14)
+    m, k = 4, 2
+    exact = solve_hlp(g, m, k)
+    approx = solve_hlp_jax(g, m, k, iters=400, seed=0)
+    # λ(x) of any feasible x upper-bounds LP*; the solver must be feasible
+    assert approx.lp_value >= exact.lp_value - 1e-9
+    # ... and close to optimal
+    assert approx.lp_value <= exact.lp_value * 1.01
+    # the rounded allocations schedule to comparable makespans
+    ms_exact = hlp_ols(g, [m, k], exact.alloc).makespan
+    ms_jax = hlp_ols(g, [m, k], approx.alloc).makespan
+    assert ms_jax == pytest.approx(ms_exact, rel=0.25)
+    # rounding is consistent with each solver's own fractional solution
+    np.testing.assert_array_equal(approx.alloc, (approx.x_frac < 0.5))
+    np.testing.assert_array_equal(exact.alloc, (exact.x_frac < 0.5))

@@ -1,0 +1,155 @@
+"""Engine semantics: replay fidelity, determinism, noise, arrivals, batch.
+
+These are deterministic seeded-random sweeps (no hypothesis dependency) so
+the engine keeps real coverage even without the dev extra installed;
+``test_sim_properties.py`` layers hypothesis-driven search on top.
+"""
+import numpy as np
+import pytest
+
+from repro.core.dag import TaskGraph
+from repro.core.hlp import solve_hlp
+from repro.core.listsched import hlp_ols
+from repro.core.theory import makespan_lower_bound
+from repro.sim import (ADAPTERS, Machine, NoiseModel, make_scheduler,
+                       simulate)
+from repro.sim.batch import batch_makespans, sample_actual_batch, sweep_makespans
+from repro.sim.scenarios import SCENARIO_FAMILIES, default_suite, make_scenario
+from conftest import random_dag
+
+FAST_ADAPTERS = [n for n in ADAPTERS if n not in ("bruteforce", "hlp_jax_ols")]
+
+
+# ------------------------------------------------------------------ protocol
+@pytest.mark.parametrize("name", FAST_ADAPTERS)
+def test_every_adapter_runs_every_family(name):
+    """One unified entry point drives each algorithm over each family."""
+    for sc in default_suite(seed=0):
+        r = simulate(sc.graph, sc.machine, make_scheduler(name),
+                     noise=NoiseModel("lognormal", 0.1), seed=sc.seed)
+        assert r.makespan > 0
+        assert r.scheduler == name
+
+
+def test_zero_noise_replay_reproduces_planning_schedule():
+    """Without noise the engine's dynamic replay == the static schedule."""
+    g = random_dag(seed=11, n=30)
+    mach = Machine.hybrid(4, 2)
+    sol = solve_hlp(g, 4, 2)
+    planned = hlp_ols(g, [4, 2], sol.alloc).makespan
+    r = simulate(g, mach, make_scheduler("hlp_ols"), seed=0)
+    assert r.makespan == pytest.approx(planned, abs=1e-9)
+
+
+def test_same_seed_same_result():
+    sc = make_scenario("layered", n=40, layers=5, counts=(8, 2), seed=3)
+    a = simulate(sc.graph, sc.machine, make_scheduler("heft"),
+                 noise=NoiseModel("lognormal", 0.25), seed=123)
+    b = simulate(sc.graph, sc.machine, make_scheduler("heft"),
+                 noise=NoiseModel("lognormal", 0.25), seed=123)
+    assert a.makespan == b.makespan
+    np.testing.assert_array_equal(a.schedule.start, b.schedule.start)
+    c = simulate(sc.graph, sc.machine, make_scheduler("heft"),
+                 noise=NoiseModel("lognormal", 0.25), seed=124)
+    assert c.makespan != a.makespan
+
+
+def test_noise_models():
+    g = random_dag(seed=5, n=20)
+    rng = np.random.default_rng(0)
+    assert NoiseModel().sample(g.proc, rng) is g.proc
+    ln = NoiseModel("lognormal", 0.2).sample(g.proc, np.random.default_rng(0))
+    un = NoiseModel("uniform", 0.3).sample(g.proc, np.random.default_rng(0))
+    assert ln.shape == g.proc.shape and (ln > 0).all()
+    assert (un >= 0.7 * g.proc - 1e-12).all() and (un <= 1.3 * g.proc + 1e-12).all()
+    # same multiplier across types of one task (models task misprediction)
+    np.testing.assert_allclose(ln[:, 0] / g.proc[:, 0], ln[:, 1] / g.proc[:, 1])
+    with pytest.raises(ValueError):
+        NoiseModel("uniform", 1.5).sample(g.proc, rng)
+    with pytest.raises(ValueError):
+        NoiseModel("weird", 0.1).sample(g.proc, rng)
+
+
+def test_release_times_delay_starts():
+    g = random_dag(seed=9, n=15)
+    mach = Machine.hybrid(4, 2)
+    rel = g.level * 2.0
+    for name in ("hlp_ols", "er_ls"):
+        r = simulate(g, mach, make_scheduler(name), release=rel, seed=0)
+        assert (r.schedule.start >= rel - 1e-9).all()
+    # for a *fixed* plan, delaying releases can only delay the makespan
+    planned = simulate(g, mach, make_scheduler("hlp_ols"), seed=0)
+    delayed = simulate(g, mach, make_scheduler("hlp_ols"), release=rel, seed=0)
+    assert delayed.makespan >= planned.makespan - 1e-9
+
+
+def test_trace_records_are_ordered_and_complete():
+    sc = make_scenario("fork_join", width=10, phases=2, counts=(4, 2), seed=1)
+    r = simulate(sc.graph, sc.machine, make_scheduler("er_ls"),
+                 noise=NoiseModel("uniform", 0.2), seed=7, trace=True)
+    assert len(r.trace) == 2 * sc.graph.n
+    times = [e.time for e in r.trace]
+    assert times == sorted(times)
+    assert sum(e.event == "start" for e in r.trace) == sc.graph.n
+
+
+# --------------------------------------------------------------- batch path
+def test_batch_makespans_match_engine():
+    """The vmapped JAX sweep equals the scalar engine on shared seeds."""
+    sc = make_scenario("random", n=25, counts=(8, 2), seed=2)
+    noise = NoiseModel("lognormal", 0.15)
+    seeds = list(range(12))
+    for name in ("hlp_est", "hlp_ols", "heft"):
+        ms = sweep_makespans(sc.graph, sc.machine, make_scheduler(name),
+                             noise=noise, seeds=seeds)
+        ref = [simulate(sc.graph, sc.machine, make_scheduler(name),
+                        noise=noise, seed=s).makespan for s in seeds]
+        np.testing.assert_allclose(ms, ref, rtol=1e-5)
+
+
+def test_batch_rejects_online_and_bad_shapes():
+    sc = make_scenario("chain", n=8, counts=(2, 1), seed=0)
+    with pytest.raises(ValueError):
+        sweep_makespans(sc.graph, sc.machine, make_scheduler("er_ls"),
+                        noise=NoiseModel(), seeds=[0])
+    plan = make_scheduler("heft").allocate(sc.graph, sc.machine)
+    with pytest.raises(ValueError):
+        batch_makespans(sc.graph, plan, np.zeros((3, sc.graph.n + 1)))
+
+
+def test_sample_actual_batch_matches_engine_stream():
+    sc = make_scenario("layered", n=30, layers=4, counts=(4, 2), seed=4)
+    noise = NoiseModel("uniform", 0.25)
+    plan = make_scheduler("hlp_ols").allocate(sc.graph, sc.machine)
+    rows = sample_actual_batch(sc.graph, plan, noise, [42])
+    r = simulate(sc.graph, sc.machine, make_scheduler("hlp_ols"),
+                 noise=noise, seed=42)
+    alloc = np.asarray(plan.alloc, dtype=np.int64)
+    np.testing.assert_allclose(
+        rows[0], r.actual[np.arange(sc.graph.n), alloc])
+
+
+# -------------------------------------------------------------- lower bound
+def test_simulated_makespans_respect_universal_lower_bound():
+    """Sweep: every adapter × random DAGs × machines, schedule valid + LB."""
+    for seed in range(6):
+        g = random_dag(seed=100 + seed, n=int(5 + 3 * seed))
+        mach = Machine.hybrid(int(2 + seed % 3), 2)
+        lb = makespan_lower_bound(g, list(mach.counts))
+        for name in FAST_ADAPTERS:
+            r = simulate(g, mach, make_scheduler(name), seed=seed)
+            # validate=True already ran; the bound holds with exact times
+            assert r.makespan >= lb - 1e-9, (name, seed)
+
+
+def test_machine_and_scenario_registry():
+    assert Machine.hybrid(4, 2).counts == (4, 2)
+    assert Machine.hybrid(4, 2).total == 6
+    with pytest.raises(ValueError):
+        Machine((-1, 2))
+    assert set(SCENARIO_FAMILIES) >= {"chain", "fork_join", "layered",
+                                      "cholesky", "lu", "random"}
+    with pytest.raises(ValueError):
+        make_scenario("nope")
+    with pytest.raises(ValueError):
+        make_scheduler("nope")

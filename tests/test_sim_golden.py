@@ -1,0 +1,89 @@
+"""Golden regression: frozen makespans for fixed-seed scenarios.
+
+Any refactor that silently changes an algorithm's behavior (allocation LP,
+rounding rule, list-scheduling tie-break, engine replay semantics, noise
+stream) will shift one of these numbers.  Values were produced by
+``repro.sim.simulate`` at the recorded seeds; each entry is
+``(noise_free, lognormal_0.2)``.
+
+If a change is *intentional* (e.g. a better rounding rule), regenerate with::
+
+    PYTHONPATH=src python -c "import tests.test_sim_golden as t; t.regenerate()"
+
+and justify the shift in the PR description.
+"""
+import pytest
+
+from repro.sim import NoiseModel, make_scheduler, simulate
+from repro.sim.scenarios import default_suite
+
+ALGS = ("hlp_est", "hlp_ols", "heft", "er_ls")
+
+GOLDEN = {
+    "chain_n16_s0": {
+        "hlp_est": (15.800512616270, 14.259433070910),
+        "hlp_ols": (15.800512616270, 14.259433070910),
+        "heft": (15.800512616270, 14.259433070910),
+        "er_ls": (15.800512616270, 14.259433070910)},
+    "forkjoin_w20_p2_s1": {
+        "hlp_est": (10.349934186021, 10.198662360211),
+        "hlp_ols": (9.582379460296, 9.807471063176),
+        "heft": (9.582379460296, 9.807471063176),
+        "er_ls": (10.373260227729, 10.541117074477)},
+    "layered_n40_l5_s2": {
+        "hlp_est": (30.553080887317, 30.197518499963),
+        "hlp_ols": (27.586098603747, 27.325541731090),
+        "heft": (28.138477381589, 27.921566192763),
+        "er_ls": (29.666192166525, 29.464855034888)},
+    "cholesky_nb4_b320_s3": {
+        "hlp_est": (4.260728561705, 4.443546826203),
+        "hlp_ols": (4.158210612895, 4.360776356842),
+        "heft": (4.290793671027, 4.504393778649),
+        "er_ls": (4.158210612895, 4.488542275076)},
+    "lu_nb4_b320_s4": {
+        "hlp_est": (7.712679516859, 6.119843325425),
+        "hlp_ols": (6.303366424802, 5.606310233478),
+        "heft": (6.997494205156, 5.623757820853),
+        "er_ls": (7.448698228994, 5.845360367625)},
+    "random_n24_s5": {
+        "hlp_est": (20.558144350840, 19.178618089796),
+        "hlp_ols": (20.318756800890, 18.853222905564),
+        "heft": (20.318756800890, 18.853222905564),
+        "er_ls": (20.959118547022, 19.213718049040)},
+}
+
+
+def _measure():
+    for sc in default_suite(seed=0):
+        for alg in ALGS:
+            v0 = simulate(sc.graph, sc.machine, make_scheduler(alg),
+                          seed=sc.seed).makespan
+            v1 = simulate(sc.graph, sc.machine, make_scheduler(alg),
+                          noise=NoiseModel("lognormal", 0.2),
+                          seed=sc.seed).makespan
+            yield sc.name, alg, v0, v1
+
+
+@pytest.mark.parametrize("scenario", sorted(GOLDEN))
+def test_scenario_names_are_stable(scenario):
+    assert scenario in {sc.name for sc in default_suite(seed=0)}
+
+
+def test_golden_makespans():
+    for name, alg, v0, v1 in _measure():
+        exp0, exp1 = GOLDEN[name][alg]
+        assert v0 == pytest.approx(exp0, rel=1e-9), (name, alg, "noise-free")
+        assert v1 == pytest.approx(exp1, rel=1e-9), (name, alg, "lognormal")
+
+
+def regenerate():  # pragma: no cover - maintenance helper
+    print("GOLDEN = {")
+    cur = None
+    for name, alg, v0, v1 in _measure():
+        if name != cur:
+            if cur is not None:
+                print("    },")
+            print(f"    {name!r}: {{")
+            cur = name
+        print(f"        {alg!r}: ({v0:.12f}, {v1:.12f}),")
+    print("    },\n}")

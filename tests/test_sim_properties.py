@@ -1,0 +1,58 @@
+"""Property-based tests for the simulation engine (needs the dev extra).
+
+For random DAGs, machines, noise levels and every scheduler adapter: the
+produced ``Schedule`` passes ``Schedule.validate`` against the *realized*
+times and its makespan dominates the universal lower bound of
+``repro.core.theory.makespan_lower_bound`` evaluated on those times.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+pytest.importorskip("hypothesis")  # dev extra: pip install -r requirements-dev.txt
+from hypothesis import given, settings, strategies as st
+
+from repro.core.theory import makespan_lower_bound
+from repro.sim import ADAPTERS, Machine, NoiseModel, make_scheduler, simulate
+from conftest import random_dag
+
+CHEAP = [n for n in ADAPTERS if n not in ("bruteforce", "hlp_jax_ols")]
+MACHINES = [(2, 1), (4, 2), (8, 2), (3, 3)]
+NOISES = [NoiseModel(), NoiseModel("lognormal", 0.2), NoiseModel("uniform", 0.4)]
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10 ** 6), st.sampled_from(MACHINES),
+       st.sampled_from(CHEAP), st.integers(0, 2))
+def test_simulated_schedule_is_feasible_and_above_lower_bound(seed, mk, name, ni):
+    g = random_dag(seed)
+    mach = Machine.hybrid(*mk)
+    r = simulate(g, mach, make_scheduler(name), noise=NOISES[ni], seed=seed)
+    # validate=True already checked precedence + non-overlap on realized times
+    g_actual = dataclasses.replace(g, proc=r.actual)
+    lb = makespan_lower_bound(g_actual, list(mach.counts))
+    assert r.makespan >= lb - 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10 ** 6), st.sampled_from(CHEAP))
+def test_simulation_is_deterministic_per_seed(seed, name):
+    g = random_dag(seed, n=12)
+    mach = Machine.hybrid(4, 2)
+    noise = NoiseModel("lognormal", 0.3)
+    a = simulate(g, mach, make_scheduler(name), noise=noise, seed=seed)
+    b = simulate(g, mach, make_scheduler(name), noise=noise, seed=seed)
+    np.testing.assert_array_equal(a.schedule.start, b.schedule.start)
+    np.testing.assert_array_equal(a.schedule.alloc, b.schedule.alloc)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_bruteforce_adapter_dominates_everything(seed):
+    """On tiny instances the oracle adapter is <= every other adapter."""
+    g = random_dag(seed, n=5, p_edge=0.3)
+    mach = Machine.hybrid(2, 1)
+    opt = simulate(g, mach, make_scheduler("bruteforce"), seed=0).makespan
+    for name in CHEAP:
+        ms = simulate(g, mach, make_scheduler(name), seed=0).makespan
+        assert opt <= ms + 1e-9, name
