@@ -1,8 +1,19 @@
-"""Render EXPERIMENTS.md §Dry-run/§Roofline tables from dry-run artifacts."""
+"""Render EXPERIMENTS.md tables from benchmark artifacts.
+
+Sections:
+  * §Dry-run / §Roofline — from ``artifacts/dryrun_results.jsonl``
+    (``python -m repro.launch.dryrun``).
+  * §Simulation campaign — from ``artifacts/sim_sweep.csv``
+    (``python -m benchmarks.run --only sim``): per scenario family, the
+    mean and p95 makespan / lower-bound ratio of every scheduler adapter,
+    the companion of the paper's Fig. 3–7 ratio plots.
+"""
 from __future__ import annotations
 
+import csv
 import json
 import os
+from collections import defaultdict
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
 
@@ -37,5 +48,51 @@ def render(path: str = None) -> str:
     return "\n".join(out)
 
 
+def render_sim(path: str = None) -> str:
+    """Per-(family, scheduler) mean/p95 makespan ratio table for sim_sweep."""
+    path = path or os.path.join(ART, "sim_sweep.csv")
+    if not os.path.exists(path):
+        return ("\n### Simulation campaign\n\n(no artifacts/sim_sweep.csv — "
+                "run: python -m benchmarks.run --only sim)\n")
+    with open(path, newline="") as f:
+        rows = list(csv.DictReader(f))
+    # family -> scheduler -> list of (mean_ratio, p95_ratio)
+    cell: dict[str, dict[str, list[tuple[float, float]]]] = defaultdict(
+        lambda: defaultdict(list))
+    scheds: list[str] = []
+    for r in rows:
+        lb = float(r["lower_bound"])
+        if lb <= 0:
+            continue
+        if r["scheduler"] not in scheds:
+            scheds.append(r["scheduler"])
+        fam = r["family"] + (" (comm)" if "ccr" in r["scenario"]
+                             or r["family"] == "netbound" else "")
+        cell[fam][r["scheduler"]].append(
+            (float(r["makespan_noisy_mean"]) / lb,
+             float(r["makespan_noisy_p95"]) / lb))
+    out = ["\n### Simulation campaign (makespan / lower bound; mean | p95 "
+           "over scenarios × noise seeds)\n"]
+    out.append("| family | " + " | ".join(scheds) + " |")
+    out.append("|---" * (len(scheds) + 1) + "|")
+    for fam in sorted(cell):
+        row = [fam]
+        for s in scheds:
+            v = cell[fam].get(s)
+            if not v:
+                row.append("—")
+            else:
+                mean = sum(x[0] for x in v) / len(v)
+                p95 = sum(x[1] for x in v) / len(v)
+                row.append(f"{mean:.3f} \\| {p95:.3f}")
+        out.append("| " + " | ".join(row) + " |")
+    return "\n".join(out)
+
+
 if __name__ == "__main__":
-    print(render())
+    try:
+        print(render())
+    except FileNotFoundError:
+        print("(no artifacts/dryrun_results.jsonl — "
+              "run: python -m repro.launch.dryrun)")
+    print(render_sim())

@@ -92,12 +92,17 @@ def bench_sim(full: bool) -> list[str]:
         lines.append(f"sim/{alg},{per:.0f},"
                      f"mean_ratio_lb={r['ratios'][alg]:.4f};"
                      f"noise_degrade={r['ratios']['degrade_' + alg]:.4f}")
+    gain = (r["ratios"]["heft_comm_gain"] - 1) * 100
+    lines.append(f"sim/heft_comm_gain,{per:.0f},oblivious_penalty_pct={gain:.2f}")
     print(f"# sim: {r['runs']} runs over {r['scenarios']} scenarios in "
-          f"{dt:.1f}s | LB ratios " +
+          f"{dt:.1f}s | {r['plans']} static plans in {r['compiles']} XLA "
+          f"compiles (bucketed) | LB ratios " +
           " ".join(f"{a}={r['ratios'][a]:.3f}" for a in r["schedulers"]))
     print("#   noise degradation (noisy/clean): " +
           " ".join(f"{a}={r['ratios']['degrade_' + a]:.3f}"
                    for a in r["schedulers"]))
+    print(f"#   comm-aware HEFT vs oblivious: oblivious pays {gain:+.1f}% "
+          f"(mean over comm scenarios; engine charges comm either way)")
     return lines
 
 

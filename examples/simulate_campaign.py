@@ -3,8 +3,16 @@
 The ``repro.sim`` engine drives the paper's offline two-phase algorithms
 (HLP-EST/OLS, HEFT), the online ER-LS/EFT/greedy rules, and the exhaustive
 oracle through a single ``Scheduler`` protocol; static plans are replayed
-under lognormal runtime noise, and a whole noise sweep evaluates in one
-vmapped JAX pass.
+under lognormal runtime noise.  The campaign suite mixes the paper's
+communication-free families with CCR-enabled variants and an ESTEE-style
+network-bound instance: edges carry transfer costs that are charged whenever
+a dependence crosses the CPU/GPU type boundary.
+
+All static plans of the whole campaign — every (scenario, scheduler) pair,
+different DAGs and sizes — are evaluated by the padded/bucketed batch path:
+plans are grouped by the power-of-two envelope of (n, fan-in), padded to
+per-bucket maxima, and each bucket runs as ONE jitted vmapped scan (sharded
+across devices when more than one is visible).
 
   PYTHONPATH=src python examples/simulate_campaign.py
 """
@@ -12,39 +20,53 @@ import numpy as np
 
 from repro.core.theory import makespan_lower_bound
 from repro.sim import NoiseModel, make_scheduler, simulate
-from repro.sim.batch import batch_makespans, sample_actual_batch
-from repro.sim.scenarios import default_suite
+from repro.sim.batch import (bucket_plans, bucketed_makespans,
+                             sample_actual_batch, trace_count)
+from repro.sim.scenarios import comm_suite, default_suite
 
 NOISE = NoiseModel("lognormal", 0.2)
 SEEDS = list(range(16))
-STATIC = ("hlp_est", "hlp_ols", "heft")
+STATIC = ("hlp_est", "hlp_ols", "heft", "heft_nocomm")
 ONLINE = ("er_ls", "eft", "greedy_r2")
 
-print(f"{'scenario':<24} {'scheduler':<10} {'clean':>8} {'noisy μ':>8} "
+suite = default_suite(seed=0) + comm_suite(seed=50, ccr=0.5)
+
+# Allocate each static plan once, then one bucketed evaluation for the
+# entire (scenario × scheduler × seed) grid.
+plans = [(sc.graph, make_scheduler(name).allocate(sc.graph, sc.machine))
+         for sc in suite for name in STATIC]
+grids = [sample_actual_batch(g, plan, NOISE, SEEDS) for g, plan in plans]
+t0 = trace_count("bucket")
+sweeps = bucketed_makespans(plans, grids)
+print(f"{len(plans)} static plans -> {len(bucket_plans(plans))} shape "
+      f"buckets, {trace_count('bucket') - t0} XLA compiles\n")
+
+print(f"{'scenario':<28} {'scheduler':<12} {'noisy μ':>8} "
       f"{'noisy σ':>8} {'vs LB':>6}")
-for sc in default_suite(seed=0):
+it = iter(sweeps)
+for sc in suite:
     lb = makespan_lower_bound(sc.graph, sc.counts)
-    for name in STATIC + ONLINE:
-        if name in STATIC:   # one allocation, all noise seeds in one vmap
-            plan = make_scheduler(name).allocate(sc.graph, sc.machine)
-            clean = float(batch_makespans(
-                sc.graph, plan,
-                sample_actual_batch(sc.graph, plan, NoiseModel(), [0]))[0])
-            ms = batch_makespans(
-                sc.graph, plan, sample_actual_batch(sc.graph, plan, NOISE,
-                                                    SEEDS))
-        else:                # arrival-driven: scalar engine per seed
-            clean = simulate(sc.graph, sc.machine, make_scheduler(name),
-                             seed=0).makespan
-            ms = np.array([simulate(sc.graph, sc.machine,
-                                    make_scheduler(name), noise=NOISE,
-                                    seed=s).makespan for s in SEEDS])
-        print(f"{sc.name:<24} {name:<10} {clean:8.3f} {ms.mean():8.3f} "
-              f"{ms.std():8.3f} {clean / lb:6.3f}")
+    for name in STATIC:
+        ms = np.asarray(next(it))
+        print(f"{sc.name:<28} {name:<12} {ms.mean():8.3f} "
+              f"{ms.std():8.3f} {ms.mean() / lb:6.3f}")
+    for name in ONLINE:   # arrival-driven: scalar engine per seed
+        ms = np.array([simulate(sc.graph, sc.machine, make_scheduler(name),
+                                noise=NOISE, seed=s).makespan for s in SEEDS])
+        print(f"{sc.name:<28} {name:<12} {ms.mean():8.3f} "
+              f"{ms.std():8.3f} {ms.mean() / lb:6.3f}")
     print()
 
-print("reproducibility check: two runs at seed=7 ...", end=" ")
-sc = default_suite(seed=0)[2]
+print("communication awareness on the network-bound scenario:")
+sc = next(s for s in suite if s.family == "netbound")
+aware = simulate(sc.graph, sc.machine, make_scheduler("heft"), seed=0).makespan
+blind = simulate(sc.graph, sc.machine, make_scheduler("heft_nocomm"),
+                 seed=0).makespan
+print(f"  comm-aware HEFT {aware:.3f} vs oblivious {blind:.3f} "
+      f"(+{(blind / aware - 1) * 100:.1f}% paid for ignoring the network)")
+
+print("\nreproducibility check: two runs at seed=7 ...", end=" ")
+sc = suite[2]
 a = simulate(sc.graph, sc.machine, make_scheduler("hlp_ols"), noise=NOISE,
              seed=7).makespan
 b = simulate(sc.graph, sc.machine, make_scheduler("hlp_ols"), noise=NOISE,

@@ -5,9 +5,19 @@ takes ``proc[j, q]`` time units on a processor of type q.  For the hybrid
 (CPU, GPU) case Q=2 with the convention q=0 -> CPU (p-bar), q=1 -> GPU
 (p-underbar), matching the paper's notation.
 
+Beyond the paper's zero-cost machine model, every edge optionally carries a
+*transfer cost* ``comm[e]`` (default zero): when the two endpoints run on
+different resource types, the successor's data is ready only ``comm[e]``
+time units after the predecessor finishes.  This is the per-edge network
+model of ESTEE-style simulators and the StarPU/Chameleon substrate the
+paper actually ran on; with ``comm == 0`` every algorithm below reduces
+bit-for-bit to the paper's communication-free semantics.
+
 The representation is fully vectorized (CSR adjacency + topological levels) so
 that critical-path / rank computations run as numpy sweeps (and, in
-``repro.core.hlp_jax``, as jitted JAX level-scans).
+``repro.core.hlp_jax``, as jitted JAX level-scans).  The CSR arrays carry the
+originating edge index (``pred_eid`` / ``succ_eid``) so per-edge costs are
+addressable from either endpoint without searching.
 """
 from __future__ import annotations
 
@@ -21,13 +31,17 @@ CPU, GPU = 0, 1  # resource-type indices for the hybrid (Q=2) case
 
 @dataclasses.dataclass(frozen=True)
 class TaskGraph:
-    """Immutable DAG with per-type processing times.
+    """Immutable DAG with per-type processing times and per-edge transfer costs.
 
     Attributes:
       proc:    (n, Q) float64 — processing time of task j on resource type q.
       edges:   (e, 2) int32   — (pred, succ) pairs.
+      comm:    (e,) float64   — transfer cost of each edge, charged when the
+                                endpoints are placed on *different* types.
       pred_ptr/pred_idx: CSR of predecessors.
+      pred_eid: edge index (row of ``edges``/``comm``) aligned with pred_idx.
       succ_ptr/succ_idx: CSR of successors.
+      succ_eid: edge index aligned with succ_idx.
       topo:    (n,) int32     — a topological order.
       level:   (n,) int32     — topological level (longest #edges from a source).
       names:   optional task names (kernel class etc.).
@@ -35,10 +49,13 @@ class TaskGraph:
 
     proc: np.ndarray
     edges: np.ndarray
+    comm: np.ndarray
     pred_ptr: np.ndarray
     pred_idx: np.ndarray
+    pred_eid: np.ndarray
     succ_ptr: np.ndarray
     succ_idx: np.ndarray
+    succ_eid: np.ndarray
     topo: np.ndarray
     level: np.ndarray
     names: tuple[str, ...] | None = None
@@ -46,7 +63,8 @@ class TaskGraph:
     # ------------------------------------------------------------------ build
     @staticmethod
     def build(proc: np.ndarray, edges: Iterable[tuple[int, int]],
-              names: Sequence[str] | None = None) -> "TaskGraph":
+              names: Sequence[str] | None = None,
+              comm: np.ndarray | None = None) -> "TaskGraph":
         proc = np.asarray(proc, dtype=np.float64)
         if proc.ndim != 2:
             raise ValueError(f"proc must be (n, Q), got {proc.shape}")
@@ -56,21 +74,31 @@ class TaskGraph:
             raise ValueError("edge endpoint out of range")
         if e.size and np.any(e[:, 0] == e[:, 1]):
             raise ValueError("self-loop")
+        if comm is None:
+            comm = np.zeros(e.shape[0], dtype=np.float64)
+        else:
+            comm = np.asarray(comm, dtype=np.float64)
+            if comm.shape != (e.shape[0],):
+                raise ValueError(f"comm must be ({e.shape[0]},), got {comm.shape}")
+            if (comm < 0).any():
+                raise ValueError("negative transfer cost")
 
-        def csr(targets: np.ndarray, keys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        def csr(targets: np.ndarray, keys: np.ndarray):
             order = np.argsort(keys, kind="stable")
             idx = targets[order].astype(np.int32)
+            eid = order.astype(np.int32)
             ptr = np.zeros(n + 1, dtype=np.int64)
             np.add.at(ptr, keys + 1, 1)
             np.cumsum(ptr, out=ptr)
-            return ptr, idx
+            return ptr, idx, eid
 
         if e.size:
-            pred_ptr, pred_idx = csr(e[:, 0], e[:, 1])  # preds of j
-            succ_ptr, succ_idx = csr(e[:, 1], e[:, 0])  # succs of i
+            pred_ptr, pred_idx, pred_eid = csr(e[:, 0], e[:, 1])  # preds of j
+            succ_ptr, succ_idx, succ_eid = csr(e[:, 1], e[:, 0])  # succs of i
         else:
             pred_ptr = np.zeros(n + 1, dtype=np.int64); pred_idx = np.zeros(0, np.int32)
             succ_ptr = np.zeros(n + 1, dtype=np.int64); succ_idx = np.zeros(0, np.int32)
+            pred_eid = np.zeros(0, np.int32); succ_eid = np.zeros(0, np.int32)
 
         # Kahn topological sort + level computation.
         indeg = np.diff(pred_ptr).astype(np.int64)
@@ -92,8 +120,10 @@ class TaskGraph:
                     topo[head] = v; head += 1
         if head != n:
             raise ValueError("graph has a cycle")
-        return TaskGraph(proc=proc, edges=e, pred_ptr=pred_ptr, pred_idx=pred_idx,
-                         succ_ptr=succ_ptr, succ_idx=succ_idx, topo=topo, level=level,
+        return TaskGraph(proc=proc, edges=e, comm=comm,
+                         pred_ptr=pred_ptr, pred_idx=pred_idx, pred_eid=pred_eid,
+                         succ_ptr=succ_ptr, succ_idx=succ_idx, succ_eid=succ_eid,
+                         topo=topo, level=level,
                          names=tuple(names) if names is not None else None)
 
     # ------------------------------------------------------------- properties
@@ -109,11 +139,32 @@ class TaskGraph:
     def num_edges(self) -> int:
         return self.edges.shape[0]
 
+    @property
+    def has_comm(self) -> bool:
+        """True when any edge carries a nonzero transfer cost."""
+        return bool(self.comm.size) and bool(self.comm.any())
+
     def preds(self, j: int) -> np.ndarray:
         return self.pred_idx[self.pred_ptr[j]:self.pred_ptr[j + 1]]
 
     def succs(self, j: int) -> np.ndarray:
         return self.succ_idx[self.succ_ptr[j]:self.succ_ptr[j + 1]]
+
+    def pred_edges(self, j: int) -> np.ndarray:
+        """Edge indices (rows of ``edges``/``comm``) of j's incoming edges."""
+        return self.pred_eid[self.pred_ptr[j]:self.pred_ptr[j + 1]]
+
+    def succ_edges(self, j: int) -> np.ndarray:
+        """Edge indices of j's outgoing edges, aligned with ``succs(j)``."""
+        return self.succ_eid[self.succ_ptr[j]:self.succ_ptr[j + 1]]
+
+    def with_comm(self, comm: np.ndarray | float) -> "TaskGraph":
+        """Copy of this graph with new per-edge transfer costs."""
+        c = np.broadcast_to(np.asarray(comm, dtype=np.float64),
+                            (self.num_edges,)).copy()
+        if (c < 0).any():
+            raise ValueError("negative transfer cost")
+        return dataclasses.replace(self, comm=c)
 
     # ------------------------------------------------------------ graph algos
     def alloc_times(self, alloc: np.ndarray) -> np.ndarray:
@@ -125,41 +176,70 @@ class TaskGraph:
         assert self.num_types == 2
         return self.proc[:, CPU] * x + self.proc[:, GPU] * (1.0 - x)
 
-    def critical_path(self, times: np.ndarray) -> float:
-        """Longest path weight (task lengths ``times``) — forward sweep in topo order."""
+    def edge_delays(self, alloc: np.ndarray) -> np.ndarray:
+        """(e,) effective transfer delay of each edge under an allocation:
+        ``comm[e]`` where the endpoints sit on different types, else 0."""
+        if not self.num_edges:
+            return np.zeros(0)
+        a = np.asarray(alloc, dtype=np.int64)
+        cross = a[self.edges[:, 0]] != a[self.edges[:, 1]]
+        return np.where(cross, self.comm, 0.0)
+
+    def critical_path(self, times: np.ndarray,
+                      edge_delay: np.ndarray | None = None) -> float:
+        """Longest path weight (task lengths ``times``, optional per-edge
+        delays) — forward sweep in topo order."""
         finish = np.zeros(self.n)
         for u in self.topo:
             start = 0.0
             p0, p1 = self.pred_ptr[u], self.pred_ptr[u + 1]
             if p1 > p0:
-                start = finish[self.pred_idx[p0:p1]].max()
+                pf = finish[self.pred_idx[p0:p1]]
+                if edge_delay is not None:
+                    pf = pf + edge_delay[self.pred_eid[p0:p1]]
+                start = pf.max()
             finish[u] = start + times[u]
         return float(finish.max()) if self.n else 0.0
 
-    def upward_rank(self, times: np.ndarray) -> np.ndarray:
-        """rank(T_j) = times[j] + max_{i in succ(j)} rank(T_i) (paper §4.1 / HEFT)."""
+    def upward_rank(self, times: np.ndarray,
+                    edge_delay: np.ndarray | None = None) -> np.ndarray:
+        """rank(T_j) = times[j] + max_{i in succ(j)} (delay_ji + rank(T_i))
+        (paper §4.1 / HEFT; delays default to zero = the paper's model)."""
         rank = np.zeros(self.n)
         for u in self.topo[::-1]:
             s0, s1 = self.succ_ptr[u], self.succ_ptr[u + 1]
-            best = rank[self.succ_idx[s0:s1]].max() if s1 > s0 else 0.0
+            if s1 > s0:
+                sr = rank[self.succ_idx[s0:s1]]
+                if edge_delay is not None:
+                    sr = sr + edge_delay[self.succ_eid[s0:s1]]
+                best = sr.max()
+            else:
+                best = 0.0
             rank[u] = times[u] + best
         return rank
 
-    def earliest_ready(self, times: np.ndarray) -> np.ndarray:
+    def earliest_ready(self, times: np.ndarray,
+                       edge_delay: np.ndarray | None = None) -> np.ndarray:
         """Per-task earliest start ignoring resource limits (downward pass)."""
         est = np.zeros(self.n)
         for u in self.topo:
             p0, p1 = self.pred_ptr[u], self.pred_ptr[u + 1]
             if p1 > p0:
                 pi = self.pred_idx[p0:p1]
-                est[u] = (est[pi] + times[pi]).max()
+                fin = est[pi] + times[pi]
+                if edge_delay is not None:
+                    fin = fin + edge_delay[self.pred_eid[p0:p1]]
+                est[u] = fin.max()
         return est
 
     # ---------------------------------------------------------------- helpers
     def graham_lower_bound(self, counts: Sequence[int], alloc: np.ndarray) -> float:
-        """max(CP, load_q / m_q) — the lower bound HLP optimizes, for integral alloc."""
+        """max(CP, load_q / m_q) — the lower bound HLP optimizes, for integral
+        alloc.  The CP term charges cross-type transfer delays (zero under the
+        paper's model)."""
         t = self.alloc_times(alloc)
-        cp = self.critical_path(t)
+        cp = self.critical_path(t, self.edge_delays(alloc) if self.has_comm
+                                else None)
         loads = [t[alloc == q].sum() / counts[q] for q in range(self.num_types)]
         return max([cp] + loads)
 

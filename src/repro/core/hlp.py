@@ -12,6 +12,18 @@ HLP (hybrid, Q=2) minimizes λ over fractional allocations x_j ∈ [0,1]
 
 Rounding (paper §3): x_j >= 1/2  ->  CPU side, else GPU side.
 
+The LP optimum is degenerate: off-critical-path tasks with load slack can sit
+anywhere in [0, 1] without moving λ, so two optimal solvers (HiGHS here, the
+first-order JAX solver in ``repro.core.hlp_jax``) legitimately return
+different fractional solutions and hence different rounded allocations.
+``canonical_round`` removes that freedom with a *shared deterministic
+tie-break*: every task whose side is not pinned by λ is snapped to its
+faster side, in natural task order, accepting a snap only while λ stays
+within a small slack of the input solution's λ.  Passing ``canonical=True``
+to either solver routes its rounding through this function, which makes the
+two solvers' allocations comparable task-wise (asserted in
+``tests/test_sim_bounds.py``); the default rounding is unchanged.
+
 QHLP (Q >= 2, paper §5): variables x_{j,q}, Σ_q x_{j,q} = 1; rounding to
 argmax_q x_{j,q}, ties broken toward the smallest processing time.
 
@@ -40,7 +52,40 @@ class HLPSolution:
 
 
 # --------------------------------------------------------------------- hybrid
-def solve_hlp(g: TaskGraph, m: int, k: int) -> HLPSolution:
+def canonical_round(g: TaskGraph, m: int, k: int, x: np.ndarray, *,
+                    slack: float = 0.02) -> np.ndarray:
+    """Deterministic degeneracy-free rounding of a (near-)optimal hybrid x.
+
+    The input ``x`` enters only through its λ: the λ budget is
+    ``λ(x)·(1 + slack)``, and the construction itself is a pure function of
+    ``(g, m, k, budget)`` — tasks are processed in natural order against a
+    deterministic context in which every undecided task sits on its faster
+    side, each task taking its faster side if the context's λ stays within
+    budget and the slower side otherwise.  Two near-optimal fractional
+    solutions of the same instance therefore yield identical allocations
+    unless some decision's λ lands inside their (sub-percent) λ gap.
+
+    Cost: up to two full λ evaluations per task, O(n·(n+e)) total — fine
+    for the parity-test sizes this opt-in mode exists for; keep the default
+    threshold rounding on large instances.
+    """
+    pc, pg = g.proc[:, CPU], g.proc[:, GPU]
+    budget = g.lp_objective([m, k], x) * (1.0 + slack)
+    fast = (pc <= pg).astype(np.float64)        # 1 = CPU is the faster side
+    y = fast.copy()                             # context: undecided -> faster
+    for j in range(g.n):
+        lam_fast = g.lp_objective([m, k], y)    # y[j] already sits at fast[j]
+        if lam_fast > budget:
+            # over budget on the faster side: keep whichever side hurts the
+            # context λ less (the budget stays the shared reference point)
+            y[j] = 1.0 - fast[j]
+            if g.lp_objective([m, k], y) > max(budget, lam_fast):
+                y[j] = fast[j]
+    return np.where(y >= 0.5, CPU, GPU).astype(np.int32)
+
+
+def solve_hlp(g: TaskGraph, m: int, k: int, *,
+              canonical: bool = False) -> HLPSolution:
     """Exact LP relaxation of HLP for the hybrid (m CPUs, k GPUs) platform."""
     if g.num_types != 2:
         raise ValueError("solve_hlp is for Q=2; use solve_qhlp")
@@ -81,7 +126,8 @@ def solve_hlp(g: TaskGraph, m: int, k: int) -> HLPSolution:
     if not res.success:
         raise RuntimeError(f"HLP LP failed: {res.message}")
     x = np.clip(res.x[:n], 0.0, 1.0)
-    alloc = np.where(x >= 0.5, CPU, GPU).astype(np.int32)
+    alloc = (canonical_round(g, m, k, x) if canonical
+             else np.where(x >= 0.5, CPU, GPU).astype(np.int32))
     return HLPSolution(x_frac=x, lp_value=float(res.fun), alloc=alloc)
 
 

@@ -140,8 +140,15 @@ def _solve(d: PaddedDag, m: int, k: int, iters: int, seed: int):
 
 
 def solve_hlp_jax(g: TaskGraph, m: int, k: int, iters: int = 400,
-                  seed: int = 0) -> HLPSolution:
-    """Drop-in replacement for ``hlp.solve_hlp`` (approximate but jitted/scalable)."""
+                  seed: int = 0, *, canonical: bool = False) -> HLPSolution:
+    """Drop-in replacement for ``hlp.solve_hlp`` (approximate but jitted/scalable).
+
+    ``canonical=True`` routes the rounding through the deterministic
+    degeneracy-free tie-break shared with the exact solver
+    (``hlp.canonical_round``), making the two allocations comparable
+    task-wise even though the fractional optima differ."""
+    from .hlp import canonical_round
+
     if g.num_types != 2:
         raise ValueError("hybrid solver: Q must be 2")
     d = PaddedDag.from_graph(g)
@@ -149,6 +156,7 @@ def solve_hlp_jax(g: TaskGraph, m: int, k: int, iters: int = 400,
     x = np.asarray(x, dtype=np.float64)
     # λ(x) is exact for the returned iterate -> a *feasible* LP objective.
     val = g.lp_objective([m, k], x)
-    alloc = np.where(x >= 0.5, CPU, GPU).astype(np.int32)
+    alloc = (canonical_round(g, m, k, x) if canonical
+             else np.where(x >= 0.5, CPU, GPU).astype(np.int32))
     return HLPSolution(x_frac=x, lp_value=float(val), alloc=alloc,
                        status="first-order")

@@ -13,10 +13,20 @@ Semantics follow the paper:
   allocated to q exists, start the highest-priority one (event-driven, so no
   artificial idling).  HLP-EST uses arbitrary (natural-order) priority; HLP-OLS
   uses the post-rounding critical-path rank (paper §4.1).
-* ``heft``              — insertion-based HEFT (Topcuoglu et al.) with the paper's
-  simplified rank (no communication): rank_j = avg_j + max_{i∈succ} rank_i,
-  avg_j = Σ_q m_q p_{j,q} / Σ_q m_q; each task goes to the (processor, gap)
-  minimizing its finish time.
+* ``heft``              — insertion-based HEFT (Topcuoglu et al.).  With zero edge
+  costs it uses the paper's simplified rank (no communication):
+  rank_j = avg_j + max_{i∈succ} rank_i, avg_j = Σ_q m_q p_{j,q} / Σ_q m_q;
+  each task goes to the (processor, gap) minimizing its finish time.  When the
+  graph carries transfer costs (``g.comm``) the rank adds the *expected*
+  cross-type cost per edge and the insertion phase charges ``comm[i→j]``
+  whenever the candidate type differs from the predecessor's — the full
+  communication-aware HEFT of Topcuoglu et al., which the paper's model
+  omits.  Pass ``comm_aware=False`` to plan obliviously (the engine still
+  charges transfers at replay; useful as a baseline).
+
+All ready-time computations below charge ``g.comm[e]`` on an edge whose
+endpoints are committed to different resource types; with ``g.comm == 0``
+(the default) everything reduces exactly to the paper's semantics.
 """
 from __future__ import annotations
 
@@ -59,8 +69,9 @@ class Schedule:
             raise AssertionError("finish != start + processing time")
         if (self.start < -tol).any():
             raise AssertionError("negative start time")
-        for i, j in g.edges:
-            if self.start[j] < self.finish[i] - tol:
+        delay = g.edge_delays(self.alloc)
+        for e, (i, j) in enumerate(g.edges):
+            if self.start[j] < self.finish[i] + delay[e] - tol:
                 raise AssertionError(f"precedence violated on edge ({i},{j})")
         for q in range(g.num_types):
             if counts[q] == 0:
@@ -89,6 +100,7 @@ def list_schedule(g: TaskGraph, counts: list[int], alloc: np.ndarray,
     alloc = np.asarray(alloc, dtype=np.int32)
     pr = np.zeros(n) if priority is None else np.asarray(priority, dtype=np.float64)
     times = g.alloc_times(alloc)
+    delay = g.edge_delays(alloc)   # transfer delay per edge under this alloc
 
     indeg = np.diff(g.pred_ptr).astype(np.int64).copy()
     ready_time = np.zeros(n)
@@ -126,8 +138,9 @@ def list_schedule(g: TaskGraph, counts: list[int], alloc: np.ndarray,
                     heapq.heappush(free[q], (finish[j], pid))
                     scheduled += 1
                     progressed = True
-                    for v in g.succs(j):
-                        ready_time[v] = max(ready_time[v], finish[j])
+                    s0, s1 = g.succ_ptr[j], g.succ_ptr[j + 1]
+                    for v, eid in zip(g.succ_idx[s0:s1], g.succ_eid[s0:s1]):
+                        ready_time[v] = max(ready_time[v], finish[j] + delay[eid])
                         indeg[v] -= 1
                         if indeg[v] == 0:
                             heapq.heappush(becoming[alloc[v]],
@@ -148,8 +161,12 @@ def list_schedule(g: TaskGraph, counts: list[int], alloc: np.ndarray,
 
 
 def ols_rank(g: TaskGraph, alloc: np.ndarray) -> np.ndarray:
-    """Paper §4.1: Rank(T_j) = allocated time + max_{succ} Rank — post-rounding."""
-    return g.upward_rank(g.alloc_times(alloc))
+    """Paper §4.1: Rank(T_j) = allocated time + max_{succ} Rank — post-rounding.
+
+    With edge costs the rank includes the transfer delay actually paid on
+    each cross-type edge (the allocation is already fixed here)."""
+    return g.upward_rank(g.alloc_times(alloc),
+                         g.edge_delays(alloc) if g.has_comm else None)
 
 
 def hlp_est(g: TaskGraph, counts: list[int], alloc: np.ndarray) -> Schedule:
@@ -163,18 +180,30 @@ def hlp_ols(g: TaskGraph, counts: list[int], alloc: np.ndarray) -> Schedule:
 
 
 # ------------------------------------------------------------ offline: HEFT
-def heft(g: TaskGraph, counts: list[int]) -> Schedule:
-    """Insertion-based HEFT for Q typed resource pools (single-phase baseline)."""
+def heft(g: TaskGraph, counts: list[int], *, comm_aware: bool = True) -> Schedule:
+    """Insertion-based HEFT for Q typed resource pools (single-phase baseline).
+
+    ``comm_aware=True`` (default) charges ``g.comm`` on cross-type edges in
+    both phases: the rank adds the *expected* transfer cost of each edge
+    (its cost times the probability that two uniformly drawn processors
+    differ in type) and the insertion phase uses the candidate-type data
+    ready time.  With zero edge costs both variants coincide with the
+    paper's communication-free HEFT, decision for decision.
+    """
     n, Q = g.n, g.num_types
     total = float(sum(counts))
     avg = (g.proc * np.asarray(counts, dtype=np.float64)).sum(axis=1) / total
-    rank = g.upward_rank(avg)
+    use_comm = comm_aware and g.has_comm
+    exp_delay = None
+    if use_comm:
+        frac = np.asarray(counts, dtype=np.float64) / total
+        exp_delay = g.comm * (1.0 - float((frac ** 2).sum()))
+    rank = g.upward_rank(avg, exp_delay)
     order = np.argsort(-rank, kind="stable")
 
     # Per (type, proc): sorted list of (start, finish) busy intervals.
     busy: list[list[list[tuple[float, float]]]] = [
         [[] for _ in range(counts[q])] for q in range(Q)]
-    ready_time = np.zeros(n)
     start = np.zeros(n); finish = np.zeros(n)
     alloc = np.zeros(n, dtype=np.int32); proc_of = np.zeros(n, dtype=np.int32)
 
@@ -190,13 +219,23 @@ def heft(g: TaskGraph, counts: list[int]) -> Schedule:
 
     for j in order:
         j = int(j)
+        p0, p1 = g.pred_ptr[j], g.pred_ptr[j + 1]
+        pi = g.pred_idx[p0:p1]
+        pfin = finish[pi] if p1 > p0 else None
         best = (np.inf, 0, 0, 0.0)  # (finish, q, pid, start)
         for q in range(Q):
             p = g.proc[j, q]
             if not np.isfinite(p):
                 continue
+            if pfin is None:
+                r = 0.0
+            elif use_comm:
+                pc = g.comm[g.pred_eid[p0:p1]]
+                r = float(np.max(pfin + np.where(alloc[pi] != q, pc, 0.0)))
+            else:
+                r = float(pfin.max())
             for pid in range(counts[q]):
-                s = earliest_fit(busy[q][pid], ready_time[j], p)
+                s = earliest_fit(busy[q][pid], r, p)
                 f = s + p
                 # Tie-break toward GPUs (higher q) per the paper's Thm-1 convention.
                 if f < best[0] - 1e-12 or (abs(f - best[0]) <= 1e-12 and q > best[1]):
@@ -206,6 +245,4 @@ def heft(g: TaskGraph, counts: list[int]) -> Schedule:
         iv = busy[q][pid]
         iv.append((s, f))
         iv.sort()
-        for v in g.succs(j):
-            ready_time[v] = max(ready_time[v], f)
     return Schedule(alloc=alloc, proc=proc_of, start=start, finish=finish)

@@ -10,6 +10,12 @@ ER-LS (Enhanced Rules – List Scheduling), the paper's contribution:
   Step 2: otherwise rule R2: CPU iff p̄_j/√m <= p_j/√k.
 Each task is then scheduled as early as possible on its side.
 Competitive ratio: at most 4√(m/k) (Thm 3), at least √(m/k) (Thm 4).
+
+Communication awareness: a task's data-ready time depends on the side it is
+committed to — crossing a type boundary on edge (i, j) delays j's data by
+``g.comm[i→j]``.  Ready times are therefore computed *per type* (a (Q,)
+vector); R_{j,gpu} above uses the GPU entry.  With zero edge costs every
+entry coincides and all policies reduce to the paper's semantics.
 """
 from __future__ import annotations
 
@@ -86,20 +92,46 @@ class _OnlineMachine:
         return pid, s, s + p
 
 
+def ready_per_type(g: TaskGraph, j: int, finish: np.ndarray,
+                   alloc: np.ndarray, num_types: int,
+                   floor: float = 0.0) -> np.ndarray:
+    """(Q,) earliest data-ready time of task ``j`` per candidate type.
+
+    Entry q is ``max_i finish[i] + comm[i→j]·[alloc[i] != q]`` over j's
+    already-committed predecessors (all of them, in arrival order), floored
+    at ``floor`` (the release time).  Shared by ``repro.sim.engine`` so the
+    scalar engine and the pure-core online loop charge identical delays.
+    """
+    p0, p1 = g.pred_ptr[j], g.pred_ptr[j + 1]
+    ready = np.full(num_types, floor)
+    if p1 > p0:
+        pi = g.pred_idx[p0:p1]
+        fin = finish[pi]
+        if g.has_comm:
+            pc = g.comm[g.pred_eid[p0:p1]]
+            for q in range(num_types):
+                ready[q] = max(floor, float(
+                    np.max(fin + np.where(alloc[pi] != q, pc, 0.0))))
+        else:
+            ready[:] = max(floor, float(fin.max()))
+    return ready
+
+
 def _run_online(g: TaskGraph, counts: list[int], decide, order: np.ndarray) -> Schedule:
-    """Drive an online policy; ``decide(j, ready) -> type`` sees machine state."""
+    """Drive an online policy; ``decide(j, ready, mach) -> type`` sees the
+    machine state and the (Q,) per-type data-ready vector."""
     n = g.n
+    Q = len(counts)
     mach = _OnlineMachine(counts)
     alloc = np.zeros(n, dtype=np.int32)
     proc = np.zeros(n, dtype=np.int32)
     start = np.zeros(n); finish = np.zeros(n)
     for j in order:
         j = int(j)
-        pr = g.preds(j)
-        ready = float(finish[pr].max()) if pr.size else 0.0
+        ready = ready_per_type(g, j, finish, alloc, Q)
         q = decide(j, ready, mach)
         alloc[j] = q
-        proc[j], start[j], finish[j] = mach.commit(q, ready, g.proc[j, q])
+        proc[j], start[j], finish[j] = mach.commit(q, ready[q], g.proc[j, q])
     return Schedule(alloc=alloc, proc=proc, start=start, finish=finish)
 
 
@@ -108,9 +140,9 @@ def er_ls(g: TaskGraph, counts: list[int], order: np.ndarray | None = None) -> S
     """The paper's on-line algorithm (enhanced rules + list scheduling)."""
     m, k = counts[CPU], counts[GPU]
 
-    def decide(j: int, ready: float, mach: _OnlineMachine) -> int:
+    def decide(j: int, ready: np.ndarray, mach: _OnlineMachine) -> int:
         pc, pg = g.proc[j, CPU], g.proc[j, GPU]
-        r_gpu = max(mach.earliest_idle(GPU), ready)
+        r_gpu = max(mach.earliest_idle(GPU), ready[GPU])
         return erls_decide(pc, pg, m, k, r_gpu)
 
     return _run_online(g, counts, decide, g.topo if order is None else order)
@@ -118,13 +150,13 @@ def er_ls(g: TaskGraph, counts: list[int], order: np.ndarray | None = None) -> S
 
 def eft_online(g: TaskGraph, counts: list[int], order: np.ndarray | None = None) -> Schedule:
     """Baseline: commit each arriving task to the processor minimizing its EFT."""
-    def decide(j: int, ready: float, mach: _OnlineMachine) -> int:
+    def decide(j: int, ready: np.ndarray, mach: _OnlineMachine) -> int:
         best_q, best_f = 0, np.inf
         for q in range(g.num_types):
             p = g.proc[j, q]
             if not np.isfinite(p):
                 continue
-            f = max(ready, mach.earliest_idle(q)) + p
+            f = max(ready[q], mach.earliest_idle(q)) + p
             if f < best_f - 1e-12 or (abs(f - best_f) <= 1e-12 and p < g.proc[j, best_q]):
                 best_q, best_f = q, f
         return best_q

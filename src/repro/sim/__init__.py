@@ -12,15 +12,26 @@ paper's static pipeline could not express:
     perturbs them with a seeded ``NoiseModel`` (lognormal / uniform) and
     replays static plans dynamically, so robustness-to-misprediction becomes
     measurable;
+  * **communication costs** — edges may carry transfer costs
+    (``TaskGraph.comm``), charged by every scheduler and by the engine
+    whenever a dependence crosses the CPU/GPU type boundary (the ESTEE /
+    StarPU network model the paper's machine model omits); scenario
+    families expose this as a CCR knob and ``ccr=0`` reproduces the
+    communication-free behavior bit-for-bit;
   * **arrival streams** — tasks may carry release times, turning any offline
     instance into an online one;
   * **scenario families** — ``repro.sim.scenarios`` generates the paper's
-    workloads (chains, fork-join, layered/STG, tiled Cholesky/LU) and a
-    bridge to ``repro.core.workloads``, each parameterized by
-    ``(n, Q, counts, speedup distribution, seed)``;
-  * **a vectorized JAX path** — ``repro.sim.batch`` evaluates a whole batch
-    of (scenario × noise-seed) makespans for a static plan in one vmapped
-    scan, which is what the campaign sweep in ``benchmarks`` runs on.
+    workloads (chains, fork-join, layered/STG, tiled Cholesky/LU), the
+    network-bound ``netbound`` instance, and a bridge to
+    ``repro.core.workloads``, each parameterized by
+    ``(n, Q, counts, speedup distribution, ccr, seed)``;
+  * **a padded/bucketed JAX path** — ``repro.sim.batch`` evaluates a whole
+    heterogeneous campaign of static plans: plans are grouped by the
+    power-of-two envelope of (tasks, fan-in), padded to per-bucket maxima,
+    and each bucket runs as one jitted vmapped scan (≤ 1 XLA compile per
+    bucket, ``pmap``-sharded across devices when several are visible) —
+    what ``benchmarks.campaign.sim_sweep`` runs the (scenario × scheduler ×
+    seed) grid on in a single invocation.
 
 Entry points::
 

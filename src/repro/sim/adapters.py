@@ -9,9 +9,15 @@ then replays it under realized runtimes.  Arrival-driven adapters implement
 Registry (``ADAPTERS`` / ``make_scheduler``):
 
   static:   ``hlp_est``, ``hlp_ols``, ``hlp_jax_ols``, ``heft``,
-            ``bruteforce`` (n ≤ 7 oracle)
+            ``heft_nocomm`` (plans ignoring edge costs — the engine still
+            charges them at replay; baseline for communication awareness),
+            ``bruteforce`` (branch-and-bound oracle, n ≤ ~10)
   online:   ``er_ls``, ``eft``, ``greedy_r1``/``greedy_r2``/``greedy_r3``,
             ``random``
+
+Arrival-driven adapters receive ``ready`` as the (Q,) per-type data-ready
+vector (cross-type edges pay ``g.comm``); with zero edge costs all entries
+coincide with the paper's scalar ready time.
 
 All adapters are stateless between ``simulate`` calls except ``random``,
 which derives its stream from the adapter seed so campaigns stay
@@ -86,7 +92,7 @@ class HLPJaxOLSScheduler(HLPOLSScheduler):
 
 
 class HEFTScheduler(StaticScheduler):
-    """Insertion-based HEFT baseline (single phase)."""
+    """Insertion-based HEFT baseline (single phase, communication-aware)."""
 
     name = "heft"
 
@@ -94,8 +100,21 @@ class HEFTScheduler(StaticScheduler):
         return heft(g, counts)
 
 
+class HEFTObliviousScheduler(StaticScheduler):
+    """HEFT that *plans* as if transfers were free (the paper's model).
+
+    The engine still delays data on cross-type edges at replay, so on
+    communication-bound scenarios this measures exactly what ignoring the
+    network costs."""
+
+    name = "heft_nocomm"
+
+    def _solve(self, g, counts):
+        return heft(g, counts, comm_aware=False)
+
+
 class BruteForceScheduler(StaticScheduler):
-    """Exhaustive optimum — the oracle adapter for tiny instances (n ≤ 7)."""
+    """Branch-and-bound optimum — the oracle adapter for small n (≤ ~10)."""
 
     name = "bruteforce"
 
@@ -126,7 +145,7 @@ class ERLSScheduler(OnlineScheduler):
     def on_task_arrival(self, j, ready, state):
         g, machine = self._g, self._machine
         pc, pg = g.proc[j, CPU], g.proc[j, GPU]
-        r_gpu = max(state.earliest_idle(GPU), ready)
+        r_gpu = max(state.earliest_idle(GPU), float(ready[GPU]))
         return erls_decide(pc, pg, machine.counts[CPU], machine.counts[GPU],
                            r_gpu)
 
@@ -143,7 +162,7 @@ class EFTScheduler(OnlineScheduler):
             p = g.proc[j, q]
             if not np.isfinite(p):
                 continue
-            f = max(ready, state.earliest_idle(q)) + p
+            f = max(float(ready[q]), state.earliest_idle(q)) + p
             if f < best_f - 1e-12 or (abs(f - best_f) <= 1e-12
                                       and p < g.proc[j, best_q]):
                 best_q, best_f = q, f
@@ -185,6 +204,7 @@ ADAPTERS = {
     "hlp_ols": HLPOLSScheduler,
     "hlp_jax_ols": HLPJaxOLSScheduler,
     "heft": HEFTScheduler,
+    "heft_nocomm": HEFTObliviousScheduler,
     "er_ls": ERLSScheduler,
     "eft": EFTScheduler,
     "greedy_r1": lambda: GreedyRuleScheduler("R1"),

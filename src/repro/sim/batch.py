@@ -2,11 +2,34 @@
 
 The replay of a static ``Plan`` under realized runtimes is a longest-path
 computation on the *augmented* DAG = precedence edges + processor-sequence
-chain edges (see ``engine._execute_plan``).  That structure is fixed per
-plan, so a whole batch of noise realizations — the (scenario × seed) sweep
-of a campaign — evaluates as one ``vmap``ped ``lax.scan`` over the
-augmented topological order: (S, n) task times in, (S,) makespans out, one
-XLA launch for the entire sweep.
+chain edges (see ``engine._execute_plan``), where a precedence edge whose
+endpoints sit on different resource types additionally delays its successor
+by the edge's transfer cost ``g.comm[e]`` (chain edges transfer nothing).
+That structure is fixed per plan — the allocation decides once and for all
+which edges pay — so noise only perturbs the *node* weights and a whole
+batch of realizations evaluates as one ``vmap``ped ``lax.scan``.
+
+Two granularities:
+
+  * ``batch_makespans`` — one plan × (S,) noise realizations: the original
+    single-graph path, one jit per augmented-DAG shape.
+  * ``BatchedPlanDag`` + ``bucketed_makespans`` — *many different plans*
+    (different DAGs, different n, different pred fan-in P) evaluated
+    together: plans are grouped into buckets by the power-of-two envelope of
+    (n, P), padded to the per-bucket maxima, and each bucket runs as ONE
+    jitted vmap-over-plans of vmap-over-seeds scan.  A whole heterogeneous
+    campaign — the (scenario × scheduler × seed) grid of
+    ``benchmarks.campaign.sim_sweep`` — costs at most one XLA compile per
+    bucket (``trace_count()`` exposes the actual number for tests).  When
+    more than one device is visible the bucket's plan axis is sharded
+    ``jax.pmap``-style across devices.
+
+Padding scheme: a plan with n tasks and max fan-in P lands in bucket
+``(next_pow2(n), next_pow2(P))`` and is padded to that bucket's maxima —
+phantom tasks have no predecessors and zero processing time, phantom order
+slots point at a phantom task, so they finish at time 0 and never move the
+max.  Padded entries of the times matrix are zero-filled by
+``_pad_times``.
 
 Release times are not modeled here (the scalar engine handles them); the
 batch path covers the common campaign case of release-free instances.
@@ -18,6 +41,7 @@ property tests assert rtol <= 1e-5.
 from __future__ import annotations
 
 import dataclasses
+from collections import defaultdict
 from functools import partial
 
 import jax
@@ -28,7 +52,17 @@ from repro.core.dag import TaskGraph
 
 from .engine import Machine, NoiseModel, Plan
 
+#: number of XLA traces of the bucket evaluator since process start —
+#: incremented inside the jitted function, so it advances once per compile
+#: (shape bucket), not once per call.  Tests assert <= 1 per bucket.
+_TRACES = {"bucket": 0, "single": 0}
 
+
+def trace_count(kind: str = "bucket") -> int:
+    return _TRACES[kind]
+
+
+# ---------------------------------------------------------------- plan DAGs
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class PlanDag:
@@ -37,15 +71,24 @@ class PlanDag:
     order: jnp.ndarray       # (n,)   topological order of the augmented DAG
     pred: jnp.ndarray        # (n, P) padded predecessor ids, -1 = none
     pred_mask: jnp.ndarray   # (n, P) bool
+    pred_delay: jnp.ndarray  # (n, P) transfer delay charged on that pred edge
 
 
-def build_plan_dag(g: TaskGraph, plan: Plan) -> PlanDag:
-    """Fuse DAG predecessors with each task's processor-sequence predecessor."""
+def _plan_arrays(g: TaskGraph, plan: Plan):
+    """Numpy (order, pred, delay) of the augmented DAG, minimally padded."""
     n = g.n
-    preds: list[list[int]] = [list(map(int, g.preds(j))) for j in range(n)]
+    delay_e = g.edge_delays(plan.alloc)
+    preds: list[list[int]] = [[] for _ in range(n)]
+    delays: list[list[float]] = [[] for _ in range(n)]
+    for j in range(n):
+        p0, p1 = g.pred_ptr[j], g.pred_ptr[j + 1]
+        for i, eid in zip(g.pred_idx[p0:p1], g.pred_eid[p0:p1]):
+            preds[j].append(int(i))
+            delays[j].append(float(delay_e[eid]))
     for seq in plan.sequences.values():
         for a, b in zip(seq[:-1], seq[1:]):
             preds[b].append(a)
+            delays[b].append(0.0)
 
     # Kahn over the augmented graph (it is acyclic by plan feasibility).
     succs: list[list[int]] = [[] for _ in range(n)]
@@ -70,15 +113,26 @@ def build_plan_dag(g: TaskGraph, plan: Plan) -> PlanDag:
 
     P = max(1, max((len(p) for p in preds), default=1))
     pred = np.full((n, P), -1, dtype=np.int32)
+    delay = np.zeros((n, P), dtype=np.float64)
     for j, pj in enumerate(preds):
         pred[j, : len(pj)] = pj
+        delay[j, : len(pj)] = delays[j]
+    return order, pred, delay
+
+
+def build_plan_dag(g: TaskGraph, plan: Plan) -> PlanDag:
+    """Fuse DAG predecessors (with their transfer delays under the plan's
+    allocation) with each task's processor-sequence predecessor."""
+    order, pred, delay = _plan_arrays(g, plan)
     return PlanDag(order=jnp.asarray(order), pred=jnp.asarray(pred),
-                   pred_mask=jnp.asarray(pred >= 0))
+                   pred_mask=jnp.asarray(pred >= 0),
+                   pred_delay=jnp.asarray(delay))
 
 
 def _one_makespan(dag: PlanDag, times: jnp.ndarray) -> jnp.ndarray:
     def step(finish, j):
-        pf = jnp.where(dag.pred_mask[j], finish[dag.pred[j]], 0.0)
+        pf = jnp.where(dag.pred_mask[j],
+                       finish[dag.pred[j]] + dag.pred_delay[j], 0.0)
         finish = finish.at[j].set(jnp.max(pf, initial=0.0) + times[j])
         return finish, ()
 
@@ -89,6 +143,7 @@ def _one_makespan(dag: PlanDag, times: jnp.ndarray) -> jnp.ndarray:
 
 @jax.jit
 def _batch_makespans(dag: PlanDag, times: jnp.ndarray) -> jnp.ndarray:
+    _TRACES["single"] += 1  # trace-time side effect: counts compiles
     return jax.vmap(partial(_one_makespan, dag))(times)
 
 
@@ -124,3 +179,166 @@ def sweep_makespans(g: TaskGraph, machine: Machine, scheduler, *,
         raise ValueError(f"{scheduler.name} is arrival-driven; "
                          "the batch path needs a static plan")
     return batch_makespans(g, plan, sample_actual_batch(g, plan, noise, seeds))
+
+
+# ------------------------------------------------------- bucketed batch path
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class BatchedPlanDag:
+    """A bucket of B padded plan-DAGs stacked into one device-array pytree."""
+
+    order: jnp.ndarray       # (B, n_pad) int32
+    pred: jnp.ndarray        # (B, n_pad, P_pad) int32, -1 = none
+    pred_mask: jnp.ndarray   # (B, n_pad, P_pad) bool
+    pred_delay: jnp.ndarray  # (B, n_pad, P_pad) float
+
+    @property
+    def batch(self) -> int:
+        return self.order.shape[0]
+
+    @property
+    def n_pad(self) -> int:
+        return self.order.shape[1]
+
+    @staticmethod
+    def from_plans(items: list[tuple[TaskGraph, Plan]]) -> "BatchedPlanDag":
+        """Stack heterogeneous (graph, plan) pairs, padded to shared maxima.
+
+        Items shorter than the bucket get phantom tasks: zero fan-in, zero
+        time (``_pad_times``), and the item's spare order slots all point at
+        the first phantom, so they finish at 0 and never move the max.  The
+        bucket's largest item has no spare slots at all.
+        """
+        arrays = [_plan_arrays(g, plan) for g, plan in items]
+        n_pad = max(a[0].shape[0] for a in arrays)
+        P_pad = max(a[1].shape[1] for a in arrays)
+        B = len(arrays)
+        order = np.zeros((B, n_pad), dtype=np.int32)
+        pred = np.full((B, n_pad, P_pad), -1, dtype=np.int32)
+        delay = np.zeros((B, n_pad, P_pad), dtype=np.float64)
+        for b, (o, p, d) in enumerate(arrays):
+            n, Pi = p.shape
+            order[b, :n] = o
+            order[b, n:] = n  # empty slice for the bucket's largest item
+            pred[b, :n, :Pi] = p
+            delay[b, :n, :Pi] = d
+        return BatchedPlanDag(order=jnp.asarray(order),
+                              pred=jnp.asarray(pred),
+                              pred_mask=jnp.asarray(pred >= 0),
+                              pred_delay=jnp.asarray(delay))
+
+
+def _pad_times(times: np.ndarray, n_pad: int) -> np.ndarray:
+    """(S, n) -> (S, n_pad), phantom tasks take zero time."""
+    S, n = times.shape
+    if n == n_pad:
+        return times
+    out = np.zeros((S, n_pad), dtype=times.dtype)
+    out[:, :n] = times
+    return out
+
+
+def _bucket_key(g: TaskGraph, plan: Plan) -> tuple[int, int]:
+    """Power-of-two envelope of (n + 1 phantom slot, max augmented fan-in).
+
+    The augmented fan-in is bounded by the DAG fan-in + 1 chain pred; using
+    the bound (instead of the exact value) keeps the key cheap and stable.
+    """
+    n = g.n
+    fan = int(np.diff(g.pred_ptr).max()) if g.n else 0
+    p = fan + 1
+    return (1 << int(np.ceil(np.log2(max(n + 1, 2)))),
+            1 << int(np.ceil(np.log2(max(p, 1)))))
+
+
+def bucket_plans(items: list[tuple[TaskGraph, Plan]]
+                 ) -> dict[tuple[int, int], list[int]]:
+    """Group item indices by padded-shape bucket."""
+    buckets: dict[tuple[int, int], list[int]] = defaultdict(list)
+    for i, (g, plan) in enumerate(items):
+        buckets[_bucket_key(g, plan)].append(i)
+    return dict(buckets)
+
+
+@jax.jit
+def _bucket_makespans(bd: BatchedPlanDag, times: jnp.ndarray) -> jnp.ndarray:
+    _TRACES["bucket"] += 1  # trace-time side effect: counts compiles
+
+    def per_item(order, pred, mask, delay, t):
+        return jax.vmap(partial(_one_makespan,
+                                PlanDag(order, pred, mask, delay)))(t)
+
+    return jax.vmap(per_item)(bd.order, bd.pred, bd.pred_mask,
+                              bd.pred_delay, times)
+
+
+def _bucket_makespans_sharded(bd: BatchedPlanDag,
+                              times: jnp.ndarray) -> jnp.ndarray:
+    """Shard the plan axis across local devices (pmap of the vmapped scan)."""
+    D = jax.local_device_count()
+    B = times.shape[0]
+    if D <= 1 or B < 2:
+        return _bucket_makespans(bd, times)
+    pad = (-B) % D
+    if pad:
+        take = np.r_[np.arange(B), np.zeros(pad, dtype=np.int64)]
+        bd = jax.tree_util.tree_map(lambda a: a[take], bd)
+        times = jnp.concatenate([times, jnp.repeat(times[:1], pad, 0)], axis=0)
+    shard = jax.tree_util.tree_map(
+        lambda a: a.reshape(D, -1, *a.shape[1:]), (bd, times))
+    out = jax.pmap(_bucket_makespans.__wrapped__)(*shard)
+    return out.reshape(-1, out.shape[-1])[:B]
+
+
+def bucketed_makespans(items: list[tuple[TaskGraph, Plan]],
+                       times: list[np.ndarray]) -> list[np.ndarray]:
+    """Replay many different plans under per-plan times matrices.
+
+    Args:
+      items: (graph, plan) pairs — arbitrary mixed sizes.
+      times: matching (S, n_i) realized-time matrices; S must agree across
+             items (one campaign = one seed grid).
+
+    Returns a list of (S,) makespan arrays, one per item, in input order.
+    Cost: one jitted vmapped scan per *bucket* (power-of-two envelope of
+    (n, fan-in)), not per item — ``trace_count('bucket')`` measures it.
+    """
+    if len(items) != len(times):
+        raise ValueError("items and times must align")
+    if not items:
+        return []
+    S = {t.shape[0] for t in times}
+    if len(S) != 1:
+        raise ValueError(f"all items must share one seed grid, got S={sorted(S)}")
+    for (g, _), t in zip(items, times):
+        if t.ndim != 2 or t.shape[1] != g.n:
+            raise ValueError(f"times must be (S, n={g.n}), got {t.shape}")
+
+    out: list[np.ndarray | None] = [None] * len(items)
+    for key, idxs in bucket_plans(items).items():
+        bd = BatchedPlanDag.from_plans([items[i] for i in idxs])
+        tt = np.stack([_pad_times(np.asarray(times[i], dtype=np.float64),
+                                  bd.n_pad) for i in idxs])
+        ms = np.asarray(_bucket_makespans_sharded(bd, jnp.asarray(tt)))
+        for row, i in enumerate(idxs):
+            out[i] = ms[row]
+    return out  # type: ignore[return-value]
+
+
+def sweep_suite_makespans(entries, *, noise: NoiseModel, seeds) -> list[np.ndarray]:
+    """One-jit-per-bucket campaign sweep over heterogeneous (g, machine,
+    scheduler) entries: allocate each plan once, sample its noise grid with
+    the engine-identical streams, and evaluate every (entry × seed) makespan
+    through the bucketed batch path.
+
+    Returns a list of (S,) arrays aligned with ``entries``.
+    """
+    items, rows = [], []
+    for g, machine, scheduler in entries:
+        plan = scheduler.allocate(g, machine)
+        if plan is None:
+            raise ValueError(f"{scheduler.name} is arrival-driven; "
+                             "the batch path needs a static plan")
+        items.append((g, plan))
+        rows.append(sample_actual_batch(g, plan, noise, seeds))
+    return bucketed_makespans(items, rows)

@@ -15,15 +15,20 @@ Scheduler protocol (one interface for offline and online algorithms):
   * ``on_task_arrival(j, ready, state) -> int`` — called when task ``j``
     arrives (all predecessors committed, release time passed); returns the
     resource type to commit the task to.  The engine then starts it as early
-    as possible on that side, the paper's §4.2 semantics.  ``state`` is a
-    ``MachineState`` view of the committed schedule.
+    as possible on that side, the paper's §4.2 semantics.  ``ready`` is a
+    (Q,) vector of per-type data-ready times: committing to type q means the
+    data arrives at ``ready[q]`` (cross-type edges pay ``g.comm``); with zero
+    edge costs every entry is equal.  ``state`` is a ``MachineState`` view of
+    the committed schedule.
 
 Execution semantics for a static ``Plan`` (the "replay" model of ESTEE-style
 simulators): each processor executes its planned task sequence *in order*;
-a task starts when (a) every DAG predecessor has finished, (b) the previous
-task in its processor's sequence has finished, and (c) its release time has
-passed.  Under zero noise this reproduces the planning schedule exactly;
-under noise it measures the plan's robustness without re-optimizing.
+a task starts when (a) every DAG predecessor has finished *and its data has
+arrived* — a cross-type edge (i, j) delivers ``g.comm[i→j]`` time units
+after ``finish[i]`` — (b) the previous task in its processor's sequence has
+finished, and (c) its release time has passed.  Under zero noise this
+reproduces the planning schedule exactly; under noise it measures the
+plan's robustness without re-optimizing.
 
 Determinism: ``simulate(..., seed=s)`` is bit-reproducible — the only
 randomness is the ``NoiseModel`` stream derived from ``seed``.
@@ -146,8 +151,10 @@ class Scheduler(Protocol):
         """Static plan from estimates, or None for arrival-driven policies."""
         ...
 
-    def on_task_arrival(self, j: int, ready: float, state: MachineState) -> int:
-        """Resource type for arriving task ``j`` (online policies only)."""
+    def on_task_arrival(self, j: int, ready: np.ndarray,
+                        state: MachineState) -> int:
+        """Resource type for arriving task ``j`` (online policies only).
+        ``ready`` is the (Q,) per-type data-ready vector."""
         ...
 
 
@@ -176,10 +183,15 @@ class SimResult:
 # ------------------------------------------------------------------- engine
 def _execute_plan(g: TaskGraph, plan: Plan, times: np.ndarray,
                   release: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
-    """Dynamic replay of a static plan under realized task ``times``."""
+    """Dynamic replay of a static plan under realized task ``times``.
+
+    Data-ready times are delayed by ``g.comm`` on cross-type DAG edges
+    (processor-sequence chain edges transfer nothing).
+    """
     n = g.n
     start = np.zeros(n)
     finish = np.zeros(n)
+    delay = g.edge_delays(plan.alloc)
     prev_on_proc = np.full(n, -1, dtype=np.int64)
     next_on_proc = np.full(n, -1, dtype=np.int64)
     for seq in plan.sequences.values():
@@ -205,9 +217,11 @@ def _execute_plan(g: TaskGraph, plan: Plan, times: np.ndarray,
             remaining[v] -= 1
             if remaining[v] == 0:
                 ready = float(release[v])
-                pv = g.preds(v)
-                if pv.size:
-                    ready = max(ready, float(finish[pv].max()))
+                p0, p1 = g.pred_ptr[v], g.pred_ptr[v + 1]
+                if p1 > p0:
+                    ready = max(ready, float(
+                        (finish[g.pred_idx[p0:p1]]
+                         + delay[g.pred_eid[p0:p1]]).max()))
                 if prev_on_proc[v] >= 0:
                     ready = max(ready, float(finish[prev_on_proc[v]]))
                 heapq.heappush(heap, (ready, v))
@@ -220,6 +234,8 @@ def _run_arrivals(g: TaskGraph, machine: Machine, scheduler: Scheduler,
                   times_matrix: np.ndarray, release: np.ndarray,
                   order: np.ndarray):
     """Arrival-driven loop: irrevocable (type, proc, start) per arrival."""
+    from repro.core.online import ready_per_type
+
     n = g.n
     state = MachineState(machine.counts)
     alloc = np.zeros(n, dtype=np.int32)
@@ -228,14 +244,14 @@ def _run_arrivals(g: TaskGraph, machine: Machine, scheduler: Scheduler,
     finish = np.zeros(n)
     for j in order:
         j = int(j)
-        pr = g.preds(j)
-        ready = max(float(release[j]),
-                    float(finish[pr].max()) if pr.size else 0.0)
+        ready = ready_per_type(g, j, finish, alloc, machine.num_types,
+                               floor=float(release[j]))
         q = int(scheduler.on_task_arrival(j, ready, state))
         if not 0 <= q < machine.num_types:
             raise ValueError(f"scheduler {scheduler.name} returned bad type {q}")
         alloc[j] = q
-        proc[j], start[j], finish[j] = state.commit(q, ready, times_matrix[j, q])
+        proc[j], start[j], finish[j] = state.commit(q, float(ready[q]),
+                                                    times_matrix[j, q])
     return alloc, proc, start, finish
 
 

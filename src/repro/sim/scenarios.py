@@ -13,6 +13,10 @@ Families cover the paper's §6.1 workloads and beyond:
   * ``lu``        — tiled LU without pivoting (Chameleon ``getrf``).
   * ``random``    — Erdős–Rényi-over-topological-order DAG (the tests'
                     workhorse shape).
+  * ``netbound``  — ESTEE-style network-bound instance: wide layered DAG
+                    whose edges cost as much as the tasks they connect, so
+                    *where* data crosses the CPU/GPU boundary dominates the
+                    makespan (communication-oblivious planners lose here).
   * ``from_workloads`` — bridge to any ``repro.core.workloads.chameleon``
                     application (posv, potri, potrs, …).
 
@@ -20,6 +24,15 @@ Synthetic families draw per-task CPU times and per-type speedups from the
 paper's recipe: a small fraction of tasks is *slower* on the accelerator
 (speedup in [0.1, 0.5]), the rest accelerated up to 50× — the qualitative
 heterogeneity that makes the allocation phase matter.
+
+Communication model: every family takes a ``ccr`` knob (communication-to-
+computation ratio).  ``ccr > 0`` draws lognormal per-edge transfer costs
+whose mean is ``ccr`` × the mean best-type task time — the cost is charged
+by schedulers and engine whenever an edge crosses a type boundary (see
+``repro.core.dag.TaskGraph.comm``).  The edge-cost stream is drawn from a
+*separate* seeded generator, so ``ccr=0`` (the default) is bit-for-bit the
+pre-communication scenario — names, graphs, machines and golden makespans
+all unchanged.
 
 Every generator is a pure function of its parameters + ``seed``:
 ``make_scenario(family, seed=s, **params)`` always returns the same
@@ -80,26 +93,56 @@ def _machine(counts, rng: np.random.Generator | None = None) -> Machine:
     return Machine.hybrid(m, k)
 
 
+# -------------------------------------------------------------- edge costs
+def with_ccr(g: TaskGraph, ccr: float, seed: int, *,
+             spread: float = 0.5) -> TaskGraph:
+    """Attach lognormal per-edge transfer costs scaled to a target CCR.
+
+    The communication-to-computation ratio is defined against the mean
+    *best-type* task time (the work an ideal machine actually executes):
+    ``mean(comm) == ccr * mean(min_q proc)``.  Costs come from their own
+    generator stream (``default_rng([seed, 0xC0]``...) so adding/removing
+    them never perturbs the task-time or machine draws — ``ccr == 0``
+    returns the graph untouched.
+    """
+    if ccr <= 0.0 or not g.num_edges:
+        return g
+    rng = np.random.default_rng([seed, 0xC077])
+    base = float(np.min(g.proc, axis=1).mean())
+    comm = ccr * base * rng.lognormal(-0.5 * spread ** 2, spread,
+                                      size=g.num_edges)
+    return g.with_comm(comm)
+
+
+def _ccr_tag(ccr: float) -> str:
+    """Name suffix for comm-enabled scenarios (empty at ccr=0: names — and
+    the golden tests keyed on them — stay stable)."""
+    return f"_ccr{ccr:g}" if ccr > 0 else ""
+
+
 # ------------------------------------------------------------------ families
 def chain_scenario(n: int = 20, num_types: int = 2, counts=None,
-                   seed: int = 0, **kw) -> Scenario:
+                   seed: int = 0, ccr: float = 0.0, **kw) -> Scenario:
     rng = np.random.default_rng(seed)
     proc = heterogeneous_times(n, num_types, rng, **kw)
-    g = TaskGraph.build(proc, [(i, i + 1) for i in range(n - 1)])
-    return Scenario(f"chain_n{n}_s{seed}", "chain", g, _machine(counts, rng), seed)
+    g = with_ccr(TaskGraph.build(proc, [(i, i + 1) for i in range(n - 1)]),
+                 ccr, seed)
+    return Scenario(f"chain_n{n}_s{seed}{_ccr_tag(ccr)}", "chain", g,
+                    _machine(counts, rng), seed)
 
 
 def fork_join_scenario(width: int = 50, phases: int = 3, num_types: int = 2,
-                       counts=None, seed: int = 0) -> Scenario:
+                       counts=None, seed: int = 0, ccr: float = 0.0) -> Scenario:
     rng = np.random.default_rng(seed)
-    g = fork_join(width, phases, num_types=num_types, seed=seed)
-    return Scenario(f"forkjoin_w{width}_p{phases}_s{seed}", "fork_join", g,
-                    _machine(counts, rng), seed)
+    g = with_ccr(fork_join(width, phases, num_types=num_types, seed=seed),
+                 ccr, seed)
+    return Scenario(f"forkjoin_w{width}_p{phases}_s{seed}{_ccr_tag(ccr)}",
+                    "fork_join", g, _machine(counts, rng), seed)
 
 
 def layered_scenario(n: int = 60, layers: int = 6, p_edge: float = 0.35,
                      num_types: int = 2, counts=None, seed: int = 0,
-                     **kw) -> Scenario:
+                     ccr: float = 0.0, **kw) -> Scenario:
     """STG-style: tasks binned into ranks, edges between consecutive ranks."""
     rng = np.random.default_rng(seed)
     rank = np.sort(rng.integers(0, layers, size=n))
@@ -117,45 +160,79 @@ def layered_scenario(n: int = 60, layers: int = 6, p_edge: float = 0.35,
         if a.size and b.size and not added:
             edges.append((int(rng.choice(a)), int(rng.choice(b))))
     proc = heterogeneous_times(n, num_types, rng, **kw)
-    g = TaskGraph.build(proc, edges)
-    return Scenario(f"layered_n{n}_l{layers}_s{seed}", "layered", g,
-                    _machine(counts, rng), seed)
-
-
-def cholesky_scenario(nb_blocks: int = 5, block_size: int = 320,
-                      num_types: int = 2, counts=None, seed: int = 0) -> Scenario:
-    rng = np.random.default_rng(seed)
-    g = chameleon("potrf", nb_blocks, block_size, num_types=num_types, seed=seed)
-    return Scenario(f"cholesky_nb{nb_blocks}_b{block_size}_s{seed}", "cholesky",
+    g = with_ccr(TaskGraph.build(proc, edges), ccr, seed)
+    return Scenario(f"layered_n{n}_l{layers}_s{seed}{_ccr_tag(ccr)}", "layered",
                     g, _machine(counts, rng), seed)
 
 
-def lu_scenario(nb_blocks: int = 5, block_size: int = 320,
-                num_types: int = 2, counts=None, seed: int = 0) -> Scenario:
+def cholesky_scenario(nb_blocks: int = 5, block_size: int = 320,
+                      num_types: int = 2, counts=None, seed: int = 0,
+                      ccr: float = 0.0) -> Scenario:
     rng = np.random.default_rng(seed)
-    g = chameleon("getrf", nb_blocks, block_size, num_types=num_types, seed=seed)
-    return Scenario(f"lu_nb{nb_blocks}_b{block_size}_s{seed}", "lu", g,
-                    _machine(counts, rng), seed)
+    g = with_ccr(chameleon("potrf", nb_blocks, block_size,
+                           num_types=num_types, seed=seed), ccr, seed)
+    return Scenario(f"cholesky_nb{nb_blocks}_b{block_size}_s{seed}"
+                    f"{_ccr_tag(ccr)}", "cholesky", g, _machine(counts, rng),
+                    seed)
+
+
+def lu_scenario(nb_blocks: int = 5, block_size: int = 320,
+                num_types: int = 2, counts=None, seed: int = 0,
+                ccr: float = 0.0) -> Scenario:
+    rng = np.random.default_rng(seed)
+    g = with_ccr(chameleon("getrf", nb_blocks, block_size,
+                           num_types=num_types, seed=seed), ccr, seed)
+    return Scenario(f"lu_nb{nb_blocks}_b{block_size}_s{seed}{_ccr_tag(ccr)}",
+                    "lu", g, _machine(counts, rng), seed)
 
 
 def random_scenario(n: int = 25, p_edge: float = 0.15, num_types: int = 2,
-                    counts=None, seed: int = 0, **kw) -> Scenario:
+                    counts=None, seed: int = 0, ccr: float = 0.0,
+                    **kw) -> Scenario:
     rng = np.random.default_rng(seed)
     edges = [(i, j) for i in range(n) for j in range(i + 1, n)
              if rng.random() < p_edge]
     proc = heterogeneous_times(n, num_types, rng, **kw)
-    g = TaskGraph.build(proc, edges)
-    return Scenario(f"random_n{n}_s{seed}", "random", g, _machine(counts, rng),
-                    seed)
+    g = with_ccr(TaskGraph.build(proc, edges), ccr, seed)
+    return Scenario(f"random_n{n}_s{seed}{_ccr_tag(ccr)}", "random", g,
+                    _machine(counts, rng), seed)
+
+
+def netbound_scenario(width: int = 12, depth: int = 5, num_types: int = 2,
+                      counts=None, seed: int = 0, ccr: float = 2.0) -> Scenario:
+    """ESTEE-style network-bound instance (default CCR = 2).
+
+    A ``depth``-layer lattice of ``width`` tasks with a shuffled butterfly
+    between consecutive layers; every task is strongly GPU-accelerated but
+    edges cost ~CCR× a task, so a planner that scatters layers across the
+    type boundary drowns in transfers while a communication-aware one keeps
+    each dependence chain on one side.
+    """
+    rng = np.random.default_rng(seed)
+    n = width * depth
+    edges = []
+    for d in range(depth - 1):
+        lo, hi = d * width, (d + 1) * width
+        perm = rng.permutation(width)
+        for i in range(width):
+            edges.append((lo + i, hi + int(perm[i])))
+            edges.append((lo + i, hi + (i + 1) % width))
+    proc = heterogeneous_times(n, num_types, rng, slow_frac=0.25,
+                               speedup=(2.0, 8.0))
+    g = with_ccr(TaskGraph.build(proc, edges), ccr, seed)
+    return Scenario(f"netbound_w{width}_d{depth}_s{seed}{_ccr_tag(ccr)}",
+                    "netbound", g, _machine(counts, rng), seed)
 
 
 def from_workloads(app: str = "posv", nb_blocks: int = 5, block_size: int = 320,
-                   num_types: int = 2, counts=None, seed: int = 0) -> Scenario:
+                   num_types: int = 2, counts=None, seed: int = 0,
+                   ccr: float = 0.0) -> Scenario:
     """Bridge: any Chameleon application from ``repro.core.workloads``."""
     rng = np.random.default_rng(seed)
-    g = chameleon(app, nb_blocks, block_size, num_types=num_types, seed=seed)
-    return Scenario(f"{app}_nb{nb_blocks}_b{block_size}_s{seed}", "workloads",
-                    g, _machine(counts, rng), seed)
+    g = with_ccr(chameleon(app, nb_blocks, block_size, num_types=num_types,
+                           seed=seed), ccr, seed)
+    return Scenario(f"{app}_nb{nb_blocks}_b{block_size}_s{seed}{_ccr_tag(ccr)}",
+                    "workloads", g, _machine(counts, rng), seed)
 
 
 SCENARIO_FAMILIES: dict[str, Callable[..., Scenario]] = {
@@ -165,6 +242,7 @@ SCENARIO_FAMILIES: dict[str, Callable[..., Scenario]] = {
     "cholesky": cholesky_scenario,
     "lu": lu_scenario,
     "random": random_scenario,
+    "netbound": netbound_scenario,
     "from_workloads": from_workloads,
 }
 
@@ -176,13 +254,27 @@ def make_scenario(family: str, **params) -> Scenario:
     return SCENARIO_FAMILIES[family](**params)
 
 
-def default_suite(seed: int = 0, *, counts=(8, 2)) -> list[Scenario]:
-    """A small cross-family suite (≥ 5 families) for tests and smoke sweeps."""
+def default_suite(seed: int = 0, *, counts=(8, 2),
+                  ccr: float = 0.0) -> list[Scenario]:
+    """A small cross-family suite (≥ 5 families) for tests and smoke sweeps.
+
+    ``ccr=0`` (the default) is the historical communication-free suite —
+    same names, same graphs, same golden makespans."""
     return [
-        chain_scenario(n=16, counts=counts, seed=seed),
-        fork_join_scenario(width=20, phases=2, counts=counts, seed=seed + 1),
-        layered_scenario(n=40, layers=5, counts=counts, seed=seed + 2),
-        cholesky_scenario(nb_blocks=4, counts=counts, seed=seed + 3),
-        lu_scenario(nb_blocks=4, counts=counts, seed=seed + 4),
-        random_scenario(n=24, counts=counts, seed=seed + 5),
+        chain_scenario(n=16, counts=counts, seed=seed, ccr=ccr),
+        fork_join_scenario(width=20, phases=2, counts=counts, seed=seed + 1,
+                           ccr=ccr),
+        layered_scenario(n=40, layers=5, counts=counts, seed=seed + 2, ccr=ccr),
+        cholesky_scenario(nb_blocks=4, counts=counts, seed=seed + 3, ccr=ccr),
+        lu_scenario(nb_blocks=4, counts=counts, seed=seed + 4, ccr=ccr),
+        random_scenario(n=24, counts=counts, seed=seed + 5, ccr=ccr),
+    ]
+
+
+def comm_suite(seed: int = 0, *, counts=(8, 2),
+               ccr: float = 0.5) -> list[Scenario]:
+    """The communication-aware campaign suite: every default family with a
+    nonzero CCR plus the network-bound ESTEE-style instance."""
+    return default_suite(seed=seed, counts=counts, ccr=ccr) + [
+        netbound_scenario(width=10, depth=4, counts=counts, seed=seed + 6),
     ]

@@ -1,31 +1,33 @@
 """Theory-facing checks: ER-LS competitive bound, exact-vs-JAX HLP parity.
 
 * ER-LS is at most 4·√(m/k)-competitive (paper Thm 3).  We check it against
-  the *exhaustive* optimum on small instances — a strictly stronger
-  denominator than the LP bound the campaign uses.
+  the *exact* branch-and-bound optimum — a strictly stronger denominator
+  than the LP bound the campaign uses — at the paper's n ≈ 10 regime
+  (the old exhaustive oracle capped out at n ≤ 7).
 * The jitted first-order HLP solver must stay within tolerance of the exact
   HiGHS LP: its λ(x) is feasible (never below LP*), the gap is sub-percent,
-  and the rounded allocation schedules to a comparable makespan (the LP
-  optimum is not unique, so allocations may legitimately differ task-wise).
+  and with the shared deterministic canonical rounding the two allocations
+  agree *task-wise* (without it the degenerate LP optimum lets them differ).
 """
 import numpy as np
 import pytest
 
 from repro.core.bruteforce import brute_force_opt, brute_force_schedule
-from repro.core.hlp import solve_hlp
+from repro.core.hlp import canonical_round, solve_hlp
 from repro.core.hlp_jax import solve_hlp_jax
 from repro.core.listsched import hlp_ols
 from repro.core.theory import erls_competitive_bound
 from repro.sim import Machine, make_scheduler, simulate
 from conftest import random_dag
 
-# (m, k, n): brute force is O(2^n · n! · m^n), so n shrinks as m grows
-SMALL_MACHINES = [(2, 1, 5), (3, 1, 5), (2, 2, 5), (4, 2, 4)]
+# (m, k, n): the branch-and-bound oracle reaches the paper's n ≈ 10 regime
+SMALL_MACHINES = [(2, 1, 5), (3, 1, 5), (2, 2, 5), (4, 2, 4),
+                  (3, 1, 9), (8, 2, 10), (4, 2, 10), (4, 1, 11)]
 
 
 @pytest.mark.parametrize("mkn", SMALL_MACHINES)
 def test_erls_respects_competitive_bound_vs_bruteforce(mkn):
-    """ER-LS makespan <= 4·√(m/k) · OPT on exhaustive small instances."""
+    """ER-LS makespan <= 4·√(m/k) · OPT on exact small instances."""
     m, k, n = mkn
     bound = erls_competitive_bound(m, k)
     for seed in range(3):
@@ -38,11 +40,24 @@ def test_erls_respects_competitive_bound_vs_bruteforce(mkn):
 
 def test_bruteforce_schedule_achieves_bruteforce_opt():
     for seed in range(3):
-        g = random_dag(seed=300 + seed, n=5, p_edge=0.25)
-        counts = [2, 1]
-        sched = brute_force_schedule(g, counts)
-        sched.validate(g, counts)
-        assert sched.makespan == pytest.approx(brute_force_opt(g, counts))
+        for n in (5, 10):
+            g = random_dag(seed=300 + seed, n=n, p_edge=0.25)
+            counts = [2, 1]
+            sched = brute_force_schedule(g, counts)
+            sched.validate(g, counts)
+            assert sched.makespan == pytest.approx(brute_force_opt(g, counts))
+
+
+def test_bruteforce_dominated_by_polynomial_algorithms_at_n10():
+    """The oracle lower-bounds HEFT / HLP-OLS / ER-LS in the n≈10 regime."""
+    for seed in range(3):
+        g = random_dag(seed=400 + seed, n=10, p_edge=0.3)
+        m, k = 4, 2
+        opt = brute_force_opt(g, [m, k])
+        for name in ("heft", "hlp_ols", "er_ls"):
+            ms = simulate(g, Machine.hybrid(m, k), make_scheduler(name),
+                          seed=0).makespan
+            assert opt <= ms + 1e-9, (seed, name)
 
 
 @pytest.mark.parametrize("seed", [0, 3, 7])
@@ -63,3 +78,20 @@ def test_hlp_jax_matches_exact_lp_within_tolerance(seed):
     # rounding is consistent with each solver's own fractional solution
     np.testing.assert_array_equal(approx.alloc, (approx.x_frac < 0.5))
     np.testing.assert_array_equal(exact.alloc, (exact.x_frac < 0.5))
+
+
+@pytest.mark.parametrize("seed", [0, 3, 7])
+def test_hlp_canonical_rounding_agrees_task_wise(seed):
+    """The shared deterministic tie-break closes the parity gap: exact-LP
+    and first-order allocations are *identical*, not just λ-close."""
+    g = random_dag(seed, n=14)
+    m, k = 4, 2
+    exact = solve_hlp(g, m, k, canonical=True)
+    approx = solve_hlp_jax(g, m, k, iters=400, seed=0, canonical=True)
+    np.testing.assert_array_equal(exact.alloc, approx.alloc)
+    # the canonical rounding is a pure function of (instance, λ budget)
+    np.testing.assert_array_equal(
+        exact.alloc, canonical_round(g, m, k, exact.x_frac))
+    # default (threshold) rounding is untouched by the canonical path
+    np.testing.assert_array_equal(
+        solve_hlp(g, m, k).alloc, (solve_hlp(g, m, k).x_frac < 0.5))

@@ -1,0 +1,252 @@
+"""Communication-aware scheduling + padded/bucketed batch path.
+
+The contract of the comm refactor, asserted end to end:
+
+  * with ``comm == 0`` every layer (schedulers, engine, batch) reproduces
+    the historical outputs *bit-for-bit* — including the golden makespans;
+  * with ``comm > 0`` the bucketed batch path agrees with the scalar engine
+    to rtol <= 1e-5 across mixed DAG shapes and schedulers;
+  * one heterogeneous campaign costs at most one XLA compile per shape
+    bucket;
+  * communication-aware HEFT beats the comm-oblivious plan on the
+    network-bound scenario (the engine charges transfers either way).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.dag import CPU, GPU, TaskGraph
+from repro.core.listsched import heft, hlp_ols, list_schedule
+from repro.core.online import er_ls, ready_per_type
+from repro.sim import Machine, NoiseModel, make_scheduler, simulate
+from repro.sim import batch
+from repro.sim.scenarios import (comm_suite, default_suite, make_scenario,
+                                 netbound_scenario, with_ccr)
+from conftest import random_dag
+
+from test_sim_golden import ALGS, GOLDEN
+
+
+def _comm_dag(seed: int = 0, n: int = 18, ccr: float = 1.0) -> TaskGraph:
+    g = random_dag(seed, n=n, p_edge=0.25)
+    rng = np.random.default_rng(seed + 1)
+    return g.with_comm(ccr * float(g.proc.min(axis=1).mean())
+                       * rng.uniform(0.2, 2.0, size=g.num_edges))
+
+
+# ------------------------------------------------------------ core semantics
+def test_edge_delays_charge_only_cross_type_edges():
+    g = _comm_dag()
+    alloc = np.zeros(g.n, dtype=np.int32)
+    assert not g.edge_delays(alloc).any()          # same side: free
+    alloc[::2] = 1
+    d = g.edge_delays(alloc)
+    cross = alloc[g.edges[:, 0]] != alloc[g.edges[:, 1]]
+    np.testing.assert_array_equal(d[cross], g.comm[cross])
+    assert not d[~cross].any()
+
+
+def test_comm_aware_graph_algorithms_reduce_at_zero():
+    g = _comm_dag()
+    g0 = g.with_comm(0.0)
+    times = g.proc[:, CPU]
+    alloc = (np.arange(g.n) % 2).astype(np.int32)
+    delay = g.edge_delays(alloc)
+    assert g0.critical_path(times) == g.critical_path(times)
+    assert g.critical_path(times, delay) >= g.critical_path(times)
+    r0 = g.upward_rank(times)
+    r1 = g.upward_rank(times, delay)
+    assert (r1 >= r0 - 1e-12).all()
+    e0 = g.earliest_ready(times)
+    e1 = g.earliest_ready(times, delay)
+    assert (e1 >= e0 - 1e-12).all()
+    assert g.graham_lower_bound([2, 2], alloc) >= \
+        g0.graham_lower_bound([2, 2], alloc)
+
+
+def test_validate_rejects_comm_violating_schedule():
+    proc = np.array([[2.0, 2.0], [2.0, 2.0]])
+    g = TaskGraph.build(proc, [(0, 1)], comm=np.array([3.0]))
+    sched = list_schedule(g, [1, 1], np.array([CPU, GPU]))
+    sched.validate(g, [1, 1])                      # engine-built: feasible
+    assert sched.start[1] >= sched.finish[0] + 3.0 - 1e-9
+    bad = dataclasses.replace(sched)
+    bad.start = sched.start.copy(); bad.finish = sched.finish.copy()
+    bad.start[1] = sched.finish[0]                 # ignores the transfer
+    bad.finish[1] = bad.start[1] + 2.0
+    with pytest.raises(AssertionError):
+        bad.validate(g, [1, 1])
+
+
+def test_ready_per_type_matches_manual_computation():
+    g = _comm_dag(seed=3, n=10)
+    alloc = (np.arange(g.n) % 2).astype(np.int32)
+    finish = np.linspace(1.0, 2.0, g.n)
+    for j in range(g.n):
+        r = ready_per_type(g, j, finish, alloc, 2, floor=0.5)
+        for q in (CPU, GPU):
+            exp = 0.5
+            for i, eid in zip(g.preds(j), g.pred_edges(j)):
+                exp = max(exp, finish[i]
+                          + (g.comm[eid] if alloc[i] != q else 0.0))
+            assert r[q] == pytest.approx(exp)
+
+
+def test_schedulers_stay_feasible_under_comm():
+    g = _comm_dag(seed=5)
+    counts = [3, 2]
+    for sched in (heft(g, counts),
+                  hlp_ols(g, counts, (np.arange(g.n) % 2).astype(np.int32)),
+                  er_ls(g, counts)):
+        sched.validate(g, counts)
+    # the oblivious plan is only feasible in the comm-free world — that is
+    # the point of the baseline; the engine repairs it at replay time
+    blind = heft(g, counts, comm_aware=False)
+    blind.validate(g.with_comm(0.0), counts)
+    r = simulate(g, Machine((3, 2)), make_scheduler("heft_nocomm"), seed=0)
+    r.schedule.validate(g, counts)
+
+
+def test_comm_only_slows_fixed_allocation():
+    """Same allocation, growing CCR -> monotone non-decreasing makespan."""
+    g = random_dag(7, n=20, p_edge=0.2)
+    alloc = (np.arange(g.n) % 2).astype(np.int32)
+    prev = -1.0
+    for ccr in (0.0, 0.5, 2.0):
+        ms = hlp_ols(with_ccr(g, ccr, seed=7), [3, 2], alloc).makespan
+        assert ms >= prev - 1e-9
+        prev = ms
+
+
+# ------------------------------------------------- zero-comm bit-for-bitness
+def test_explicit_zero_comm_reproduces_golden_makespans():
+    """A graph with comm=0 attached is *identical* to one without: every
+    golden number from test_sim_golden must come out bit-for-bit."""
+    for sc in default_suite(seed=0):
+        g0 = sc.graph.with_comm(0.0)
+        for alg in ALGS:
+            exp0, exp1 = GOLDEN[sc.name][alg]
+            v0 = simulate(g0, sc.machine, make_scheduler(alg),
+                          seed=sc.seed).makespan
+            v1 = simulate(g0, sc.machine, make_scheduler(alg),
+                          noise=NoiseModel("lognormal", 0.2),
+                          seed=sc.seed).makespan
+            assert v0 == pytest.approx(exp0, rel=1e-12), (sc.name, alg)
+            assert v1 == pytest.approx(exp1, rel=1e-12), (sc.name, alg)
+
+
+def test_oblivious_heft_is_exact_heft_at_zero_comm():
+    for sc in default_suite(seed=0):
+        a = heft(sc.graph, sc.counts)
+        b = heft(sc.graph, sc.counts, comm_aware=False)
+        np.testing.assert_array_equal(a.alloc, b.alloc)
+        np.testing.assert_array_equal(a.proc, b.proc)
+        np.testing.assert_array_equal(a.start, b.start)
+
+
+# --------------------------------------------------------------- batch path
+def test_batch_makespans_match_engine_under_comm():
+    """Single-plan vmapped path == scalar engine on comm-aware scenarios."""
+    noise = NoiseModel("lognormal", 0.2)
+    seeds = list(range(8))
+    for sc in (make_scenario("random", n=25, counts=(8, 2), seed=2, ccr=0.8),
+               netbound_scenario(width=8, depth=3, counts=(4, 2), seed=1)):
+        for name in ("hlp_ols", "heft", "heft_nocomm"):
+            ms = batch.sweep_makespans(sc.graph, sc.machine,
+                                       make_scheduler(name),
+                                       noise=noise, seeds=seeds)
+            ref = [simulate(sc.graph, sc.machine, make_scheduler(name),
+                            noise=noise, seed=s).makespan for s in seeds]
+            np.testing.assert_allclose(ms, ref, rtol=1e-5)
+
+
+def test_bucketed_sweep_matches_engine_across_mixed_shapes():
+    """The padded/bucketed grid path == scalar engine, mixed DAG sizes."""
+    noise = NoiseModel("uniform", 0.3)
+    seeds = list(range(6))
+    entries, refs = [], []
+    for sc in comm_suite(seed=0, ccr=0.6):
+        for name in ("hlp_est", "heft"):
+            entries.append((sc.graph, sc.machine, make_scheduler(name)))
+            refs.append([simulate(sc.graph, sc.machine, make_scheduler(name),
+                                  noise=noise, seed=s).makespan
+                         for s in seeds])
+    out = batch.sweep_suite_makespans(entries, noise=noise, seeds=seeds)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(refs), rtol=1e-5)
+
+
+def test_bucketed_zero_noise_row_equals_planned_makespan():
+    sc = make_scenario("layered", n=40, layers=5, counts=(8, 2), seed=2,
+                       ccr=0.5)
+    plan = make_scheduler("heft").allocate(sc.graph, sc.machine)
+    row = batch.sample_actual_batch(sc.graph, plan, NoiseModel(), [0])
+    ms = batch.bucketed_makespans([(sc.graph, plan)], [row])[0][0]
+    ref = simulate(sc.graph, sc.machine, make_scheduler("heft"),
+                   seed=0).makespan
+    assert ms == pytest.approx(ref, rel=1e-5)
+
+
+def test_one_xla_compile_per_bucket():
+    """The whole mixed campaign triggers <= 1 trace per shape bucket."""
+    noise = NoiseModel("lognormal", 0.15)
+    seeds = list(range(4))
+    entries = []
+    for sc in comm_suite(seed=0, ccr=0.4):
+        for name in ("hlp_ols", "heft", "heft_nocomm"):
+            entries.append((sc.graph, sc.machine, make_scheduler(name)))
+    items = []
+    for g, machine, sched in entries:
+        items.append((g, sched.allocate(g, machine)))
+    n_buckets = len(batch.bucket_plans(items))
+    before = batch.trace_count("bucket")
+    out = batch.sweep_suite_makespans(entries, noise=noise, seeds=seeds)
+    compiles = batch.trace_count("bucket") - before
+    assert len(out) == len(entries)
+    assert compiles <= n_buckets, (compiles, n_buckets)
+    # the same shapes re-run for free: zero fresh traces
+    before = batch.trace_count("bucket")
+    batch.sweep_suite_makespans(entries, noise=noise, seeds=seeds)
+    assert batch.trace_count("bucket") == before
+
+
+def test_bucketed_rejects_misaligned_inputs():
+    sc = make_scenario("chain", n=8, counts=(2, 1), seed=0)
+    plan = make_scheduler("heft").allocate(sc.graph, sc.machine)
+    with pytest.raises(ValueError):
+        batch.bucketed_makespans([(sc.graph, plan)], [])
+    with pytest.raises(ValueError):
+        batch.bucketed_makespans([(sc.graph, plan)],
+                                 [np.zeros((3, sc.graph.n + 1))])
+    sc2 = make_scenario("chain", n=6, counts=(2, 1), seed=1)
+    plan2 = make_scheduler("heft").allocate(sc2.graph, sc2.machine)
+    with pytest.raises(ValueError):   # mismatched seed grids
+        batch.bucketed_makespans([(sc.graph, plan), (sc2.graph, plan2)],
+                                 [np.zeros((3, sc.graph.n)),
+                                  np.zeros((4, sc2.graph.n))])
+    with pytest.raises(ValueError):   # arrival-driven schedulers can't batch
+        batch.sweep_suite_makespans(
+            [(sc.graph, sc.machine, make_scheduler("er_ls"))],
+            noise=NoiseModel(), seeds=[0])
+
+
+# ----------------------------------------------------- the comm-aware claim
+def test_comm_aware_heft_beats_oblivious_on_netbound():
+    """On the network-bound scenario, planning with the edge costs wins."""
+    ratios = []
+    for seed in range(5):
+        sc = netbound_scenario(counts=(8, 2), seed=seed)
+        aware = simulate(sc.graph, sc.machine, make_scheduler("heft"),
+                         seed=0).makespan
+        blind = simulate(sc.graph, sc.machine, make_scheduler("heft_nocomm"),
+                         seed=0).makespan
+        ratios.append(blind / aware)
+    assert all(r >= 1.0 - 1e-9 for r in ratios), ratios
+    assert np.mean(ratios) > 1.05, ratios   # and the margin is real
+
+
+def test_netbound_scenario_is_comm_bound():
+    sc = netbound_scenario(seed=0)
+    assert sc.graph.has_comm
+    assert sc.graph.comm.mean() > np.min(sc.graph.proc, axis=1).mean()
+    assert "netbound" in sc.name

@@ -47,6 +47,29 @@ def test_simulation_is_deterministic_per_seed(seed, name):
 
 
 @settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10 ** 6), st.sampled_from(["hlp_est", "hlp_ols", "heft",
+                                                 "heft_nocomm"]),
+       st.floats(0.0, 2.0))
+def test_batch_path_matches_engine_under_random_comm(seed, name, ccr):
+    """Padded/bucketed batch replay == scalar engine, with random edge costs."""
+    from repro.sim.batch import sweep_suite_makespans
+
+    g = random_dag(seed, n=14)
+    if ccr > 0 and g.num_edges:
+        rng = np.random.default_rng(seed + 1)
+        g = g.with_comm(ccr * float(g.proc.min(axis=1).mean())
+                        * rng.uniform(0.1, 2.0, size=g.num_edges))
+    mach = Machine.hybrid(4, 2)
+    noise = NoiseModel("lognormal", 0.2)
+    seeds = list(range(4))
+    out = sweep_suite_makespans([(g, mach, make_scheduler(name))],
+                                noise=noise, seeds=seeds)[0]
+    ref = [simulate(g, mach, make_scheduler(name), noise=noise,
+                    seed=s).makespan for s in seeds]
+    np.testing.assert_allclose(out, ref, rtol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
 @given(st.integers(0, 10 ** 6))
 def test_bruteforce_adapter_dominates_everything(seed):
     """On tiny instances the oracle adapter is <= every other adapter."""
