@@ -7,6 +7,10 @@ Sections:
     (``python -m benchmarks.run --only sim``): per scenario family, the
     mean and p95 makespan / lower-bound ratio of every scheduler adapter,
     the companion of the paper's Fig. 3–7 ratio plots.
+  * §Streams campaign — from ``artifacts/streams_campaign.csv``
+    (``python -m benchmarks.run --only streams``): per (arrival process,
+    tenant), the p50/p95 bounded slowdown every stream policy delivers —
+    the open-system companion of the ratio table.
 """
 from __future__ import annotations
 
@@ -89,6 +93,41 @@ def render_sim(path: str = None) -> str:
     return "\n".join(out)
 
 
+def render_streams(path: str = None) -> str:
+    """Per-(process, tenant) p50/p95 bounded-slowdown table per policy."""
+    path = path or os.path.join(ART, "streams_campaign.csv")
+    if not os.path.exists(path):
+        return ("\n### Streams campaign\n\n(no artifacts/streams_campaign.csv"
+                " — run: python -m benchmarks.run --only streams)\n")
+    with open(path, newline="") as f:
+        rows = list(csv.DictReader(f))
+    # (process, tenant) -> policy -> list of (p50, p95) over seeds
+    cell: dict[tuple[str, int], dict[str, list[tuple[float, float]]]] = \
+        defaultdict(lambda: defaultdict(list))
+    policies: list[str] = []
+    for r in rows:
+        if r["policy"] not in policies:
+            policies.append(r["policy"])
+        cell[(r["process"], int(r["tenant"]))][r["policy"]].append(
+            (float(r["p50_slowdown"]), float(r["p95_slowdown"])))
+    out = ["\n### Streams campaign (per-tenant bounded slowdown; "
+           "p50 | p95 over seeds)\n"]
+    out.append("| process / tenant | " + " | ".join(policies) + " |")
+    out.append("|---" * (len(policies) + 1) + "|")
+    for (proc, tenant) in sorted(cell):
+        row = [f"{proc} t{tenant}"]
+        for pol in policies:
+            v = cell[(proc, tenant)].get(pol)
+            if not v:
+                row.append("—")
+            else:
+                p50 = sum(x[0] for x in v) / len(v)
+                p95 = sum(x[1] for x in v) / len(v)
+                row.append(f"{p50:.2f} \\| {p95:.2f}")
+        out.append("| " + " | ".join(row) + " |")
+    return "\n".join(out)
+
+
 if __name__ == "__main__":
     try:
         print(render())
@@ -96,3 +135,4 @@ if __name__ == "__main__":
         print("(no artifacts/dryrun_results.jsonl — "
               "run: python -m repro.launch.dryrun)")
     print(render_sim())
+    print(render_streams())

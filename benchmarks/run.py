@@ -106,6 +106,33 @@ def bench_sim(full: bool) -> list[str]:
     return lines
 
 
+def bench_streams(full: bool) -> list[str]:
+    """Open-system streams: (arrival process × policy × seed) grid with
+    per-tenant bounded slowdown, utilization, and rollout compile count."""
+    from . import campaign
+    t0 = time.perf_counter()
+    r = campaign.streams_campaign(full=full)
+    dt = time.perf_counter() - t0
+    per = dt / max(r["runs"], 1) * 1e6
+    lines = []
+    for proc in r["processes"]:
+        for pol in r["policies"]:
+            lines.append(f"streams/{proc}_{pol},{per:.0f},"
+                         f"mean_slowdown={r['mean_slowdown'][(proc, pol)]:.4f}")
+    edge = (r["sitl_vs_erls_bursty"] - 1) * 100
+    lines.append(f"streams/sitl_vs_erls_bursty,{per:.0f},"
+                 f"erls_excess_pct={edge:.2f}")
+    print(f"# streams: {r['runs']} stream runs ({r['jobs']} jobs) in {dt:.1f}s"
+          f" | rollout path: {r['compiles']} XLA compiles")
+    for proc in r["processes"]:
+        print(f"#   {proc}: " + " ".join(
+            f"{pol}={r['mean_slowdown'][(proc, pol)]:.3f}"
+            for pol in r["policies"]))
+    print(f"#   sim-in-the-loop vs ER-LS on bursty: ER-LS pays {edge:+.1f}% "
+          f"mean bounded slowdown")
+    return lines
+
+
 def bench_roofline(full: bool) -> list[str]:
     """Summarize dry-run roofline artifacts (produced by repro.launch.dryrun)."""
     art = os.path.join(os.path.dirname(__file__), "..", "artifacts",
@@ -163,6 +190,7 @@ BENCHES = {
     "offline3": bench_offline3,
     "online": bench_online,
     "sim": bench_sim,
+    "streams": bench_streams,
     "solver": bench_solver,
     "kernels": bench_kernels,
     "roofline": bench_roofline,
@@ -178,14 +206,19 @@ def main() -> None:
     args = ap.parse_args()
     names = [n for n in args.only.split(",") if n] or list(BENCHES)
     all_lines = ["name,us_per_call,derived"]
+    failed: list[str] = []
     for name in names:
         print(f"== {name} ==", flush=True)
         try:
             all_lines += BENCHES[name](args.full)
-        except Exception as e:  # keep the harness robust to a single failure
+        except Exception as e:  # finish the harness, but don't hide the loss
             print(f"# {name} FAILED: {type(e).__name__}: {e}")
             all_lines.append(f"{name},0,FAILED")
+            failed.append(name)
     print("\n".join(all_lines))
+    if failed:   # CI must see a red exit when any sub-campaign raised
+        print(f"# FAILED sub-campaigns: {','.join(failed)}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -5,12 +5,15 @@ A serving fleet has Q heterogeneous worker pools (e.g. prefill-optimized
 pods vs decode-optimized pods vs CPU-host overflow; or new-gen vs old-gen
 accelerators).  Each request is a 2-task chain  prefill ≺ decode-phase  with
 per-pool processing-time estimates from a calibrated cost model — exactly the
-paper's (CPU, GPU) | prec | C_max setting, arriving online.  ER-LS takes the
-irrevocable pool decision at arrival:
+paper's (CPU, GPU) | prec | C_max setting, arriving online.
 
-  Step 1: if the slow-pool time >= (fast pool's earliest idle + fast time),
-          send it to the fast pool (the paper's  p̄ >= R_gpu + p  rule);
-  Step 2: otherwise rule R2 (sqrt-weighted time comparison).
+This module is a thin serving veneer over the shared scheduling substrate:
+the pool decision *is* ``repro.core.online.erls_decide`` (the same Steps 1–2
+the simulation adapters drive — one implementation, one set of tests), pool
+occupancy *is* ``repro.sim.engine.MachineState`` (the committed-schedule
+view every online policy sees), and per-tenant accounting flows through
+``repro.streams``' ``JobRecord``/metrics, so a dispatcher log aggregates
+with the same bounded-slowdown tables as the open-system campaigns.
 
 Straggler mitigation reuses Step 1 as a *backup* rule: when a running task
 exceeds its estimate by ``straggler_factor``, a duplicate is enqueued iff the
@@ -20,32 +23,32 @@ same comparison, applied at detection time.
 from __future__ import annotations
 
 import dataclasses
-import heapq
-import itertools
 
-import numpy as np
+from repro.core.dag import GPU
+from repro.core.online import erls_decide
+from repro.sim.engine import MachineState
 
 
 @dataclasses.dataclass
 class Pool:
-    """A homogeneous group of workers (one resource type)."""
+    """A homogeneous group of workers (one resource type).
+
+    Occupancy is delegated to a single-type ``repro.sim.engine.MachineState``
+    — the same committed-schedule view the simulation engine's online
+    policies condition on."""
+
     name: str
     workers: int
     speed: float = 1.0             # relative throughput multiplier
 
     def __post_init__(self):
-        self.free = [(0.0, w) for w in range(self.workers)]
-        heapq.heapify(self.free)
+        self._state = MachineState((self.workers,))
 
     def earliest_idle(self) -> float:
-        return self.free[0][0]
+        return self._state.earliest_idle(0)
 
     def commit(self, ready: float, work: float) -> tuple[int, float, float]:
-        f, wid = heapq.heappop(self.free)
-        start = max(ready, f)
-        finish = start + work / self.speed
-        heapq.heappush(self.free, (finish, wid))
-        return wid, start, finish
+        return self._state.commit(0, ready, work / self.speed)
 
 
 @dataclasses.dataclass
@@ -54,6 +57,7 @@ class Request:
     prompt_tokens: int
     decode_tokens: int
     arrival: float
+    tenant: int = 0
 
 
 @dataclasses.dataclass
@@ -68,7 +72,12 @@ class Placement:
 
 
 class ERLSDispatcher:
-    """Irrevocable two-pool dispatch (paper §4.2) + straggler backups."""
+    """Irrevocable two-pool dispatch (paper §4.2) + straggler backups.
+
+    The per-phase decision calls ``repro.core.online.erls_decide`` — the
+    exact function the simulation adapters and the streams fallback policy
+    use — with (slow, fast) mapped onto the paper's (CPU, GPU) convention.
+    """
 
     def __init__(self, slow: Pool, fast: Pool, cost_model,
                  straggler_factor: float = 3.0):
@@ -77,21 +86,21 @@ class ERLSDispatcher:
         self.cost = cost_model          # (request, phase, pool) -> seconds
         self.sf = straggler_factor
         self.log: list[Placement] = []
+        self._reqs: dict[int, Request] = {}
 
     def _decide(self, req: Request, phase: str, ready: float) -> Pool:
         p_slow = self.cost(req, phase, self.slow)
         p_fast = self.cost(req, phase, self.fast)
         r_fast = max(self.fast.earliest_idle(), ready)
-        if p_slow >= r_fast + p_fast:                       # Step 1
-            return self.fast
-        m, k = self.slow.workers, self.fast.workers        # Step 2 (R2)
-        return self.slow if p_slow / np.sqrt(m) <= p_fast / np.sqrt(k) \
-            else self.fast
+        side = erls_decide(p_slow, p_fast, self.slow.workers,
+                           self.fast.workers, r_fast)
+        return self.fast if side == GPU else self.slow
 
     def submit(self, req: Request) -> list[Placement]:
         """Dispatch the prefill ≺ decode chain; returns the placements."""
         out = []
         ready = req.arrival
+        self._reqs[req.rid] = req
         for phase in ("prefill", "decode"):
             pool = self._decide(req, phase, ready)
             work = self.cost(req, phase, pool) * pool.speed
@@ -123,6 +132,50 @@ class ERLSDispatcher:
     @property
     def makespan(self) -> float:
         return max((p.finish for p in self.log), default=0.0)
+
+    # ----------------------------------------------------- tenant accounting
+    def job_records(self):
+        """Each dispatched request as a ``repro.streams`` ``JobRecord``.
+
+        The isolation reference is the request served back-to-back on its
+        per-phase best pools — so the dispatcher's log aggregates with the
+        same bounded-slowdown machinery as the open-system campaigns.
+        A phase served by several copies (straggler backups) completes at
+        the *earliest* copy's finish; every copy's runtime — duplicate work
+        included — counts toward the busy totals."""
+        from repro.streams.tenants import JobRecord
+
+        by_phase: dict[tuple[int, str], list[Placement]] = {}
+        for p in self.log:
+            by_phase.setdefault((p.rid, p.phase), []).append(p)
+        by_rid: dict[int, list[list[Placement]]] = {}
+        for (rid, _), copies in by_phase.items():
+            by_rid.setdefault(rid, []).append(copies)
+        recs = []
+        for rid, phases in sorted(by_rid.items()):
+            req = self._reqs[rid]
+            ref = sum(min(self.cost(req, ph, self.slow),
+                          self.cost(req, ph, self.fast))
+                      for ph in ("prefill", "decode"))
+            all_pls = [p for copies in phases for p in copies]
+            busy_fast = sum(p.finish - p.start for p in all_pls
+                            if p.pool == self.fast.name)
+            busy_slow = sum(p.finish - p.start for p in all_pls
+                            if p.pool == self.slow.name)
+            recs.append(JobRecord(
+                jid=rid, tenant=req.tenant, name=f"req{rid}",
+                arrival=req.arrival,
+                start=min(p.start for p in all_pls),
+                finish=max(min(p.finish for p in copies)
+                           for copies in phases), ref=ref,
+                n_tasks=len(all_pls), busy=(busy_slow, busy_fast)))
+        return recs
+
+    def tenant_table(self, tau: float = 1e-3):
+        """Per-tenant mean/p50/p95 bounded slowdown of the dispatch log."""
+        from repro.streams.metrics import tenant_summary
+
+        return tenant_summary(self.job_records(), tau)
 
 
 def token_cost_model(prefill_flops_per_tok: float = 2e9,

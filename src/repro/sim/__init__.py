@@ -44,13 +44,15 @@ Entry points::
                          noise=NoiseModel("lognormal", 0.1), seed=sc.seed)
             print(sc.name, name, r.makespan)
 """
-from .adapters import ADAPTERS, make_scheduler
+from .adapters import ADAPTERS, FrozenPlanScheduler, make_scheduler, plan_for
 from .engine import (Machine, NoiseModel, Plan, Scheduler, SimResult,
                      TraceEvent, simulate)
-from .scenarios import SCENARIO_FAMILIES, Scenario, default_suite, make_scenario
+from .scenarios import (SCENARIO_FAMILIES, Scenario, default_suite,
+                        from_estee, make_scenario, to_estee)
 
 __all__ = [
-    "ADAPTERS", "make_scheduler", "Machine", "NoiseModel", "Plan",
-    "Scheduler", "SimResult", "TraceEvent", "simulate",
-    "SCENARIO_FAMILIES", "Scenario", "default_suite", "make_scenario",
+    "ADAPTERS", "FrozenPlanScheduler", "make_scheduler", "plan_for",
+    "Machine", "NoiseModel", "Plan", "Scheduler", "SimResult", "TraceEvent",
+    "simulate", "SCENARIO_FAMILIES", "Scenario", "default_suite",
+    "from_estee", "make_scenario", "to_estee",
 ]

@@ -199,6 +199,43 @@ class RandomScheduler(OnlineScheduler):
         return int(self._rng.integers(0, self._g.num_types))
 
 
+class FrozenPlanScheduler:
+    """Adapter around a precomputed ``Plan`` — lets any plan (including one
+    materialized from an arrival-driven policy via ``plan_for``) ride the
+    batch path's ``allocate``-then-replay pipeline."""
+
+    def __init__(self, plan: Plan, name: str = "frozen"):
+        self._plan, self.name = plan, name
+
+    def allocate(self, g: TaskGraph, machine: Machine) -> Plan:
+        return self._plan
+
+    def on_task_arrival(self, j: int, ready, state: MachineState) -> int:
+        return int(self._plan.alloc[j])
+
+
+def plan_for(name: str, g: TaskGraph, machine: Machine, **kw) -> Plan:
+    """A static ``Plan`` from *any* adapter.
+
+    Static adapters allocate directly; arrival-driven ones (er_ls, eft,
+    greedy_*, random) are rolled out once on an idle machine through the
+    scalar engine and the committed schedule becomes the plan — which is
+    what lets an online policy's decisions ride the batch path's
+    replay-under-noise evaluation (wrap the result in
+    ``FrozenPlanScheduler`` for ``sweep_suite_makespans``).  For plans
+    conditioned on a *busy* machine, see
+    ``repro.streams.policy.conditioned_plan``.
+    """
+    sched = make_scheduler(name, **kw)
+    plan = sched.allocate(g, machine)
+    if plan is None:
+        from .engine import simulate
+        plan = Plan.from_schedule(
+            simulate(g, machine, sched, validate=False).schedule,
+            machine.counts)
+    return plan
+
+
 ADAPTERS = {
     "hlp_est": HLPESTScheduler,
     "hlp_ols": HLPOLSScheduler,

@@ -31,8 +31,11 @@ slots point at a phantom task, so they finish at time 0 and never move the
 max.  Padded entries of the times matrix are zero-filled by
 ``_pad_times``.
 
-Release times are not modeled here (the scalar engine handles them); the
-batch path covers the common campaign case of release-free instances.
+Release times and busy-machine conditioning enter as per-task start
+*floors* (``PlanDag.floor``): a task starts no earlier than its floor, so a
+rollout can replay a plan as if the machine's processors only became free
+at their current commitment horizons (``rollout_floors``) — what the
+``repro.streams`` simulation-in-the-loop policy evaluates candidates with.
 
 ``batch_makespans`` agrees with ``engine.simulate`` on shared seeds up to
 float32 resolution (the repo runs JAX in its default 32-bit mode) — the
@@ -72,6 +75,9 @@ class PlanDag:
     pred: jnp.ndarray        # (n, P) padded predecessor ids, -1 = none
     pred_mask: jnp.ndarray   # (n, P) bool
     pred_delay: jnp.ndarray  # (n, P) transfer delay charged on that pred edge
+    floor: jnp.ndarray       # (n,)   per-task earliest-start floor (release
+                             #        time / busy-machine conditioning); 0 =
+                             #        the classic closed-campaign replay
 
 
 def _plan_arrays(g: TaskGraph, plan: Plan):
@@ -120,25 +126,51 @@ def _plan_arrays(g: TaskGraph, plan: Plan):
     return order, pred, delay
 
 
-def build_plan_dag(g: TaskGraph, plan: Plan) -> PlanDag:
+def build_plan_dag(g: TaskGraph, plan: Plan,
+                   floor: np.ndarray | None = None) -> PlanDag:
     """Fuse DAG predecessors (with their transfer delays under the plan's
-    allocation) with each task's processor-sequence predecessor."""
+    allocation) with each task's processor-sequence predecessor.
+
+    ``floor`` optionally gives each task an earliest-start time (release
+    times, or per-processor busy horizons when a rollout conditions on a
+    non-idle machine — see ``rollout_floors``)."""
     order, pred, delay = _plan_arrays(g, plan)
+    f = np.zeros(g.n) if floor is None else np.asarray(floor, dtype=np.float64)
     return PlanDag(order=jnp.asarray(order), pred=jnp.asarray(pred),
                    pred_mask=jnp.asarray(pred >= 0),
-                   pred_delay=jnp.asarray(delay))
+                   pred_delay=jnp.asarray(delay), floor=jnp.asarray(f))
 
 
 def _one_makespan(dag: PlanDag, times: jnp.ndarray) -> jnp.ndarray:
     def step(finish, j):
         pf = jnp.where(dag.pred_mask[j],
                        finish[dag.pred[j]] + dag.pred_delay[j], 0.0)
-        finish = finish.at[j].set(jnp.max(pf, initial=0.0) + times[j])
+        start = jnp.maximum(jnp.max(pf, initial=0.0), dag.floor[j])
+        finish = finish.at[j].set(start + times[j])
         return finish, ()
 
     finish0 = jnp.zeros(times.shape[0], dtype=times.dtype)
     finish, _ = jax.lax.scan(step, finish0, dag.order)
     return jnp.max(finish)
+
+
+def rollout_floors(g: TaskGraph, plan: Plan, busy: list[np.ndarray],
+                   now: float = 0.0) -> np.ndarray:
+    """(n,) start floors that condition a plan replay on a busy machine.
+
+    ``busy[q]`` holds the commitment horizon of each type-q processor
+    (``MachineState.busy_until(q)``); the first task of each per-processor
+    sequence inherits the horizon of the processor its plan slot maps to
+    (plan pids are matched to machine processors in ascending-horizon order,
+    the same greedy order the engine commits in).  Times are relative to
+    ``now`` so candidate rollouts at an arrival compare net makespans.
+    """
+    floor = np.zeros(g.n)
+    for (q, pid), seq in plan.sequences.items():
+        if seq:
+            horizon = busy[q][pid] if pid < len(busy[q]) else 0.0
+            floor[seq[0]] = max(0.0, float(horizon) - now)
+    return floor
 
 
 @jax.jit
@@ -191,6 +223,7 @@ class BatchedPlanDag:
     pred: jnp.ndarray        # (B, n_pad, P_pad) int32, -1 = none
     pred_mask: jnp.ndarray   # (B, n_pad, P_pad) bool
     pred_delay: jnp.ndarray  # (B, n_pad, P_pad) float
+    floor: jnp.ndarray       # (B, n_pad) float — per-task start floors
 
     @property
     def batch(self) -> int:
@@ -201,31 +234,44 @@ class BatchedPlanDag:
         return self.order.shape[1]
 
     @staticmethod
-    def from_plans(items: list[tuple[TaskGraph, Plan]]) -> "BatchedPlanDag":
+    def from_plans(items: list[tuple[TaskGraph, Plan]],
+                   floors: list[np.ndarray] | None = None,
+                   pad_to: tuple[int, int] | None = None) -> "BatchedPlanDag":
         """Stack heterogeneous (graph, plan) pairs, padded to shared maxima.
 
         Items shorter than the bucket get phantom tasks: zero fan-in, zero
         time (``_pad_times``), and the item's spare order slots all point at
         the first phantom, so they finish at 0 and never move the max.  The
-        bucket's largest item has no spare slots at all.
+        bucket's largest item has no spare slots at all — unless ``pad_to``
+        raises the padded shape to a fixed (n_pad, P_pad) envelope, which
+        repeated small rollout calls use to hit one stable compiled shape.
+
+        ``floors`` optionally carries per-item (n_i,) start floors (release
+        times / busy-machine conditioning); phantom tasks floor at 0.
         """
         arrays = [_plan_arrays(g, plan) for g, plan in items]
         n_pad = max(a[0].shape[0] for a in arrays)
         P_pad = max(a[1].shape[1] for a in arrays)
+        if pad_to is not None:
+            n_pad, P_pad = max(n_pad, pad_to[0]), max(P_pad, pad_to[1])
         B = len(arrays)
         order = np.zeros((B, n_pad), dtype=np.int32)
         pred = np.full((B, n_pad, P_pad), -1, dtype=np.int32)
         delay = np.zeros((B, n_pad, P_pad), dtype=np.float64)
+        floor = np.zeros((B, n_pad), dtype=np.float64)
         for b, (o, p, d) in enumerate(arrays):
             n, Pi = p.shape
             order[b, :n] = o
             order[b, n:] = n  # empty slice for the bucket's largest item
             pred[b, :n, :Pi] = p
             delay[b, :n, :Pi] = d
+            if floors is not None:
+                floor[b, :n] = floors[b]
         return BatchedPlanDag(order=jnp.asarray(order),
                               pred=jnp.asarray(pred),
                               pred_mask=jnp.asarray(pred >= 0),
-                              pred_delay=jnp.asarray(delay))
+                              pred_delay=jnp.asarray(delay),
+                              floor=jnp.asarray(floor))
 
 
 def _pad_times(times: np.ndarray, n_pad: int) -> np.ndarray:
@@ -264,12 +310,12 @@ def bucket_plans(items: list[tuple[TaskGraph, Plan]]
 def _bucket_makespans(bd: BatchedPlanDag, times: jnp.ndarray) -> jnp.ndarray:
     _TRACES["bucket"] += 1  # trace-time side effect: counts compiles
 
-    def per_item(order, pred, mask, delay, t):
+    def per_item(order, pred, mask, delay, floor, t):
         return jax.vmap(partial(_one_makespan,
-                                PlanDag(order, pred, mask, delay)))(t)
+                                PlanDag(order, pred, mask, delay, floor)))(t)
 
     return jax.vmap(per_item)(bd.order, bd.pred, bd.pred_mask,
-                              bd.pred_delay, times)
+                              bd.pred_delay, bd.floor, times)
 
 
 def _bucket_makespans_sharded(bd: BatchedPlanDag,
@@ -291,13 +337,21 @@ def _bucket_makespans_sharded(bd: BatchedPlanDag,
 
 
 def bucketed_makespans(items: list[tuple[TaskGraph, Plan]],
-                       times: list[np.ndarray]) -> list[np.ndarray]:
+                       times: list[np.ndarray],
+                       floors: list[np.ndarray] | None = None,
+                       envelope: bool = False) -> list[np.ndarray]:
     """Replay many different plans under per-plan times matrices.
 
     Args:
       items: (graph, plan) pairs — arbitrary mixed sizes.
       times: matching (S, n_i) realized-time matrices; S must agree across
              items (one campaign = one seed grid).
+      floors: optional matching (n_i,) per-task start floors (release times
+             or busy-machine conditioning, see ``rollout_floors``).
+      envelope: pad every bucket to its full power-of-two (n, fan-in)
+             envelope instead of the per-call maxima, so *repeated* calls
+             with same-bucket items (the simulation-in-the-loop rollout
+             pattern) reuse one compiled shape instead of retracing.
 
     Returns a list of (S,) makespan arrays, one per item, in input order.
     Cost: one jitted vmapped scan per *bucket* (power-of-two envelope of
@@ -305,6 +359,8 @@ def bucketed_makespans(items: list[tuple[TaskGraph, Plan]],
     """
     if len(items) != len(times):
         raise ValueError("items and times must align")
+    if floors is not None and len(floors) != len(items):
+        raise ValueError("floors and items must align")
     if not items:
         return []
     S = {t.shape[0] for t in times}
@@ -316,7 +372,10 @@ def bucketed_makespans(items: list[tuple[TaskGraph, Plan]],
 
     out: list[np.ndarray | None] = [None] * len(items)
     for key, idxs in bucket_plans(items).items():
-        bd = BatchedPlanDag.from_plans([items[i] for i in idxs])
+        bd = BatchedPlanDag.from_plans(
+            [items[i] for i in idxs],
+            floors=[floors[i] for i in idxs] if floors is not None else None,
+            pad_to=key if envelope else None)
         tt = np.stack([_pad_times(np.asarray(times[i], dtype=np.float64),
                                   bd.n_pad) for i in idxs])
         ms = np.asarray(_bucket_makespans_sharded(bd, jnp.asarray(tt)))
@@ -325,15 +384,22 @@ def bucketed_makespans(items: list[tuple[TaskGraph, Plan]],
     return out  # type: ignore[return-value]
 
 
-def sweep_suite_makespans(entries, *, noise: NoiseModel, seeds) -> list[np.ndarray]:
+def sweep_suite_makespans(entries, *, noise: NoiseModel, seeds,
+                          floor_fn=None, envelope: bool = False) -> list[np.ndarray]:
     """One-jit-per-bucket campaign sweep over heterogeneous (g, machine,
     scheduler) entries: allocate each plan once, sample its noise grid with
     the engine-identical streams, and evaluate every (entry × seed) makespan
     through the bucketed batch path.
 
+    ``floor_fn(g, plan) -> (n,)`` optionally conditions each replay on
+    per-task start floors (busy machine / release times); ``envelope=True``
+    pads to the full bucket envelope so repeated small sweeps — the
+    simulation-in-the-loop rollout pattern of ``repro.streams.policy`` —
+    stay at one XLA compile per shape bucket across calls.
+
     Returns a list of (S,) arrays aligned with ``entries``.
     """
-    items, rows = [], []
+    items, rows, floors = [], [], []
     for g, machine, scheduler in entries:
         plan = scheduler.allocate(g, machine)
         if plan is None:
@@ -341,4 +407,8 @@ def sweep_suite_makespans(entries, *, noise: NoiseModel, seeds) -> list[np.ndarr
                              "the batch path needs a static plan")
         items.append((g, plan))
         rows.append(sample_actual_batch(g, plan, noise, seeds))
-    return bucketed_makespans(items, rows)
+        if floor_fn is not None:
+            floors.append(np.asarray(floor_fn(g, plan), dtype=np.float64))
+    return bucketed_makespans(items, rows,
+                              floors=floors if floor_fn is not None else None,
+                              envelope=envelope)

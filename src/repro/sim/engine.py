@@ -132,6 +132,11 @@ class MachineState:
     def earliest_idle(self, q: int) -> float:
         return self.free[q][0][0] if self.free[q] else np.inf
 
+    def busy_until(self, q: int) -> np.ndarray:
+        """Sorted (ascending) commitment horizon of every type-q processor —
+        the state a simulation-in-the-loop rollout conditions on."""
+        return np.sort([f for f, _ in self.free[q]])
+
     def commit(self, q: int, ready: float, p: float) -> tuple[int, float, float]:
         if not self.free[q]:
             raise RuntimeError(f"no processors of type {q}")
@@ -162,10 +167,11 @@ class Scheduler(Protocol):
 @dataclasses.dataclass(frozen=True)
 class TraceEvent:
     time: float
-    event: str          # "start" | "finish"
-    task: int
+    event: str          # "start" | "finish" | "job_release" | "job_finish"
+    task: int           # task id, or job id for job_* events
     rtype: int
     proc: int
+    job: int = -1       # owning job when ``simulate`` is given ``job_of``
 
 
 @dataclasses.dataclass(frozen=True)
@@ -174,10 +180,23 @@ class SimResult:
     actual: np.ndarray          # (n, Q) realized processing times
     trace: tuple[TraceEvent, ...]
     scheduler: str
+    job_of: np.ndarray | None = None   # (n,) owning job per task, if multi-job
 
     @property
     def makespan(self) -> float:
         return self.schedule.makespan
+
+    def job_spans(self) -> dict[int, tuple[float, float]]:
+        """Per-job (first start, last finish) — the completion events of a
+        multi-job run.  Empty when the run carried no ``job_of`` labels."""
+        if self.job_of is None:
+            return {}
+        spans: dict[int, tuple[float, float]] = {}
+        for jid in np.unique(self.job_of):
+            sel = self.job_of == jid
+            spans[int(jid)] = (float(self.schedule.start[sel].min()),
+                               float(self.schedule.finish[sel].max()))
+        return spans
 
 
 # ------------------------------------------------------------------- engine
@@ -255,10 +274,63 @@ def _run_arrivals(g: TaskGraph, machine: Machine, scheduler: Scheduler,
     return alloc, proc, start, finish
 
 
+def run_arrivals_ready(g: TaskGraph, machine: Machine, scheduler: Scheduler,
+                       times_matrix: np.ndarray, release: np.ndarray,
+                       state: MachineState | None = None):
+    """Event-driven arrival loop: tasks arrive when they become *ready* —
+    every predecessor committed-and-finished and the release time passed —
+    and are committed in ready-time order (ties broken by task id).
+
+    This is the open-system semantics of ``repro.streams``: with a single
+    job released at 0 it visits tasks in a valid topological order, so it
+    coincides with the paper's model up to the arrival permutation.
+
+    ``state`` optionally seeds the machine with existing commitments — how
+    the simulation-in-the-loop policy rolls a candidate out against the
+    backlog it would actually face (the caller owns the state and should
+    pass a clone when the run must not mutate it).
+    """
+    from repro.core.online import ready_per_type
+
+    n = g.n
+    state = MachineState(machine.counts) if state is None else state
+    alloc = np.zeros(n, dtype=np.int32)
+    proc = np.zeros(n, dtype=np.int32)
+    start = np.zeros(n)
+    finish = np.zeros(n)
+    remaining = np.diff(g.pred_ptr).astype(np.int64)
+    heap: list[tuple[float, int]] = [
+        (float(release[j]), int(j)) for j in np.flatnonzero(remaining == 0)]
+    heapq.heapify(heap)
+    done = 0
+    while heap:
+        t, j = heapq.heappop(heap)
+        ready = ready_per_type(g, j, finish, alloc, machine.num_types,
+                               floor=max(float(release[j]), t))
+        q = int(scheduler.on_task_arrival(j, ready, state))
+        if not 0 <= q < machine.num_types:
+            raise ValueError(f"scheduler {scheduler.name} returned bad type {q}")
+        alloc[j] = q
+        proc[j], start[j], finish[j] = state.commit(q, float(ready[q]),
+                                                    times_matrix[j, q])
+        done += 1
+        for v in map(int, g.succs(j)):
+            remaining[v] -= 1
+            if remaining[v] == 0:
+                p0, p1 = g.pred_ptr[v], g.pred_ptr[v + 1]
+                arr = max(float(release[v]), float(finish[g.pred_idx[p0:p1]].max()))
+                heapq.heappush(heap, (arr, v))
+    if done != n:
+        raise RuntimeError("ready-driven arrival loop stalled (cyclic graph?)")
+    return alloc, proc, start, finish
+
+
 def simulate(g: TaskGraph, machine: Machine, scheduler: Scheduler, *,
              noise: NoiseModel | None = None, seed: int = 0,
              release: np.ndarray | None = None,
              order: np.ndarray | None = None,
+             arrival: str = "order",
+             job_of: np.ndarray | None = None,
              validate: bool = True, trace: bool = False) -> SimResult:
     """Run one scheduler over one instance under seeded stochastic runtimes.
 
@@ -272,6 +344,16 @@ def simulate(g: TaskGraph, machine: Machine, scheduler: Scheduler, *,
                 earlier); turns the instance into an online one.
       order:    optional precedence-respecting arrival order for
                 arrival-driven schedulers (default: ``g.topo``).
+      arrival:  ``"order"`` — arrival-driven schedulers see tasks in the
+                fixed ``order`` (the paper's §4.2 one-at-a-time model);
+                ``"ready"`` — event-driven: tasks arrive when all their
+                predecessors have finished and the release time has passed
+                (the open-system model of ``repro.streams``; ``order`` is
+                then ignored).
+      job_of:   optional (n,) job label per task for multi-job instances
+                (a disjoint union of whole-DAG jobs released over time):
+                the result then carries per-job completion spans and, with
+                ``trace=True``, job_release/job_finish events.
       validate: check the two feasibility invariants on the result.
       trace:    record start/finish ``TraceEvent``s (off by default: cheap
                 campaigns don't pay for them).
@@ -281,6 +363,12 @@ def simulate(g: TaskGraph, machine: Machine, scheduler: Scheduler, *,
     release = np.zeros(g.n) if release is None else np.asarray(release, float)
     if release.shape != (g.n,):
         raise ValueError(f"release must be (n,), got {release.shape}")
+    if arrival not in ("order", "ready"):
+        raise ValueError(f"arrival must be 'order' or 'ready', got {arrival!r}")
+    if job_of is not None:
+        job_of = np.asarray(job_of, dtype=np.int64)
+        if job_of.shape != (g.n,):
+            raise ValueError(f"job_of must be (n,), got {job_of.shape}")
 
     plan = scheduler.allocate(g, machine)
     if plan is not None:
@@ -290,24 +378,43 @@ def simulate(g: TaskGraph, machine: Machine, scheduler: Scheduler, *,
                          proc=np.asarray(plan.proc, dtype=np.int32),
                          start=start, finish=finish)
     else:
-        alloc, proc, start, finish = _run_arrivals(
-            g, machine, scheduler, actual, release,
-            g.topo if order is None else order)
+        if arrival == "ready":
+            alloc, proc, start, finish = run_arrivals_ready(
+                g, machine, scheduler, actual, release)
+        else:
+            alloc, proc, start, finish = _run_arrivals(
+                g, machine, scheduler, actual, release,
+                g.topo if order is None else order)
         sched = Schedule(alloc=alloc, proc=proc, start=start, finish=finish)
 
     if validate:
         g_actual = dataclasses.replace(g, proc=actual)
         sched.validate(g_actual, list(machine.counts))
+        if (sched.start < release - 1e-9).any():
+            raise AssertionError("task starts before its release time")
 
     events: tuple[TraceEvent, ...] = ()
     if trace:
+        jl = (lambda j: int(job_of[j])) if job_of is not None else (lambda j: -1)
         ev = [TraceEvent(float(sched.start[j]), "start", j,
-                         int(sched.alloc[j]), int(sched.proc[j]))
+                         int(sched.alloc[j]), int(sched.proc[j]), jl(j))
               for j in range(g.n)]
         ev += [TraceEvent(float(sched.finish[j]), "finish", j,
-                          int(sched.alloc[j]), int(sched.proc[j]))
+                          int(sched.alloc[j]), int(sched.proc[j]), jl(j))
                for j in range(g.n)]
-        events = tuple(sorted(ev, key=lambda e: (e.time, e.event == "finish",
+        if job_of is not None:
+            for jid in map(int, np.unique(job_of)):
+                sel = job_of == jid
+                ev.append(TraceEvent(float(release[sel].min()), "job_release",
+                                     jid, -1, -1, jid))
+                ev.append(TraceEvent(float(sched.finish[sel].max()),
+                                     "job_finish", jid, -1, -1, jid))
+        # rank ties: a job's release precedes its tasks' starts, and its
+        # finish follows the coincident last task finish
+        rank = {"job_release": 0, "start": 1, "finish": 2, "job_finish": 3}
+        events = tuple(sorted(ev, key=lambda e: (e.time, rank[e.event],
                                                  e.task)))
     return SimResult(schedule=sched, actual=actual, trace=events,
-                     scheduler=getattr(scheduler, "name", type(scheduler).__name__))
+                     scheduler=getattr(scheduler, "name",
+                                       type(scheduler).__name__),
+                     job_of=job_of)

@@ -20,6 +20,11 @@ Families cover the paper's §6.1 workloads and beyond:
   * ``from_workloads`` — bridge to any ``repro.core.workloads.chameleon``
                     application (posv, potri, potrs, …).
 
+Trace I/O (not a seeded family — takes a path, call directly):
+``from_estee`` imports an ESTEE-format JSON workflow (durations +
+data-transfer sizes mapped onto ``TaskGraph.comm``); ``to_estee`` is its
+dual.
+
 Synthetic families draw per-task CPU times and per-type speedups from the
 paper's recipe: a small fraction of tasks is *slower* on the accelerator
 (speedup in [0.1, 0.5]), the rest accelerated up to 50× — the qualitative
@@ -67,11 +72,20 @@ class Scenario:
 # ------------------------------------------------------- processing times
 def heterogeneous_times(n: int, num_types: int, rng: np.random.Generator, *,
                         cpu_mean: float = 10.0, slow_frac: float = 0.05,
-                        speedup: tuple[float, float] = (0.5, 50.0)) -> np.ndarray:
+                        speedup: tuple[float, float] = (0.5, 50.0),
+                        cpu: np.ndarray | None = None) -> np.ndarray:
     """(n, Q) estimates: CPU ~ lognormal around ``cpu_mean``; each extra type
     accelerates most tasks by U[speedup] and *slows* a ``slow_frac`` fraction
-    by U[0.1, 0.5] (the paper's §6.1 recipe)."""
-    cpu = cpu_mean * rng.lognormal(0.0, 0.5, size=n)
+    by U[0.1, 0.5] (the paper's §6.1 recipe).
+
+    ``cpu`` optionally fixes the per-task reference times instead of drawing
+    them — how trace importers reuse the speedup recipe verbatim."""
+    if cpu is None:
+        cpu = cpu_mean * rng.lognormal(0.0, 0.5, size=n)
+    else:
+        cpu = np.asarray(cpu, dtype=np.float64)
+        if cpu.shape != (n,):
+            raise ValueError(f"cpu must be ({n},), got {cpu.shape}")
     proc = np.empty((n, num_types))
     proc[:, 0] = cpu
     for q in range(1, num_types):
@@ -235,6 +249,91 @@ def from_workloads(app: str = "posv", nb_blocks: int = 5, block_size: int = 320,
                     "workloads", g, _machine(counts, rng), seed)
 
 
+# ---------------------------------------------------------------- trace I/O
+def from_estee(path, *, counts=(8, 2), num_types: int = 2,
+               bandwidth: float = 1.0, seed: int = 0,
+               slow_frac: float = 0.05,
+               speedup: tuple[float, float] = (0.5, 50.0)) -> Scenario:
+    """Import an ESTEE-format JSON workflow as a scenario.
+
+    The format (Böhm & Beránek's ESTEE serialization, reduced to what the
+    machine model consumes) is ``{"tasks": [...]}`` where each task carries
+    a ``duration`` (seconds on the reference/CPU type), optional
+    ``durations`` (explicit per-type times, as ``to_estee`` writes), and
+    ``outputs: [{"size": bytes, "consumers": [task ids]}]`` — each
+    (task, consumer) pair becomes a DAG edge whose transfer cost is
+    ``size / bandwidth``, landing on ``TaskGraph.comm``.
+
+    Tasks without explicit ``durations`` get the missing types synthesized
+    with the paper's §6.1 speedup recipe from a generator seeded by
+    ``seed`` — deterministic, so a trace always maps to the same scenario.
+    """
+    import json
+    import os
+    with open(path) as f:
+        doc = json.load(f)
+    tasks = doc["tasks"]
+    n = len(tasks)
+    ids = {t.get("id", i): i for i, t in enumerate(tasks)}
+    rng = np.random.default_rng([seed, 0xE57EE])
+    proc = np.empty((n, num_types))
+    synth = []
+    for i, t in enumerate(tasks):
+        if "durations" in t:
+            d = np.asarray(t["durations"], dtype=np.float64)
+            if d.shape != (num_types,):
+                raise ValueError(f"task {i}: durations must have {num_types} "
+                                 f"entries, got {d.shape}")
+            proc[i] = d
+        else:
+            synth.append(i)
+    if synth:
+        proc[synth] = heterogeneous_times(
+            len(synth), num_types, rng, slow_frac=slow_frac, speedup=speedup,
+            cpu=[float(tasks[i]["duration"]) for i in synth])
+    edges, comm = [], []
+    for i, t in enumerate(tasks):
+        for out in t.get("outputs", ()):
+            for c in out["consumers"]:
+                edges.append((i, ids[c]))
+                comm.append(float(out.get("size", 0.0)) / bandwidth)
+    names = [str(t.get("name", f"t{i}")) for i, t in enumerate(tasks)]
+    g = TaskGraph.build(proc, edges, names=names,
+                        comm=np.asarray(comm, dtype=np.float64))
+    tag = os.path.splitext(os.path.basename(str(path)))[0]
+    return Scenario(f"estee_{tag}_s{seed}", "estee", g,
+                    _machine(counts, rng), seed)
+
+
+def to_estee(g: TaskGraph, path, *, bandwidth: float = 1.0) -> None:
+    """Export a ``TaskGraph`` as ESTEE-format JSON (``from_estee``'s dual).
+
+    Writes explicit per-type ``durations`` (plus the scalar ``duration`` =
+    type-0 time for ESTEE compatibility) and one output per edge with
+    ``size = comm * bandwidth``, so ``from_estee(to_estee(g))`` round-trips
+    ``proc``, the edge set, and ``comm`` exactly.
+    """
+    import json
+    tasks = []
+    for i in range(g.n):
+        outputs = [{"size": float(g.comm[e] * bandwidth),
+                    "consumers": [int(j)]}
+                   for j, e in zip(g.succs(i), g.succ_edges(i))]
+        tasks.append({
+            "id": i,
+            "name": g.names[i] if g.names else f"t{i}",
+            "duration": float(g.proc[i, 0]),
+            "durations": [float(x) for x in g.proc[i]],
+            "outputs": outputs,
+        })
+    with open(path, "w") as f:
+        json.dump({"tasks": tasks}, f, indent=1)
+
+
+# NOTE: ``from_estee`` is intentionally *not* in SCENARIO_FAMILIES — every
+# registry entry is a seeded generator sharing the (counts, num_types, ccr,
+# seed) knob contract (what ``JobFactory`` relies on); the trace importer
+# needs a path and carries its comm in the trace, so call it directly.
 SCENARIO_FAMILIES: dict[str, Callable[..., Scenario]] = {
     "chain": chain_scenario,
     "fork_join": fork_join_scenario,

@@ -1,0 +1,52 @@
+"""repro.streams — multi-tenant open-system workload streams.
+
+The closed-campaign simulator (``repro.sim``) answers "which scheduler
+finishes *this* DAG fastest"; this package answers the production question:
+with whole DAG jobs from many tenants arriving over time, **what does each
+tenant experience**?  It layers on top of the PR-1/2 stack:
+
+  * ``arrivals``  — seeded arrival processes (Poisson, bursty MMPP,
+                    closed-loop think time) emitting whole-DAG jobs drawn
+                    from the scenario families;
+  * ``engine``    — the open-system event loop: ready-driven irrevocable
+                    commits across all in-flight jobs on one shared
+                    ``MachineState``, with job-completion feedback;
+  * ``tenants`` / ``metrics`` — per-tenant job tracking and open-system
+                    metrics (response time, bounded slowdown p50/p95,
+                    per-type utilization, queue lengths over time);
+  * ``replay``    — ESTEE-format workflow traces and the paper's Chameleon
+                    workloads as timed job streams;
+  * ``policy``    — every ``repro.sim`` adapter as a stream policy, plus
+                    ``SimInTheLoop``: allocation search by state-conditioned
+                    vmapped rollouts through the bucketed one-jit evaluator,
+                    degrading to plain ER-LS under a latency budget.
+
+Entry points::
+
+    from repro.sim.engine import Machine
+    from repro.streams import (JobFactory, PoissonProcess, open_stream,
+                               make_policy, run_stream)
+
+    src = open_stream(PoissonProcess(0.05), JobFactory(), num_jobs=20, seed=0)
+    res = run_stream(src, Machine.hybrid(8, 2), make_policy("sim_in_the_loop"))
+    print(res.tenant_table(), res.utilization())
+"""
+from .arrivals import (DEFAULT_JOB_PARAMS, ClosedLoopSource, Job, JobFactory,
+                       MMPPProcess, OpenLoopSource, PoissonProcess,
+                       open_stream)
+from .engine import StreamResult, run_stream
+from .metrics import (bounded_slowdown, job_slowdowns, mean_queue_length,
+                      queue_length_series, tenant_summary, utilization)
+from .policy import AdapterPolicy, SimInTheLoop, StreamPolicy, make_policy
+from .replay import chameleon_stream, replay_estee
+from .tenants import JobRecord, TaskRecord, TenantLedger
+
+__all__ = [
+    "DEFAULT_JOB_PARAMS", "ClosedLoopSource", "Job", "JobFactory",
+    "MMPPProcess", "OpenLoopSource", "PoissonProcess", "open_stream",
+    "StreamResult", "run_stream", "bounded_slowdown", "job_slowdowns",
+    "mean_queue_length", "queue_length_series", "tenant_summary",
+    "utilization", "AdapterPolicy", "SimInTheLoop", "StreamPolicy",
+    "make_policy", "chameleon_stream", "replay_estee", "JobRecord",
+    "TaskRecord", "TenantLedger",
+]

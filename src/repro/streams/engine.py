@@ -1,0 +1,194 @@
+"""The open-system event loop: multi-tenant DAG jobs over one shared machine.
+
+Extends ``repro.sim.engine``'s single-instance semantics to a *stream*:
+jobs (whole DAGs) are released over time by a source — an open-loop timed
+list or a closed-loop think-time source — and every task is committed
+irrevocably when it becomes *ready* (job released, all predecessors
+finished), in ready-time order across all in-flight jobs.  The machine is
+the same typed-pool ``MachineState`` the single-instance engine uses; the
+policy sees it plus the per-type data-ready vector, exactly the §4.2
+interface, so any ``repro.sim`` adapter drops in unchanged
+(``repro.streams.policy.AdapterPolicy``).
+
+Job completion events feed back into the source (closed-loop tenants
+submit their next job one think time after the previous completes) and into
+the ``TenantLedger`` that the open-system metrics aggregate.
+
+Determinism: one run is a pure function of (source, policy, noise, seed).
+Job j's realized runtimes come from ``default_rng([seed, jid])`` — the
+noise stream of a job does not depend on what else is in flight.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+
+import numpy as np
+
+from repro.core.listsched import Schedule
+from repro.core.online import ready_per_type
+from repro.core.theory import makespan_lower_bound
+from repro.sim.engine import Machine, MachineState, NoiseModel
+
+from .arrivals import Job
+from .metrics import (BSLD_TAU, job_slowdowns, mean_queue_length,
+                      tenant_summary, utilization)
+from .tenants import JobRecord, TaskRecord, TenantLedger
+
+
+class _JobState:
+    """Mutable per-job bookkeeping while the job is in flight."""
+
+    __slots__ = ("job", "actual", "alloc", "proc", "start", "finish",
+                 "remaining", "committed")
+
+    def __init__(self, job: Job, actual: np.ndarray):
+        n = job.graph.n
+        self.job = job
+        self.actual = actual                      # (n, Q) realized times
+        self.alloc = np.zeros(n, dtype=np.int32)
+        self.proc = np.zeros(n, dtype=np.int32)
+        self.start = np.zeros(n)
+        self.finish = np.zeros(n)
+        self.remaining = np.diff(job.graph.pred_ptr).astype(np.int64)
+        self.committed = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamResult:
+    """Everything one open-system run produced."""
+
+    policy: str
+    machine: Machine
+    jobs: list[JobRecord]
+    tasks: list[TaskRecord]
+    horizon: float
+
+    def tenant_table(self, tau: float = BSLD_TAU) -> dict[int, dict[str, float]]:
+        return tenant_summary(self.jobs, tau)
+
+    def slowdowns(self, tau: float = BSLD_TAU) -> np.ndarray:
+        return job_slowdowns(self.jobs, tau)
+
+    def mean_slowdown(self, tau: float = BSLD_TAU) -> float:
+        sd = self.slowdowns(tau)
+        return float(sd.mean()) if sd.size else 1.0
+
+    def utilization(self) -> np.ndarray:
+        return utilization(self.tasks, self.machine, self.horizon)
+
+    def mean_queue_length(self) -> float:
+        return mean_queue_length(self.tasks)
+
+
+def _validate_stream(states: dict[int, _JobState], tasks: list[TaskRecord],
+                     counts: list[int]) -> None:
+    """Feasibility across the whole stream: per-job precedence + release via
+    ``Schedule.validate``, plus no overlap on any shared processor."""
+    for js in states.values():
+        g = dataclasses.replace(js.job.graph, proc=js.actual)
+        Schedule(alloc=js.alloc, proc=js.proc, start=js.start,
+                 finish=js.finish).validate(g, counts)
+        if (js.start < js.job.arrival - 1e-9).any():
+            raise AssertionError(
+                f"job {js.job.jid}: task starts before the job's release")
+    by_proc: dict[tuple[int, int], list[TaskRecord]] = {}
+    for t in tasks:
+        by_proc.setdefault((t.rtype, t.proc), []).append(t)
+    for plist in by_proc.values():
+        plist = sorted(plist, key=lambda t: t.start)
+        for a, b in zip(plist[:-1], plist[1:]):
+            if b.start < a.finish - 1e-9:
+                raise AssertionError(
+                    f"overlap on type {a.rtype} proc {a.proc}: "
+                    f"jobs {a.jid}/{b.jid}")
+
+
+def run_stream(source, machine: Machine, policy, *,
+               noise: NoiseModel | None = None, seed: int = 0,
+               validate: bool = True) -> StreamResult:
+    """Run one policy over one job stream to completion.
+
+    Args:
+      source:  job source — ``initial_jobs() -> list[Job]`` plus
+               ``on_job_complete(job, finish) -> Job | None`` (open-loop
+               sources return None; closed-loop sources submit the tenant's
+               next job).
+      machine: shared typed processor pools.
+      policy:  a stream policy — ``on_job_arrival(job, t, state, machine)``,
+               ``assign(job, i, ready, state) -> type`` and optionally
+               ``on_job_complete(job)`` (see ``repro.streams.policy``).
+      noise:   multiplicative runtime misprediction, seeded per job.
+      seed:    stream-level seed; job jid draws ``default_rng([seed, jid])``.
+      validate: check per-job precedence/release and cross-job non-overlap.
+    """
+    noise = noise or NoiseModel()
+    ledger = TenantLedger()
+    state = MachineState(machine.counts)
+    counts = list(machine.counts)
+    states: dict[int, _JobState] = {}
+    # (time, kind, seq, payload): job releases sort before task arrivals at
+    # equal times (kind 0 < 1); seq makes the order total and deterministic.
+    seq = itertools.count()
+    heap: list[tuple[float, int, int, object]] = []
+    for job in source.initial_jobs():
+        heapq.heappush(heap, (float(job.arrival), 0, next(seq), job))
+
+    while heap:
+        t, kind, _, payload = heapq.heappop(heap)
+        if kind == 0:                                   # job release
+            job: Job = payload                          # type: ignore[assignment]
+            if job.jid in states:
+                raise ValueError(f"duplicate job id {job.jid}")
+            actual = noise.sample(job.graph.proc,
+                                  np.random.default_rng([seed, job.jid]))
+            js = states[job.jid] = _JobState(job, actual)
+            policy.on_job_arrival(job, t, state, machine)
+            for i in np.flatnonzero(js.remaining == 0):
+                heapq.heappush(heap, (t, 1, next(seq), (js, int(i))))
+            continue
+
+        js, i = payload                                 # type: ignore[misc]
+        g = js.job.graph
+        ready = ready_per_type(g, i, js.finish, js.alloc, machine.num_types,
+                               floor=t)
+        q = int(policy.assign(js.job, i, ready, state))
+        if not 0 <= q < machine.num_types:
+            raise ValueError(f"policy {policy.name} returned bad type {q}")
+        js.alloc[i] = q
+        pid, s, f = state.commit(q, float(ready[q]), float(js.actual[i, q]))
+        js.proc[i], js.start[i], js.finish[i] = pid, s, f
+        js.committed += 1
+        ledger.add_task(TaskRecord(jid=js.job.jid, task=i,
+                                   tenant=js.job.tenant, rtype=q, proc=pid,
+                                   arrival=t, start=s, finish=f))
+        for v in map(int, g.succs(i)):
+            js.remaining[v] -= 1
+            if js.remaining[v] == 0:
+                p0, p1 = g.pred_ptr[v], g.pred_ptr[v + 1]
+                arr = float(js.finish[g.pred_idx[p0:p1]].max())
+                heapq.heappush(heap, (max(arr, float(js.job.arrival)), 1,
+                                      next(seq), (js, v)))
+        if js.committed == g.n:                          # job complete
+            jfin = float(js.finish.max())
+            busy = tuple(float(js.actual[np.arange(g.n), js.alloc]
+                               [js.alloc == qq].sum())
+                         for qq in range(machine.num_types))
+            ledger.add_job(JobRecord(
+                jid=js.job.jid, tenant=js.job.tenant, name=js.job.name,
+                arrival=float(js.job.arrival), start=float(js.start.min()),
+                finish=jfin, ref=makespan_lower_bound(g, counts),
+                n_tasks=g.n, busy=busy))
+            hook = getattr(policy, "on_job_complete", None)
+            if hook is not None:
+                hook(js.job)
+            nxt = source.on_job_complete(js.job, jfin)
+            if nxt is not None:
+                heapq.heappush(heap, (float(nxt.arrival), 0, next(seq), nxt))
+
+    if validate:
+        _validate_stream(states, ledger.tasks, counts)
+    return StreamResult(policy=getattr(policy, "name", type(policy).__name__),
+                        machine=machine, jobs=ledger.jobs,
+                        tasks=ledger.tasks, horizon=ledger.horizon)

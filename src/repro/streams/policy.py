@@ -1,0 +1,225 @@
+"""Stream allocation policies — including simulation-in-the-loop.
+
+A stream policy takes the open system's irrevocable per-task type decision:
+
+  * ``on_job_arrival(job, t, state, machine)`` — the whole DAG is revealed;
+  * ``assign(job, i, ready, state) -> type``   — task ``i`` of ``job`` is
+    ready; ``ready`` is the (Q,) per-type data-ready vector and ``state``
+    the shared committed-machine view;
+  * ``on_job_complete(job)`` — bookkeeping hook.
+
+``AdapterPolicy`` lifts any ``repro.sim`` adapter into this interface:
+arrival-driven adapters (er_ls, eft, greedy_*, random) decide per task
+against the *shared* machine state; static planners (heft, hlp_*) plan each
+job at its arrival and contribute their allocation (the machine itself is
+list-scheduled greedily across jobs — the paper's two-phase split, applied
+per job).
+
+``SimInTheLoop`` is the ROADMAP's simulation-in-the-loop allocator: at each
+job arrival it materializes candidate plans (ER-LS rollout, HEFT-comm,
+greedy variants), conditions them on the *current* machine state via
+per-task start floors (``rollout_floors``), evaluates every
+(candidate × rollout-seed) makespan through the padded/bucketed one-jit
+evaluator (``sweep_suite_makespans(envelope=True)`` — one XLA compile per
+shape bucket across the whole stream), and commits the job to the argmin
+candidate's allocation.  When a latency budget is set and the observed
+rollout cost exceeds it, the policy degrades to plain ER-LS — the paper's
+online rule — so the allocator never stalls the dispatch path.
+"""
+from __future__ import annotations
+
+import heapq
+import time
+
+import numpy as np
+
+from repro.core.listsched import Schedule
+from repro.sim.adapters import FrozenPlanScheduler, make_scheduler
+from repro.sim.batch import rollout_floors, sweep_suite_makespans
+from repro.sim.engine import (Machine, MachineState, NoiseModel, Plan,
+                              run_arrivals_ready)
+
+from .arrivals import Job
+
+
+def _clone_state(busy: list[np.ndarray], now: float,
+                 counts: tuple[int, ...]) -> MachineState:
+    """A fresh ``MachineState`` whose processors only free up at the given
+    horizons (relative to ``now``) — the backlog a rollout conditions on."""
+    st = MachineState(counts)
+    st.free = [[(max(float(b) - now, 0.0), p) for p, b in enumerate(bq)]
+               for bq in busy]
+    for h in st.free:
+        heapq.heapify(h)
+    return st
+
+
+def conditioned_plan(adapter: str, g, machine: Machine,
+                     busy: list[np.ndarray], now: float, **kw) -> Plan:
+    """Materialize a candidate as the schedule it would actually produce
+    against the current backlog: run the ready-order arrival loop from a
+    cloned busy ``MachineState`` on the runtime estimates.  Static adapters
+    contribute their *allocation* (what the open system keeps of a static
+    plan); arrival-driven ones take their per-task decisions against the
+    busy state — so every candidate's plan has realistic sequences, and its
+    floored replay through the bucketed evaluator predicts its response.
+    """
+    sched = make_scheduler(adapter, **kw)
+    plan0 = sched.allocate(g, machine)
+    if plan0 is not None:
+        sched = FrozenPlanScheduler(plan0, name=adapter)
+    alloc, proc, start, finish = run_arrivals_ready(
+        g, machine, sched, g.proc, np.zeros(g.n),
+        state=_clone_state(busy, now, machine.counts))
+    return Plan.from_schedule(
+        Schedule(alloc=alloc, proc=proc, start=start, finish=finish),
+        machine.counts)
+
+
+class StreamPolicy:
+    """Base: no-op job hooks; subclasses implement ``assign``."""
+
+    name = "stream"
+
+    def on_job_arrival(self, job: Job, t: float, state: MachineState,
+                       machine: Machine) -> None:
+        pass
+
+    def on_job_complete(self, job: Job) -> None:
+        pass
+
+    def assign(self, job: Job, i: int, ready: np.ndarray,
+               state: MachineState) -> int:
+        raise NotImplementedError
+
+
+class AdapterPolicy(StreamPolicy):
+    """Any ``repro.sim`` adapter as a per-job stream policy.
+
+    A fresh adapter instance is built per job (so per-job state like the
+    random adapter's RNG stays reproducible: its seed is derived from the
+    job id), and static adapters re-plan on the job's own DAG at arrival.
+    """
+
+    def __init__(self, adapter: str, **kw):
+        self.adapter = adapter
+        self.name = adapter
+        self._kw = kw
+        self._by_job: dict[int, tuple] = {}
+
+    def on_job_arrival(self, job, t, state, machine):
+        kw = dict(self._kw)
+        if self.adapter == "random":
+            kw.setdefault("seed", job.jid)
+        sched = make_scheduler(self.adapter, **kw)
+        plan = sched.allocate(job.graph, machine)
+        self._by_job[job.jid] = (sched, plan)
+
+    def assign(self, job, i, ready, state):
+        sched, plan = self._by_job[job.jid]
+        if plan is not None:
+            return int(plan.alloc[i])
+        return int(sched.on_task_arrival(i, ready, state))
+
+    def on_job_complete(self, job):
+        self._by_job.pop(job.jid, None)
+
+
+class SimInTheLoop(StreamPolicy):
+    """Pick each job's allocation by cheap vmapped rollouts at arrival.
+
+    Args:
+      candidates:    adapter names whose materialized plans compete; each is
+                     conditioned on the current backlog via
+                     ``conditioned_plan`` before evaluation.
+      rollout_seeds: noise seeds per rollout; with ``rollout_noise=None``
+                     a single estimate-replay rollout per candidate.
+      rollout_noise: optional misprediction model applied inside rollouts.
+      budget_s:      soft per-arrival latency budget.  The policy tracks an
+                     EWMA of observed rollout wall-clock (the first rollout
+                     is treated as warmup and not recorded — it pays the
+                     one-time XLA compile); while the EWMA exceeds the
+                     budget, jobs fall back to ``fallback`` (plain ER-LS)
+                     without rolling out, and the estimate decays on every
+                     skipped arrival so the policy re-qualifies once the
+                     spike has passed.  ``None`` = always roll out
+                     (deterministic; what tests and campaigns use).
+      fallback:      arrival-driven adapter used when over budget.
+    """
+
+    def __init__(self, candidates=("er_ls", "eft", "heft", "greedy_r2"), *,
+                 rollout_seeds=(0,), rollout_noise: NoiseModel | None = None,
+                 budget_s: float | None = None, fallback: str = "er_ls"):
+        self.candidates = tuple(candidates)
+        if not self.candidates:
+            raise ValueError("need at least one candidate")
+        self.rollout_seeds = list(rollout_seeds)
+        self.rollout_noise = rollout_noise or NoiseModel()
+        self.budget_s = budget_s
+        self.fallback = AdapterPolicy(fallback)
+        self.name = "sim_in_the_loop"
+        self._chosen: dict[int, tuple] = {}
+        self._cost_ema: float | None = None
+        self._warm = False
+        #: (jid, chosen candidate | fallback name) — introspection/tests.
+        self.decisions: list[tuple[int, str]] = []
+
+    def _over_budget(self) -> bool:
+        return (self.budget_s is not None and self._cost_ema is not None
+                and self._cost_ema > self.budget_s)
+
+    def on_job_arrival(self, job, t, state, machine):
+        # the fallback tracks every job so it can serve assign() any time
+        self.fallback.on_job_arrival(job, t, state, machine)
+        if self._over_budget():
+            self._cost_ema *= 0.9   # decay while skipping, so a transient
+            # spike (GC pause, new bucket compile) doesn't latch the
+            # fallback for the rest of the stream
+            self.decisions.append((job.jid, f"fallback:{self.fallback.name}"))
+            return
+        t0 = time.perf_counter()
+        busy = [state.busy_until(q) for q in range(machine.num_types)]
+        plans = [conditioned_plan(c, job.graph, machine, busy, t)
+                 for c in self.candidates]
+        sweeps = sweep_suite_makespans(
+            [(job.graph, machine, FrozenPlanScheduler(p, name=c))
+             for c, p in zip(self.candidates, plans)],
+            noise=self.rollout_noise, seeds=self.rollout_seeds,
+            floor_fn=lambda g, p: rollout_floors(g, p, busy, now=t),
+            envelope=True)
+        best = self.candidates[
+            int(np.argmin([float(s.mean()) for s in sweeps]))]
+        # The winner is installed as the job's *allocator*, not a frozen
+        # allocation: arrival-driven winners keep deciding per task against
+        # the machine state as it actually evolves (freezing the arrival-time
+        # allocation measurably loses under bursty backlog — adaptation is
+        # worth more than the rollout's foresight).
+        sched = make_scheduler(best)
+        self._chosen[job.jid] = (sched, sched.allocate(job.graph, machine))
+        self.decisions.append((job.jid, best))
+        dt = time.perf_counter() - t0
+        if self._warm:   # the first rollout pays one-time jit compiles;
+            # recording it would latch the fallback permanently
+            self._cost_ema = dt if self._cost_ema is None \
+                else 0.5 * (self._cost_ema + dt)
+        self._warm = True
+
+    def assign(self, job, i, ready, state):
+        chosen = self._chosen.get(job.jid)
+        if chosen is None:
+            return self.fallback.assign(job, i, ready, state)
+        sched, plan = chosen
+        if plan is not None:
+            return int(plan.alloc[i])
+        return int(sched.on_task_arrival(i, ready, state))
+
+    def on_job_complete(self, job):
+        self._chosen.pop(job.jid, None)
+        self.fallback.on_job_complete(job)
+
+
+#: Stream-policy registry: every sim adapter, plus the rollout allocator.
+def make_policy(name: str, **kw) -> StreamPolicy:
+    if name in ("sim_in_the_loop", "sitl"):
+        return SimInTheLoop(**kw)
+    return AdapterPolicy(name, **kw)

@@ -1,0 +1,77 @@
+"""Property-based tests for ``repro.streams`` (needs the dev extra).
+
+Invariants, for random seeds, arrival processes and stream policies:
+
+  * arrival streams are pure functions of their seed (determinism);
+  * no task of any job starts before the job's release time;
+  * per-tenant bounded slowdown is >= 1 for every adapter run through the
+    streams engine;
+  * the whole stream result is reproducible from (source, policy, seed).
+"""
+import numpy as np
+import pytest
+pytest.importorskip("hypothesis")  # dev extra: pip install -r requirements-dev.txt
+from hypothesis import given, settings, strategies as st
+
+from repro.sim import NoiseModel
+from repro.sim.engine import Machine
+from repro.streams import (JobFactory, MMPPProcess, PoissonProcess,
+                           make_policy, open_stream, run_stream)
+
+MACHINE = Machine.hybrid(4, 2)
+POLICIES = ["er_ls", "eft", "greedy_r2", "heft", "random"]
+FAMILIES = ("fork_join", "layered", "random")
+
+
+def _source(seed: int, bursty: bool):
+    proc = MMPPProcess(rates=(0.05, 0.6), dwell=(40.0, 15.0)) if bursty \
+        else PoissonProcess(0.1)
+    return open_stream(proc, JobFactory(FAMILIES), num_jobs=6,
+                       num_tenants=3, seed=seed)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10 ** 6), st.booleans())
+def test_arrival_streams_are_deterministic(seed, bursty):
+    a = _source(seed, bursty).initial_jobs()
+    b = _source(seed, bursty).initial_jobs()
+    assert [j.arrival for j in a] == [j.arrival for j in b]
+    assert [j.tenant for j in a] == [j.tenant for j in b]
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x.graph.proc, y.graph.proc)
+        np.testing.assert_array_equal(x.graph.edges, y.graph.edges)
+        np.testing.assert_array_equal(x.graph.comm, y.graph.comm)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10 ** 6), st.sampled_from(POLICIES), st.booleans(),
+       st.sampled_from([0.0, 0.2]))
+def test_jobs_never_start_before_release_and_slowdown_bounded(
+        seed, name, bursty, noise_scale):
+    res = run_stream(_source(seed, bursty), MACHINE, make_policy(name),
+                     noise=NoiseModel("lognormal", noise_scale)
+                     if noise_scale else None, seed=seed)
+    arrival_of = {j.jid: j.arrival for j in res.jobs}
+    assert len(res.jobs) == 6
+    for t in res.tasks:                 # every task of every job
+        assert t.start >= arrival_of[t.jid] - 1e-9
+        assert t.start >= t.arrival - 1e-9   # and not before its ready event
+    for j in res.jobs:
+        assert j.start >= j.arrival - 1e-9
+    # per-tenant slowdown >= 1 for every adapter through the streams engine
+    for m in res.tenant_table().values():
+        assert m["mean_slowdown"] >= 1.0 - 1e-12
+        assert m["p95_slowdown"] >= m["p50_slowdown"] >= 1.0 - 1e-12
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10 ** 6), st.sampled_from(POLICIES))
+def test_stream_runs_are_reproducible(seed, name):
+    r1 = run_stream(_source(seed, True), MACHINE, make_policy(name),
+                    noise=NoiseModel("lognormal", 0.2), seed=seed)
+    r2 = run_stream(_source(seed, True), MACHINE, make_policy(name),
+                    noise=NoiseModel("lognormal", 0.2), seed=seed)
+    assert [(j.jid, j.finish) for j in r1.jobs] == \
+        [(j.jid, j.finish) for j in r2.jobs]
+    assert [(t.jid, t.task, t.rtype, t.proc, t.start) for t in r1.tasks] == \
+        [(t.jid, t.task, t.rtype, t.proc, t.start) for t in r2.tasks]
