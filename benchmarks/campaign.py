@@ -173,11 +173,17 @@ def sim_sweep(full: bool = False, noise_scale: float = 0.2,
     random) run the scalar engine per seed.  Reports the mean makespan, the
     lower-bound ratio, the noise *degradation* (mean noisy / noise-free
     makespan) per adapter, and the comm-aware-vs-oblivious HEFT gap.
+
+    A *moldable* sub-campaign rides the same bucketed path: on the
+    ``moldable_cholesky`` family (per-kernel Amdahl speedup curves) the
+    width-indexed MHLP allocation (``mhlp_ols``) competes against its own
+    width-1 restriction (``hlp_ols`` on the identical graphs); the summary
+    reports the mean-makespan gain of allocating widths.
     """
     from repro.core.theory import makespan_lower_bound
     from repro.sim import NoiseModel, make_scheduler, simulate
     from repro.sim.batch import bucketed_makespans, sample_actual_batch, trace_count
-    from repro.sim.scenarios import comm_suite, default_suite
+    from repro.sim.scenarios import comm_suite, default_suite, moldable_suite
 
     num_seeds = num_seeds or (32 if full else 8)
     noise = NoiseModel("lognormal", noise_scale)
@@ -206,6 +212,21 @@ def sim_sweep(full: bool = False, noise_scale: float = 0.2,
             grids.append(np.vstack([clean_row, noisy]))
             keys.append((sc.name, name))
     sweeps = bucketed_makespans(items, grids)
+
+    # Moldable sub-campaign: width-aware MHLP vs its width-1 restriction on
+    # the same graphs, through the same ≤-1-compile-per-bucket path.
+    m_suite = moldable_suite(seed=200, num=8 if full else 4)
+    m_items, m_grids, m_keys = [], [], []
+    for sc in m_suite:
+        lbs[sc.name] = makespan_lower_bound(sc.graph, sc.counts)
+        for name in ("mhlp_ols", "hlp_ols"):
+            plan = make_scheduler(name).allocate(sc.graph, sc.machine)
+            clean_row = sample_actual_batch(sc.graph, plan, NoiseModel(), [0])
+            noisy = sample_actual_batch(sc.graph, plan, noise, seeds)
+            m_items.append((sc.graph, plan))
+            m_grids.append(np.vstack([clean_row, noisy]))
+            m_keys.append((sc.name, name))
+    m_sweeps = bucketed_makespans(m_items, m_grids)
     compiles = trace_count("bucket") - traces0
 
     rows, agg = [], defaultdict(list)
@@ -245,14 +266,32 @@ def sim_sweep(full: bool = False, noise_scale: float = 0.2,
                 / results[(sc.name, "heft")][1].mean())
         if verbose:
             print(f"  sim_sweep {sc.name} done")
+
+    m_results = {k: (float(v[0]), v[1:]) for k, v in zip(m_keys, m_sweeps)}
+    for sc in m_suite:
+        lb = lbs[sc.name]
+        for name in ("mhlp_ols", "hlp_ols"):
+            clean, ms = m_results[(sc.name, name)]
+            n_runs += len(seeds)
+            mean = float(ms.mean())
+            agg[f"moldable_{name}"].append(mean / lb)
+            rows.append([sc.name, sc.family, name, lb, clean, mean,
+                         float(ms.std()), float(np.percentile(ms, 95)),
+                         len(seeds)])
+        # the moldable claim: width-aware allocation vs width-1 restriction
+        agg["mhlp_width_gain"].append(
+            m_results[(sc.name, "hlp_ols")][1].mean()
+            / m_results[(sc.name, "mhlp_ols")][1].mean())
+        if verbose:
+            print(f"  sim_sweep {sc.name} done")
     _write_csv("sim_sweep.csv",
                ["scenario", "family", "scheduler", "lower_bound",
                 "makespan_clean", "makespan_noisy_mean", "makespan_noisy_std",
                 "makespan_noisy_p95", "seeds"], rows)
     return {"ratios": {k: float(np.mean(v)) for k, v in agg.items()},
             "schedulers": static + online, "runs": n_runs,
-            "scenarios": len(suite), "compiles": compiles,
-            "plans": len(items)}
+            "scenarios": len(suite) + len(m_suite), "compiles": compiles,
+            "plans": len(items) + len(m_items)}
 
 
 # ------------------------------------------------------ open-system streams

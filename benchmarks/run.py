@@ -94,6 +94,8 @@ def bench_sim(full: bool) -> list[str]:
                      f"noise_degrade={r['ratios']['degrade_' + alg]:.4f}")
     gain = (r["ratios"]["heft_comm_gain"] - 1) * 100
     lines.append(f"sim/heft_comm_gain,{per:.0f},oblivious_penalty_pct={gain:.2f}")
+    wgain = (r["ratios"]["mhlp_width_gain"] - 1) * 100
+    lines.append(f"sim/mhlp_width_gain,{per:.0f},width1_penalty_pct={wgain:.2f}")
     print(f"# sim: {r['runs']} runs over {r['scenarios']} scenarios in "
           f"{dt:.1f}s | {r['plans']} static plans in {r['compiles']} XLA "
           f"compiles (bucketed) | LB ratios " +
@@ -103,6 +105,8 @@ def bench_sim(full: bool) -> list[str]:
                    for a in r["schedulers"]))
     print(f"#   comm-aware HEFT vs oblivious: oblivious pays {gain:+.1f}% "
           f"(mean over comm scenarios; engine charges comm either way)")
+    print(f"#   moldable: width-1 HLP pays {wgain:+.1f}% mean makespan vs "
+          f"width-aware MHLP on the moldable_cholesky family")
     return lines
 
 
@@ -197,14 +201,47 @@ BENCHES = {
 }
 
 
+def list_registry() -> None:
+    """Print the (scheduler × scenario family × platform) registry — read
+    straight from the v2 allocation API, not a hand-maintained list."""
+    from repro.platform import PLATFORMS
+    from repro.sim.adapters import ADAPTERS
+    from repro.sim.scenarios import SCENARIO_FAMILIES
+
+    print("schedulers (repro.sim.adapters.ADAPTERS):")
+    for name in sorted(ADAPTERS):
+        print(f"  {name}")
+    print("scenario families (repro.sim.scenarios.SCENARIO_FAMILIES):")
+    for name in sorted(SCENARIO_FAMILIES):
+        print(f"  {name}")
+    print("platforms (repro.platform.PLATFORMS):")
+    for name, p in PLATFORMS.items():
+        pools = " ".join(f"{nm}={c}" for nm, c in zip(p.names, p.counts))
+        print(f"  {name}: {pools}")
+    print("campaigns (benchmarks.run):")
+    for name in BENCHES:
+        print(f"  {name}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="full §6 grid (nb=20, all block sizes, 64 3-type configs)")
     ap.add_argument("--only", type=str, default="",
                     help="comma-separated subset of: " + ",".join(BENCHES))
+    ap.add_argument("--list", action="store_true",
+                    help="print the (scheduler × scenario × platform) "
+                         "registry and exit")
     args = ap.parse_args()
+    if args.list:
+        list_registry()
+        return
     names = [n for n in args.only.split(",") if n] or list(BENCHES)
+    unknown = [n for n in names if n not in BENCHES]
+    if unknown:
+        print(f"unknown --only target(s): {','.join(unknown)}; "
+              f"have {','.join(BENCHES)}", file=sys.stderr)
+        sys.exit(2)
     all_lines = ["name,us_per_call,derived"]
     failed: list[str] = []
     for name in names:

@@ -1,43 +1,58 @@
 """Quickstart: the paper's algorithms on a Chameleon task graph.
 
-Builds the tiled-Cholesky (potrf) DAG, solves the HLP allocation LP, runs
-HLP-EST / HLP-OLS / HEFT / ER-LS / EFT, and prints the makespan table vs the
-LP lower bound — a 30-line tour of the core library.
+Builds the tiled-Cholesky (potrf) DAG, describes the machine as a
+first-class ``Platform``, solves the HLP allocation LP, runs
+HLP-EST / HLP-OLS / HEFT / ER-LS / EFT, and prints the makespan table vs
+the LP lower bound — then attaches per-kernel speedup curves and lets the
+width-indexed MHLP choose *moldable* ``(type, width)`` decisions.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import (GPU, er_ls, eft_online, greedy_online, heft, hlp_est,
-                        hlp_ols)
+from repro.core import (GPU, amdahl_speedup, er_ls, eft_online, greedy_online,
+                        heft, hlp_est, hlp_ols, solve_mhlp)
 from repro.core.hlp import solve_hlp
 from repro.core.hlp_jax import solve_hlp_jax
 from repro.core.workloads import chameleon
+from repro.platform import Platform
 
-M_CPUS, K_GPUS = 32, 4
+platform = Platform.hybrid(32, 4)       # 32 CPUs + 4 GPUs, canonical names
+print("platform:", " ".join(f"{n}={c}"
+                            for n, c in zip(platform.names, platform.counts)))
 
 g = chameleon("potrf", nb_blocks=10, block_size=512)
 print(f"potrf DAG: {g.n} tasks, {g.num_edges} edges; "
       f"median GPU acceleration "
       f"{np.median(g.proc[:, 0] / g.proc[:, 1]):.1f}x")
 
-sol = solve_hlp(g, M_CPUS, K_GPUS)
+sol = solve_hlp(g, *platform.counts)
 print(f"HLP LP* = {sol.lp_value:.3f} "
       f"({(sol.alloc == GPU).mean():.0%} of tasks on the GPU side)")
-jx = solve_hlp_jax(g, M_CPUS, K_GPUS)
+jx = solve_hlp_jax(g, *platform.counts)
 print(f"JAX first-order solver: λ = {jx.lp_value:.3f} "
       f"(gap {100 * (jx.lp_value / sol.lp_value - 1):.2f}%)")
 
-counts = [M_CPUS, K_GPUS]
 rows = [
-    ("HLP-EST  (Kedad-Sidhoum et al.)", hlp_est(g, counts, sol.alloc)),
-    ("HLP-OLS  (paper, off-line)", hlp_ols(g, counts, sol.alloc)),
-    ("HEFT     (baseline)", heft(g, counts)),
-    ("ER-LS    (paper, on-line)", er_ls(g, counts)),
-    ("EFT      (on-line baseline)", eft_online(g, counts)),
-    ("Greedy   (on-line baseline)", greedy_online(g, counts)),
+    ("HLP-EST  (Kedad-Sidhoum et al.)", hlp_est(g, platform, sol.alloc)),
+    ("HLP-OLS  (paper, off-line)", hlp_ols(g, platform, sol.alloc)),
+    ("HEFT     (baseline)", heft(g, platform)),
+    ("ER-LS    (paper, on-line)", er_ls(g, platform)),
+    ("EFT      (on-line baseline)", eft_online(g, platform)),
+    ("Greedy   (on-line baseline)", greedy_online(g, platform)),
 ]
 print(f"\n{'algorithm':34s} {'makespan':>9s} {'vs LP*':>7s}")
 for name, s in rows:
-    s.validate(g, counts)
+    s.validate(g, platform)
     print(f"{name:34s} {s.makespan:9.3f} {s.makespan / sol.lp_value:7.3f}")
+
+# ------------------------------- moldable: tasks may span several units ----
+gm = g.with_speedup(amdahl_speedup(0.85, 4))   # up to width 4, 85% parallel
+msol = solve_mhlp(gm, platform)
+wide = msol.width > 1
+sched = hlp_ols(gm, platform, msol.alloc, msol.width)
+sched.validate(gm, platform)
+print(f"\nmoldable MHLP: λ* = {msol.lp_value:.3f}, {wide.mean():.0%} of "
+      f"tasks widened (max width {msol.width.max()}); "
+      f"OLS makespan {sched.makespan:.3f} vs width-1 "
+      f"{rows[1][1].makespan:.3f}")

@@ -56,7 +56,8 @@ def _search_bnb(g: TaskGraph, counts: list[int]):
     total_m = float(sum(counts))
 
     # Incumbent: HEFT gives a feasible (comm-aware) schedule fast.
-    inc = heft(g, counts)
+    from repro.platform import as_platform
+    inc = heft(g, as_platform(counts, warn=False))
     best = {"ms": inc.makespan + 1e-12,
             "alloc": np.asarray(inc.alloc, dtype=np.int32).copy(),
             "proc": np.asarray(inc.proc, dtype=np.int32).copy(),
@@ -145,17 +146,23 @@ def _search_bnb(g: TaskGraph, counts: list[int]):
     return best
 
 
-def brute_force_opt(g: TaskGraph, counts: list[int]) -> float:
+def brute_force_opt(g: TaskGraph, machine) -> float:
     """Exact optimal makespan (hybrid or Q-type), comm-aware."""
-    return float(_search_bnb(g, counts)["ms"])
+    from repro.platform import as_platform
+    return float(_search_bnb(g, as_platform(machine, warn=False).to_counts())
+                 ["ms"])
 
 
-def brute_force_schedule(g: TaskGraph, counts: list[int]) -> Schedule:
+def brute_force_schedule(g: TaskGraph, machine) -> Schedule:
     """Exact optimal *schedule* (same search, keeps the argmin node).
 
     Lets ``repro.sim.adapters`` expose the oracle through the same
     ``Scheduler`` protocol as the polynomial algorithms on small instances.
+    (Width-1 oracle: the search space stays the paper's rigid model even on
+    moldable graphs.)
     """
+    from repro.platform import as_platform
+    counts = as_platform(machine, warn=False).to_counts()
     if not any(counts) and g.n:
         raise RuntimeError("no feasible schedule (empty machine?)")
     best = _search_bnb(g, counts)

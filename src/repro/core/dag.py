@@ -13,6 +13,17 @@ model of ESTEE-style simulators and the StarPU/Chameleon substrate the
 paper actually ran on; with ``comm == 0`` every algorithm below reduces
 bit-for-bit to the paper's communication-free semantics.
 
+Tasks may additionally be *moldable* (Prou et al., Beaumont et al.): an
+optional per-task speedup curve ``speedup[j, w-1]`` gives the factor by
+which task j shrinks when it occupies ``w`` units of one pool, so the
+processing time of a ``(type, width)`` decision (``repro.platform.Decision``)
+is ``proc_w(j, q, w) = proc[j, q] / speedup[j, w-1]``.  ``proc[j, q]`` is
+exactly the width-1 point of that surface (``speedup[:, 0] == 1`` is
+enforced), and a graph without curves (``speedup is None``) is the paper's
+rigid width-1 model bit-for-bit.  Curves must be non-decreasing in width
+with non-increasing per-unit efficiency ``speedup[w]/w`` (work never
+shrinks) — see :func:`amdahl_speedup` / :func:`powerlaw_speedup`.
+
 The representation is fully vectorized (CSR adjacency + topological levels) so
 that critical-path / rank computations run as numpy sweeps (and, in
 ``repro.core.hlp_jax``, as jitted JAX level-scans).  The CSR arrays carry the
@@ -27,6 +38,54 @@ from typing import Iterable, Sequence
 import numpy as np
 
 CPU, GPU = 0, 1  # resource-type indices for the hybrid (Q=2) case
+
+
+# ------------------------------------------------------------ speedup curves
+def validate_speedup(speedup: np.ndarray, n: int) -> np.ndarray:
+    """Check a (n, W) moldable speedup table's invariants.
+
+    * ``speedup[:, 0] == 1`` — ``proc[j, q]`` is the width-1 point;
+    * non-decreasing in width — more units never slow a task;
+    * per-unit efficiency ``speedup[:, w-1] / w`` non-increasing — total
+      work ``w * p/speedup`` never shrinks when widening (no super-linear
+      speedups; the area bound in the moldable LP relies on it).
+    """
+    s = np.asarray(speedup, dtype=np.float64)
+    if s.ndim != 2 or s.shape[0] != n:
+        raise ValueError(f"speedup must be (n={n}, W), got {s.shape}")
+    if not np.allclose(s[:, 0], 1.0, atol=1e-12):
+        raise ValueError("speedup[:, 0] must be 1 (proc is the width-1 point)")
+    if s.shape[1] > 1:
+        if (np.diff(s, axis=1) < -1e-12).any():
+            raise ValueError("speedup must be non-decreasing in width")
+        eff = s / np.arange(1, s.shape[1] + 1)
+        if (np.diff(eff, axis=1) > 1e-12).any():
+            raise ValueError("per-unit efficiency speedup[w]/w must be "
+                             "non-increasing in width")
+    return s
+
+
+def amdahl_speedup(alpha, max_width: int) -> np.ndarray:
+    """Amdahl-law curve table: speedup(w) = 1 / ((1-α) + α/w).
+
+    ``alpha`` is the parallel fraction — scalar or (n,); returns (n, W)
+    (or (1, W) for a scalar), vectorized over tasks and widths.
+    """
+    a = np.atleast_1d(np.asarray(alpha, dtype=np.float64))[:, None]
+    if (a < 0).any() or (a > 1).any():
+        raise ValueError("Amdahl parallel fraction must be in [0, 1]")
+    w = np.arange(1, max_width + 1, dtype=np.float64)[None, :]
+    return 1.0 / ((1.0 - a) + a / w)
+
+
+def powerlaw_speedup(gamma, max_width: int) -> np.ndarray:
+    """Power-law curve table: speedup(w) = w**γ, γ ∈ [0, 1] (the Prou et al.
+    malleable-task model).  Scalar or (n,) γ; returns (n, W)."""
+    g = np.atleast_1d(np.asarray(gamma, dtype=np.float64))[:, None]
+    if (g < 0).any() or (g > 1).any():
+        raise ValueError("power-law exponent must be in [0, 1]")
+    w = np.arange(1, max_width + 1, dtype=np.float64)[None, :]
+    return w ** g
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,12 +118,14 @@ class TaskGraph:
     topo: np.ndarray
     level: np.ndarray
     names: tuple[str, ...] | None = None
+    speedup: np.ndarray | None = None   # (n, W) moldable curve table
 
     # ------------------------------------------------------------------ build
     @staticmethod
     def build(proc: np.ndarray, edges: Iterable[tuple[int, int]],
               names: Sequence[str] | None = None,
-              comm: np.ndarray | None = None) -> "TaskGraph":
+              comm: np.ndarray | None = None,
+              speedup: np.ndarray | None = None) -> "TaskGraph":
         proc = np.asarray(proc, dtype=np.float64)
         if proc.ndim != 2:
             raise ValueError(f"proc must be (n, Q), got {proc.shape}")
@@ -120,11 +181,14 @@ class TaskGraph:
                     topo[head] = v; head += 1
         if head != n:
             raise ValueError("graph has a cycle")
+        if speedup is not None:
+            speedup = validate_speedup(speedup, n)
         return TaskGraph(proc=proc, edges=e, comm=comm,
                          pred_ptr=pred_ptr, pred_idx=pred_idx, pred_eid=pred_eid,
                          succ_ptr=succ_ptr, succ_idx=succ_idx, succ_eid=succ_eid,
                          topo=topo, level=level,
-                         names=tuple(names) if names is not None else None)
+                         names=tuple(names) if names is not None else None,
+                         speedup=speedup)
 
     # ------------------------------------------------------------- properties
     @property
@@ -143,6 +207,11 @@ class TaskGraph:
     def has_comm(self) -> bool:
         """True when any edge carries a nonzero transfer cost."""
         return bool(self.comm.size) and bool(self.comm.any())
+
+    @property
+    def max_width(self) -> int:
+        """Largest usable task width (1 when the graph carries no curves)."""
+        return 1 if self.speedup is None else int(self.speedup.shape[1])
 
     def preds(self, j: int) -> np.ndarray:
         return self.pred_idx[self.pred_ptr[j]:self.pred_ptr[j + 1]]
@@ -166,10 +235,45 @@ class TaskGraph:
             raise ValueError("negative transfer cost")
         return dataclasses.replace(self, comm=c)
 
+    def with_speedup(self, speedup: np.ndarray) -> "TaskGraph":
+        """Copy of this graph with a (n, W) moldable speedup table attached
+        (validated; a (W,) or single-row (1, W) curve — e.g. a scalar-α
+        :func:`amdahl_speedup` — broadcasts to every task)."""
+        s = np.asarray(speedup, dtype=np.float64)
+        if s.ndim == 1:
+            s = s[None, :]
+        if s.ndim == 2 and s.shape[0] == 1 and self.n != 1:
+            s = np.broadcast_to(s, (self.n, s.shape[1])).copy()
+        return dataclasses.replace(self, speedup=validate_speedup(s, self.n))
+
     # ------------------------------------------------------------ graph algos
     def alloc_times(self, alloc: np.ndarray) -> np.ndarray:
         """Processing time of each task under an integral allocation (n,)->type."""
         return self.proc[np.arange(self.n), np.asarray(alloc, dtype=np.int64)]
+
+    def proc_w(self, j: int, q: int, w: int) -> float:
+        """Processing time of task j on ``w`` units of type ``q`` —
+        ``proc[j, q]`` is the width-1 point of this surface."""
+        if w == 1 or self.speedup is None:
+            return float(self.proc[j, q])
+        return float(self.proc[j, q] / self.speedup[j, w - 1])
+
+    def moldable_times(self, alloc: np.ndarray,
+                       width: np.ndarray | None = None) -> np.ndarray:
+        """(n,) processing times under per-task ``(type, width)`` decisions.
+
+        ``width=None`` (or an all-ones vector on a curve-free graph) is
+        exactly :meth:`alloc_times` — the paper's rigid model.
+        """
+        t = self.alloc_times(alloc)
+        if width is None or self.speedup is None:
+            return t
+        w = np.asarray(width, dtype=np.int64)
+        if w.shape != (self.n,):
+            raise ValueError(f"width must be (n,), got {w.shape}")
+        if (w < 1).any() or (w > self.max_width).any():
+            raise ValueError("width out of range of the speedup table")
+        return t / self.speedup[np.arange(self.n), w - 1]
 
     def frac_times(self, x: np.ndarray) -> np.ndarray:
         """Hybrid fractional length p̄_j x_j + p_j (1 - x_j) (paper's HLP)."""
@@ -233,14 +337,19 @@ class TaskGraph:
         return est
 
     # ---------------------------------------------------------------- helpers
-    def graham_lower_bound(self, counts: Sequence[int], alloc: np.ndarray) -> float:
+    def graham_lower_bound(self, counts: Sequence[int], alloc: np.ndarray,
+                           width: np.ndarray | None = None) -> float:
         """max(CP, load_q / m_q) — the lower bound HLP optimizes, for integral
-        alloc.  The CP term charges cross-type transfer delays (zero under the
-        paper's model)."""
-        t = self.alloc_times(alloc)
+        (type, width) decisions.  The CP term charges cross-type transfer
+        delays (zero under the paper's model); a width-w task contributes
+        ``w ×`` its (curve-shrunk) time to its pool's load — the area it
+        actually occupies."""
+        t = self.moldable_times(alloc, width)
         cp = self.critical_path(t, self.edge_delays(alloc) if self.has_comm
                                 else None)
-        loads = [t[alloc == q].sum() / counts[q] for q in range(self.num_types)]
+        area = t if width is None else t * np.asarray(width, dtype=np.float64)
+        loads = [area[alloc == q].sum() / counts[q]
+                 for q in range(self.num_types)]
         return max([cp] + loads)
 
     def lp_objective(self, counts: Sequence[int], x: np.ndarray) -> float:

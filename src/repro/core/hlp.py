@@ -27,6 +27,16 @@ two solvers' allocations comparable task-wise (asserted in
 QHLP (Q >= 2, paper §5): variables x_{j,q}, Σ_q x_{j,q} = 1; rounding to
 argmax_q x_{j,q}, ties broken toward the smallest processing time.
 
+MHLP (moldable HLP, beyond-paper): when the graph carries speedup curves
+(``TaskGraph.speedup``) the allocation variable is width-indexed —
+x_{j,q,w} is the fraction of task j assigned to a width-w slot of pool q,
+its length is p_{j,q}/speedup_j(w) and its *area* w·p_{j,q}/speedup_j(w)
+enters pool q's load bound.  ``solve_mhlp`` rounds to the per-task argmax
+``(type, width)`` — a ``repro.platform.Decision`` — and
+``canonical_round_moldable`` extends the deterministic degeneracy-free
+tie-break to the width axis.  With a one-column curve table MHLP is exactly
+QHLP (and, at Q=2, its optimum equals HLP's).
+
 Solved exactly with scipy's HiGHS (the paper used GLPK).  A JAX-native
 first-order solver lives in ``repro.core.hlp_jax`` and is validated against
 this exact solver in the tests.
@@ -39,16 +49,26 @@ import numpy as np
 import scipy.sparse as sp
 from scipy.optimize import linprog
 
+from repro.platform import Decision, as_platform
+
 from .dag import CPU, GPU, TaskGraph
 
 
 @dataclasses.dataclass(frozen=True)
 class HLPSolution:
     """Fractional LP solution + the rounded integral allocation."""
-    x_frac: np.ndarray      # (n,) hybrid CPU share, or (n, Q) for QHLP
+    x_frac: np.ndarray      # (n,) hybrid CPU share, (n, Q) for QHLP, or
+    #                         (n, C) over (type, width) choices for MHLP
     lp_value: float         # λ* — a lower bound on the optimal makespan
     alloc: np.ndarray       # (n,) int — rounded resource type per task
     status: str = "optimal"
+    width: np.ndarray | None = None   # (n,) rounded widths (MHLP only)
+
+    @property
+    def decisions(self) -> tuple[Decision, ...]:
+        """The rounded allocation as first-class ``Decision`` records."""
+        from repro.platform import decisions_of
+        return decisions_of(self.alloc, self.width)
 
 
 # --------------------------------------------------------------------- hybrid
@@ -132,8 +152,9 @@ def solve_hlp(g: TaskGraph, m: int, k: int, *,
 
 
 # ------------------------------------------------------------------- Q types
-def solve_qhlp(g: TaskGraph, counts: list[int]) -> HLPSolution:
+def solve_qhlp(g: TaskGraph, counts) -> HLPSolution:
     """Exact LP relaxation of QHLP for Q >= 2 resource types (paper §5)."""
+    counts = as_platform(counts, warn=False).to_counts()
     n, q = g.n, g.num_types
     if len(counts) != q:
         raise ValueError(f"need {q} machine counts, got {len(counts)}")
@@ -199,8 +220,186 @@ def solve_qhlp(g: TaskGraph, counts: list[int]) -> HLPSolution:
     return HLPSolution(x_frac=x, lp_value=float(res.fun), alloc=alloc)
 
 
-def lp_lower_bound(g: TaskGraph, counts: list[int]) -> float:
-    """LP* — the paper's denominator for experimental ratios."""
+def lp_lower_bound(g: TaskGraph, counts) -> float:
+    """LP* — the paper's denominator for experimental ratios.
+
+    Moldable graphs route through the width-indexed MHLP relaxation (its
+    feasible set contains every (type, width) schedule, so its λ* is the
+    right denominator there)."""
+    platform = as_platform(counts, warn=False)
+    if g.max_width > 1:
+        return solve_mhlp(g, platform).lp_value
     if g.num_types == 2:
-        return solve_hlp(g, counts[0], counts[1]).lp_value
-    return solve_qhlp(g, counts).lp_value
+        return solve_hlp(g, platform.counts[0], platform.counts[1]).lp_value
+    return solve_qhlp(g, platform.to_counts()).lp_value
+
+
+# ----------------------------------------------------------- moldable (MHLP)
+def mhlp_choices(g: TaskGraph, counts) -> list[tuple[int, int]]:
+    """The (type, width) decision grid of the width-indexed LP: every pool
+    crossed with widths 1..min(max curve width, pool size)."""
+    return [(q, w) for q in range(g.num_types)
+            for w in range(1, min(g.max_width, int(counts[q])) + 1)]
+
+
+def _choice_times(g: TaskGraph, choices: list[tuple[int, int]]) -> np.ndarray:
+    """(n, C) processing time of each task under each (type, width) choice."""
+    cols = [g.proc[:, q] if w == 1 or g.speedup is None
+            else g.proc[:, q] / g.speedup[:, w - 1]
+            for q, w in choices]
+    return np.stack(cols, axis=1)
+
+
+def _mhlp_objective_frac(g: TaskGraph, counts, x: np.ndarray,
+                         choices: list[tuple[int, int]],
+                         p_choice: np.ndarray) -> float:
+    """Exact λ(x) of a fractional (n, C) choice distribution: critical path
+    under the mixed lengths plus per-pool area loads.
+
+    Infeasible (non-finite) choices contribute only where they carry mass:
+    ``inf·0`` would otherwise poison the whole objective with NaN even
+    though the LP correctly pinned those variables to zero."""
+    contrib = np.where(x > 0, p_choice * x, 0.0)   # (n, C), inf·0 -> 0
+    times = contrib.sum(axis=1)
+    lam = g.critical_path(times)
+    for q in range(g.num_types):
+        sel = [c for c, (qq, _) in enumerate(choices) if qq == q]
+        area = sum(float(choices[c][1]) * float(contrib[:, c].sum())
+                   for c in sel)
+        lam = max(lam, area / counts[q])
+    return lam
+
+
+def canonical_round_moldable(g: TaskGraph, machine, x: np.ndarray, *,
+                             slack: float = 0.02
+                             ) -> tuple[np.ndarray, np.ndarray]:
+    """``canonical_round`` extended to the width axis.
+
+    Same construction, over (type, width) choices: the λ budget is the input
+    distribution's λ·(1+slack); tasks are processed in natural order against
+    a context in which every undecided task sits on its *fastest* choice,
+    each task taking the fastest choice whose context λ stays within budget
+    (candidates tried in ascending processing time, ties toward narrower
+    widths) and otherwise the choice minimizing the context λ.  Two
+    near-optimal fractional MHLP solutions therefore round identically
+    unless a decision's λ lands inside their λ gap.  O(n·C·(n+e)) — a
+    parity/comparability tool, not the default rounding.
+    """
+    platform = as_platform(machine, warn=False)
+    counts = platform.to_counts()
+    choices = mhlp_choices(g, counts)
+    p_choice = _choice_times(g, choices)
+    budget = _mhlp_objective_frac(g, counts, x, choices, p_choice) \
+        * (1.0 + slack)
+    # candidate order per task: ascending time, ties toward narrow widths
+    order = [sorted(range(len(choices)),
+                    key=lambda c: (p_choice[j, c], choices[c][1]))
+             for j in range(g.n)]
+    pick = np.asarray([o[0] for o in order], dtype=np.int64)
+
+    def lam_of(picked: np.ndarray) -> float:
+        alloc = np.asarray([choices[c][0] for c in picked], dtype=np.int32)
+        width = np.asarray([choices[c][1] for c in picked], dtype=np.int32)
+        return g.graham_lower_bound(counts, alloc, width)
+
+    for j in range(g.n):
+        best_c, best_lam = pick[j], np.inf
+        for c in order[j]:
+            pick[j] = c
+            lam = lam_of(pick)
+            if lam <= budget:
+                best_c = c
+                break
+            if lam < best_lam:
+                best_c, best_lam = c, lam
+        pick[j] = best_c
+    alloc = np.asarray([choices[c][0] for c in pick], dtype=np.int32)
+    width = np.asarray([choices[c][1] for c in pick], dtype=np.int32)
+    return alloc, width
+
+
+def solve_mhlp(g: TaskGraph, machine, *, canonical: bool = False) -> HLPSolution:
+    """Exact LP relaxation of moldable HLP over (type, width) choices.
+
+    Variables x_{j,q,w} ∈ [0,1] with Σ_{q,w} x_{j,q,w} = 1 per task;
+    fractional length ℓ_j = Σ p_{j,q,w} x_{j,q,w}; constraints are QHLP's
+    (9)–(13) with the load bound charging the *area* w·p_{j,q,w} a width-w
+    slot really occupies.  With a width-1 curve table this is exactly QHLP.
+    Rounding: per-task argmax over choices, ties toward the smallest
+    processing time then the narrower width — or the deterministic
+    ``canonical_round_moldable`` tie-break with ``canonical=True``.
+    """
+    platform = as_platform(machine)
+    counts = platform.to_counts()
+    n = g.n
+    if len(counts) != g.num_types:
+        raise ValueError(f"need {g.num_types} pool counts, got {len(counts)}")
+    choices = mhlp_choices(g, counts)
+    C = len(choices)
+    p_choice = _choice_times(g, choices)
+
+    def xv(j: int, c: int) -> int:
+        return j * C + c
+
+    cv = lambda j: n * C + j
+    lv = n * C + n
+    nv = lv + 1
+
+    rows, cols, vals, rhs = [], [], [], []
+    r = 0
+
+    def add(row_entries, b):
+        nonlocal r
+        for c_, v_ in row_entries:
+            rows.append(r); cols.append(c_); vals.append(v_)
+        rhs.append(b); r += 1
+
+    finite = np.isfinite(p_choice)
+    for i, j in g.edges:
+        add([(cv(int(i)), 1.0), (cv(int(j)), -1.0)]
+            + [(xv(int(j), c), p_choice[j, c]) for c in range(C)
+               if finite[j, c]], 0.0)
+    indeg = np.diff(g.pred_ptr)
+    for j in np.flatnonzero(indeg == 0):
+        add([(xv(int(j), c), p_choice[j, c]) for c in range(C)
+             if finite[j, c]] + [(cv(int(j)), -1.0)], 0.0)
+    for j in range(n):
+        add([(cv(j), 1.0), (lv, -1.0)], 0.0)
+    for q in range(g.num_types):
+        add([(xv(j, c), choices[c][1] * p_choice[j, c] / counts[q])
+             for j in range(n) for c in range(C)
+             if choices[c][0] == q and finite[j, c]] + [(lv, -1.0)], 0.0)
+
+    A_ub = sp.csr_matrix((vals, (rows, cols)), shape=(r, nv))
+    b_ub = np.asarray(rhs)
+
+    er, ec, ev = [], [], []
+    for j in range(n):
+        for c in range(C):
+            er.append(j); ec.append(xv(j, c)); ev.append(1.0)
+    A_eq = sp.csr_matrix((ev, (er, ec)), shape=(n, nv))
+    b_eq = np.ones(n)
+
+    obj = np.zeros(nv); obj[lv] = 1.0
+    bounds = [(0.0, 0.0) if not finite[j, c] else (0.0, 1.0)
+              for j in range(n) for c in range(C)] + [(0.0, None)] * (n + 1)
+    res = linprog(obj, A_ub=A_ub, b_ub=b_ub, A_eq=A_eq, b_eq=b_eq,
+                  bounds=bounds, method="highs")
+    if not res.success:
+        raise RuntimeError(f"MHLP LP failed: {res.message}")
+    x = np.clip(res.x[: n * C].reshape(n, C), 0.0, 1.0)
+
+    if canonical:
+        alloc, width = canonical_round_moldable(g, platform, x)
+    else:
+        alloc = np.empty(n, dtype=np.int32)
+        width = np.empty(n, dtype=np.int32)
+        for j in range(n):
+            best = x[j].max()
+            cand = np.flatnonzero(x[j] >= best - 1e-9)
+            c = int(cand[np.lexsort((
+                [choices[int(cc)][1] for cc in cand],
+                p_choice[j, cand]))[0]])
+            alloc[j], width[j] = choices[c]
+    return HLPSolution(x_frac=x, lp_value=float(res.fun), alloc=alloc,
+                       width=width)

@@ -139,6 +139,124 @@ def _solve(d: PaddedDag, m: int, k: int, iters: int, seed: int):
     return best_x, best_val
 
 
+# ------------------------------------------------------------ moldable MHLP
+@partial(jax.jit, static_argnames=("iters",))
+def _solve_moldable(d: PaddedDag, p_choice: jnp.ndarray, area: jnp.ndarray,
+                    type_mask: jnp.ndarray, inv_counts: jnp.ndarray,
+                    iters: int, seed: int):
+    """First-order MHLP: softmax over (type, width) choices per task.
+
+    ``p_choice`` (n, C) holds the choice processing times, ``area`` (n, C)
+    the width-weighted areas, ``type_mask`` (Q, C) the pool membership of
+    each choice and ``inv_counts`` (Q,) the reciprocal pool sizes.  Same
+    Adam-on-logits / annealed-soft-longest-path scheme as the hybrid
+    solver, with the softmax replacing the sigmoid.
+    """
+    n, C = p_choice.shape
+
+    def mix(z):
+        return jax.nn.softmax(z, axis=1)          # (n, C) choice distribution
+
+    def loads(x):
+        # (Q,) per-pool area loads: Σ_j Σ_{c∈q} area[j,c]·x[j,c] / m_q
+        per_choice = (area * x).sum(axis=0)       # (C,)
+        return (type_mask @ per_choice) * inv_counts
+
+    def lam_exact(x):
+        times = (p_choice * x).sum(axis=1)
+        cp = hard_longest_path(d, times)
+        return jnp.maximum(cp, jnp.max(loads(x)))
+
+    def loss(z, tau):
+        x = mix(z)
+        times = (p_choice * x).sum(axis=1)
+        cp = soft_longest_path(d, times, tau)
+        terms = jnp.concatenate([jnp.stack([cp]), loads(x)])
+        mx = jnp.max(terms)
+        return mx + tau * jnp.log(jnp.sum(jnp.exp((terms - mx) / tau)))
+
+    grad = jax.grad(loss)
+    scale = jnp.max(jnp.where(jnp.isfinite(p_choice), p_choice, 0.0))
+    z0 = 0.01 * jax.random.normal(jax.random.PRNGKey(seed), (n, C))
+
+    lr, b1, b2, eps = 0.25, 0.9, 0.999, 1e-8
+
+    def body(carry, i):
+        z, mu, nu, best_x, best_val = carry
+        frac = i.astype(jnp.float32) / max(iters - 1, 1)
+        tau = scale * jnp.exp(jnp.log(1 / 8.0) * (1 - frac)
+                              + jnp.log(1 / 512.0) * frac)
+        gz = grad(z, tau)
+        mu = b1 * mu + (1 - b1) * gz
+        nu = b2 * nu + (1 - b2) * gz * gz
+        mh = mu / (1 - b1 ** (i + 1))
+        nh = nu / (1 - b2 ** (i + 1))
+        z = z - lr * mh / (jnp.sqrt(nh) + eps)
+        x = mix(z)
+        val = lam_exact(x)
+        better = val < best_val
+        best_x = jnp.where(better, x, best_x)
+        best_val = jnp.where(better, val, best_val)
+        return (z, mu, nu, best_x, best_val), ()
+
+    init = (z0, jnp.zeros((n, C)), jnp.zeros((n, C)), mix(z0),
+            lam_exact(mix(z0)))
+    (_, _, _, best_x, best_val), _ = jax.lax.scan(
+        body, init, jnp.arange(iters, dtype=jnp.int32))
+    return best_x, best_val
+
+
+def solve_mhlp_jax(g: TaskGraph, machine, iters: int = 400, seed: int = 0, *,
+                   canonical: bool = False) -> HLPSolution:
+    """First-order width-indexed MHLP — ``hlp.solve_mhlp``'s jitted sibling.
+
+    Optimizes a per-task softmax over the (type, width) choice grid with the
+    annealed soft longest path.  As with the hybrid solver, the returned
+    ``lp_value`` is the *exact* λ of the best iterate — a feasible
+    relaxation objective, hence ≥ the HiGHS optimum (validated in the
+    tests), so ratios reported against it stay conservative.
+    ``canonical=True`` shares ``canonical_round_moldable`` with the exact
+    solver for task-wise comparable decisions.
+    """
+    from repro.platform import as_platform
+
+    from .hlp import (_choice_times, _mhlp_objective_frac,
+                      canonical_round_moldable, mhlp_choices)
+
+    platform = as_platform(machine)
+    counts = platform.to_counts()
+    choices = mhlp_choices(g, counts)
+    p_choice = _choice_times(g, choices)
+    finite = np.isfinite(p_choice)
+    p_dev = np.where(finite, p_choice, 1e12)  # price out, keep grads finite
+    area = p_dev * np.asarray([w for _, w in choices], dtype=np.float64)
+    type_mask = np.zeros((g.num_types, len(choices)))
+    for c, (q, _) in enumerate(choices):
+        type_mask[q, c] = 1.0
+    inv_counts = 1.0 / np.asarray(counts, dtype=np.float64)
+
+    d = PaddedDag.from_graph(g)
+    x, _ = _solve_moldable(d, jnp.asarray(p_dev), jnp.asarray(area),
+                           jnp.asarray(type_mask), jnp.asarray(inv_counts),
+                           int(iters), int(seed))
+    x = np.asarray(x, dtype=np.float64)
+    x = np.where(finite, x, 0.0)
+    x /= x.sum(axis=1, keepdims=True)
+    val = _mhlp_objective_frac(g, counts, x, choices, p_choice)
+    if canonical:
+        alloc, width = canonical_round_moldable(g, platform, x)
+    else:
+        alloc = np.empty(g.n, dtype=np.int32)
+        width = np.empty(g.n, dtype=np.int32)
+        for j in range(g.n):
+            cand = np.flatnonzero(x[j] >= x[j].max() - 1e-9)
+            c = int(cand[np.lexsort((
+                [choices[int(cc)][1] for cc in cand], p_choice[j, cand]))[0]])
+            alloc[j], width[j] = choices[c]
+    return HLPSolution(x_frac=x, lp_value=float(val), alloc=alloc,
+                       width=width, status="first-order")
+
+
 def solve_hlp_jax(g: TaskGraph, m: int, k: int, iters: int = 400,
                   seed: int = 0, *, canonical: bool = False) -> HLPSolution:
     """Drop-in replacement for ``hlp.solve_hlp`` (approximate but jitted/scalable).

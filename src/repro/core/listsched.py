@@ -1,10 +1,11 @@
 """Scheduling-phase policies: List Scheduling, EST, OLS, HEFT — plus validation.
 
-All schedulers operate on a ``TaskGraph`` and a machine made of ``counts[q]``
-identical processors per resource type q.  They return a ``Schedule`` with
-per-task (type, processor, start, finish) that is validated in the tests
-against the two feasibility invariants (precedence + per-processor
-non-overlap).
+All schedulers operate on a ``TaskGraph`` and a ``repro.platform.Platform``
+of typed processor pools (the historical bare ``counts`` list is still
+accepted through the :func:`repro.platform.as_platform` deprecation shim).
+They return a ``Schedule`` with per-task (type, processors, start, finish)
+that is validated in the tests against the feasibility invariants
+(precedence + per-processor non-overlap + width capacity).
 
 Semantics follow the paper:
 
@@ -24,6 +25,16 @@ Semantics follow the paper:
   omits.  Pass ``comm_aware=False`` to plan obliviously (the engine still
   charges transfers at replay; useful as a baseline).
 
+Moldable (multi-width) tasks: when the graph carries speedup curves
+(``g.speedup``), a per-task ``width`` vector turns every decision into the
+``(type, width)`` pair of ``repro.platform.Decision`` — a width-w task
+occupies the w earliest-simultaneously-idle units of its pool and shrinks by
+its curve.  ``heft`` additionally searches candidate widths itself
+(width-1 slots keep the classic insertion/backfilling; wider slots are
+committed append-only across their units).  With ``width=None`` — or on a
+curve-free graph — every routine below runs the *identical* width-1 code
+path, which the golden bit-parity suite pins byte-for-byte.
+
 All ready-time computations below charge ``g.comm[e]`` on an edge whose
 endpoints are committed to different resource types; with ``g.comm == 0``
 (the default) everything reduces exactly to the paper's semantics.
@@ -35,36 +46,56 @@ import heapq
 
 import numpy as np
 
+from repro.platform import Platform, as_platform
+
 from .dag import TaskGraph
 
 
 @dataclasses.dataclass
 class Schedule:
     alloc: np.ndarray    # (n,) resource type per task
-    proc: np.ndarray     # (n,) processor index *within its type*
+    proc: np.ndarray     # (n,) first processor index *within its type*
     start: np.ndarray    # (n,)
     finish: np.ndarray   # (n,)
+    width: np.ndarray | None = None   # (n,) units occupied; None = all 1
+    procs: tuple[tuple[int, ...], ...] | None = None  # full unit sets when
+    #                                                   any width exceeds 1
 
     @property
     def makespan(self) -> float:
         return float(self.finish.max()) if self.finish.size else 0.0
 
-    def machine_sequences(self, counts: list[int]) -> dict[tuple[int, int], list[int]]:
+    def width_of(self, j: int) -> int:
+        return 1 if self.width is None else int(self.width[j])
+
+    def procs_of(self, j: int) -> tuple[int, ...]:
+        """All unit indices task j occupies within its pool."""
+        if self.procs is not None:
+            return self.procs[j]
+        return (int(self.proc[j]),)
+
+    def machine_sequences(self, machine) -> dict[tuple[int, int], list[int]]:
         """Per-(type, processor) task sequence ordered by start time.
 
         This is the *static plan* view of a schedule — what ``repro.sim``
         replays under stochastic runtimes: each processor executes its
         sequence in order, starting each task when its predecessors finish.
+        A width-w task appears in all w of its units' sequences.
         """
+        p = as_platform(machine, warn=False)
         seqs: dict[tuple[int, int], list[int]] = {
-            (q, p): [] for q in range(len(counts)) for p in range(counts[q])}
+            (q, pid): [] for q in range(p.num_types)
+            for pid in range(p.counts[q])}
         for j in np.argsort(self.start, kind="stable"):
-            seqs[(int(self.alloc[j]), int(self.proc[j]))].append(int(j))
+            for pid in self.procs_of(int(j)):
+                seqs[(int(self.alloc[j]), pid)].append(int(j))
         return seqs
 
-    def validate(self, g: TaskGraph, counts: list[int], tol: float = 1e-9) -> None:
+    def validate(self, g: TaskGraph, machine, tol: float = 1e-9) -> None:
         """Raise if the schedule is infeasible (used by tests, cheap to keep on)."""
-        t = g.alloc_times(self.alloc)
+        p = as_platform(machine, warn=False)
+        counts = p.counts
+        t = g.moldable_times(self.alloc, self.width)
         if not np.allclose(self.finish, self.start + t, atol=tol):
             raise AssertionError("finish != start + processing time")
         if (self.start < -tol).any():
@@ -74,28 +105,55 @@ class Schedule:
             if self.start[j] < self.finish[i] + delay[e] - tol:
                 raise AssertionError(f"precedence violated on edge ({i},{j})")
         for q in range(g.num_types):
+            sel = np.flatnonzero(self.alloc == q)
             if counts[q] == 0:
-                if (self.alloc == q).any():
+                if sel.size:
                     raise AssertionError(f"task allocated to empty type {q}")
                 continue
-            sel = np.flatnonzero(self.alloc == q)
-            if sel.size and (self.proc[sel].max() >= counts[q] or self.proc[sel].min() < 0):
-                raise AssertionError("processor index out of range")
-            order = sel[np.lexsort((self.start[sel], self.proc[sel]))]
-            for a, b in zip(order[:-1], order[1:]):
-                if self.proc[a] == self.proc[b] and self.start[b] < self.finish[a] - tol:
-                    raise AssertionError(f"overlap on type {q} proc {self.proc[a]}: {a},{b}")
+            # Expand width-w tasks to their units, then check pairwise
+            # non-overlap per unit exactly as in the width-1 case.
+            by_unit: dict[int, list[int]] = {}
+            for j in sel:
+                units = self.procs_of(int(j))
+                if len(units) != self.width_of(int(j)):
+                    raise AssertionError(f"task {j}: width/units mismatch")
+                for pid in units:
+                    if not 0 <= pid < counts[q]:
+                        raise AssertionError("processor index out of range")
+                    by_unit.setdefault(pid, []).append(int(j))
+            for pid, tasks in by_unit.items():
+                order = sorted(tasks, key=lambda j: float(self.start[j]))
+                for a, b in zip(order[:-1], order[1:]):
+                    if self.start[b] < self.finish[a] - tol:
+                        raise AssertionError(
+                            f"overlap on type {q} proc {pid}: {a},{b}")
 
 
 # -------------------------------------------------------------- offline: LS
-def list_schedule(g: TaskGraph, counts: list[int], alloc: np.ndarray,
-                  priority: np.ndarray | None = None) -> Schedule:
-    """Typed List Scheduling with fixed allocation.
+def list_schedule(g: TaskGraph, machine, alloc: np.ndarray,
+                  priority: np.ndarray | None = None,
+                  width: np.ndarray | None = None) -> Schedule:
+    """Typed List Scheduling with fixed (type, width) decisions.
 
     ``priority``: higher runs first among simultaneously-ready tasks
     (default: natural order == the paper's EST policy; pass the OLS rank for
-    HLP-OLS).  Event-driven: O((n + e) log n).
+    HLP-OLS).  ``width``: optional per-task unit counts (moldable tasks); a
+    width-w task claims the w earliest-idle units of its pool atomically and
+    a task that does not fit the currently idle units is skipped in favor of
+    lower-priority ready tasks that do (no artificial idling — the Graham
+    rule per unit).  Event-driven: O((n + e) log n) at width 1.
     """
+    platform = as_platform(machine)
+    counts = platform.to_counts()
+    if width is not None:
+        width = np.asarray(width, dtype=np.int64)
+        if (width > np.asarray(counts)[np.asarray(alloc, dtype=np.int64)]).any():
+            raise ValueError("task width exceeds its pool size")
+        if (width == 1).all() and g.speedup is None:
+            width = None   # rigid instance: take the bit-parity path
+    if width is not None:
+        return _list_schedule_moldable(g, counts, alloc, width, priority)
+
     n = g.n
     alloc = np.asarray(alloc, dtype=np.int32)
     pr = np.zeros(n) if priority is None else np.asarray(priority, dtype=np.float64)
@@ -160,27 +218,120 @@ def list_schedule(g: TaskGraph, counts: list[int], alloc: np.ndarray,
     return Schedule(alloc=alloc, proc=proc_of, start=start, finish=finish)
 
 
-def ols_rank(g: TaskGraph, alloc: np.ndarray) -> np.ndarray:
+def _list_schedule_moldable(g: TaskGraph, counts: list[int], alloc: np.ndarray,
+                            width: np.ndarray,
+                            priority: np.ndarray | None) -> Schedule:
+    """Width-aware LS: same event structure as the width-1 loop, but a task
+    claims ``width[j]`` units atomically (skipping it when too few are idle
+    *now* lets narrower lower-priority tasks backfill)."""
+    n = g.n
+    alloc = np.asarray(alloc, dtype=np.int32)
+    pr = np.zeros(n) if priority is None else np.asarray(priority, dtype=np.float64)
+    times = g.moldable_times(alloc, width)
+    delay = g.edge_delays(alloc)
+
+    indeg = np.diff(g.pred_ptr).astype(np.int64).copy()
+    ready_time = np.zeros(n)
+    start = np.full(n, -1.0)
+    finish = np.full(n, -1.0)
+    proc_of = np.full(n, -1, dtype=np.int32)
+    units: list[tuple[int, ...]] = [()] * n
+
+    free = [[(0.0, p) for p in range(counts[q])] for q in range(g.num_types)]
+    for h in free:
+        heapq.heapify(h)
+    ready: list[list] = [[] for _ in range(g.num_types)]
+    becoming: list[list] = [[] for _ in range(g.num_types)]
+
+    for j in np.flatnonzero(indeg == 0):
+        heapq.heappush(becoming[alloc[j]], (0.0, -pr[j], int(j)))
+
+    t = 0.0
+    scheduled = 0
+    while scheduled < n:
+        progressed = True
+        while progressed:
+            progressed = False
+            for q in range(g.num_types):
+                while becoming[q] and becoming[q][0][0] <= t + 1e-15:
+                    rt, np_, j = heapq.heappop(becoming[q])
+                    heapq.heappush(ready[q], (np_, j))
+                skipped: list[tuple[float, int]] = []
+                while ready[q] and free[q] and free[q][0][0] <= t + 1e-15:
+                    np_, j = heapq.heappop(ready[q])
+                    w = int(width[j])
+                    claimed = []
+                    while (free[q] and free[q][0][0] <= t + 1e-15
+                           and len(claimed) < w):
+                        claimed.append(heapq.heappop(free[q]))
+                    if len(claimed) < w:      # too few idle units right now
+                        for item in claimed:
+                            heapq.heappush(free[q], item)
+                        skipped.append((np_, j))
+                        continue
+                    start[j] = t
+                    finish[j] = t + times[j]
+                    units[j] = tuple(pid for _, pid in claimed)
+                    proc_of[j] = units[j][0]
+                    for _, pid in claimed:
+                        heapq.heappush(free[q], (finish[j], pid))
+                    scheduled += 1
+                    progressed = True
+                    s0, s1 = g.succ_ptr[j], g.succ_ptr[j + 1]
+                    for v, eid in zip(g.succ_idx[s0:s1], g.succ_eid[s0:s1]):
+                        ready_time[v] = max(ready_time[v], finish[j] + delay[eid])
+                        indeg[v] -= 1
+                        if indeg[v] == 0:
+                            heapq.heappush(becoming[alloc[v]],
+                                           (ready_time[v], -pr[v], int(v)))
+                for item in skipped:
+                    heapq.heappush(ready[q], item)
+        if scheduled == n:
+            break
+        nxt = np.inf
+        for q in range(g.num_types):
+            if becoming[q]:
+                nxt = min(nxt, becoming[q][0][0])
+            if ready[q]:
+                # a waiting (possibly wide) task moves when any further unit
+                # frees — the earliest free time strictly in the future
+                later = [f for f, _ in free[q] if f > t + 1e-15]
+                if later:
+                    nxt = min(nxt, min(later))
+        if not np.isfinite(nxt) or nxt <= t:
+            raise RuntimeError("scheduler stalled (width exceeds pool?)")
+        t = nxt
+    return Schedule(alloc=alloc, proc=proc_of, start=start, finish=finish,
+                    width=np.asarray(width, dtype=np.int32),
+                    procs=tuple(units))
+
+
+def ols_rank(g: TaskGraph, alloc: np.ndarray,
+             width: np.ndarray | None = None) -> np.ndarray:
     """Paper §4.1: Rank(T_j) = allocated time + max_{succ} Rank — post-rounding.
 
     With edge costs the rank includes the transfer delay actually paid on
-    each cross-type edge (the allocation is already fixed here)."""
-    return g.upward_rank(g.alloc_times(alloc),
+    each cross-type edge; with widths it uses the curve-shrunk (type, width)
+    times (the allocation is already fixed here)."""
+    return g.upward_rank(g.moldable_times(alloc, width),
                          g.edge_delays(alloc) if g.has_comm else None)
 
 
-def hlp_est(g: TaskGraph, counts: list[int], alloc: np.ndarray) -> Schedule:
+def hlp_est(g: TaskGraph, machine, alloc: np.ndarray,
+            width: np.ndarray | None = None) -> Schedule:
     """Scheduling phase of HLP-EST: greedy Earliest Starting Time == untied LS."""
-    return list_schedule(g, counts, alloc, priority=None)
+    return list_schedule(g, machine, alloc, priority=None, width=width)
 
 
-def hlp_ols(g: TaskGraph, counts: list[int], alloc: np.ndarray) -> Schedule:
+def hlp_ols(g: TaskGraph, machine, alloc: np.ndarray,
+            width: np.ndarray | None = None) -> Schedule:
     """Scheduling phase of HLP-OLS: LS ordered by the post-allocation rank."""
-    return list_schedule(g, counts, alloc, priority=ols_rank(g, alloc))
+    return list_schedule(g, machine, alloc,
+                         priority=ols_rank(g, alloc, width), width=width)
 
 
 # ------------------------------------------------------------ offline: HEFT
-def heft(g: TaskGraph, counts: list[int], *, comm_aware: bool = True) -> Schedule:
+def heft(g: TaskGraph, machine, *, comm_aware: bool = True) -> Schedule:
     """Insertion-based HEFT for Q typed resource pools (single-phase baseline).
 
     ``comm_aware=True`` (default) charges ``g.comm`` on cross-type edges in
@@ -189,7 +340,16 @@ def heft(g: TaskGraph, counts: list[int], *, comm_aware: bool = True) -> Schedul
     differ in type) and the insertion phase uses the candidate-type data
     ready time.  With zero edge costs both variants coincide with the
     paper's communication-free HEFT, decision for decision.
+
+    On a moldable graph (``g.speedup``) the candidate set per task is every
+    ``(type, width)`` pair: width-1 candidates keep the classic per-slot
+    insertion, wider candidates are committed append-only across the
+    ``width`` least-loaded units (gap alignment across units is not
+    searched).  Ties break toward the accelerated pool (paper Thm-1
+    convention), then toward the narrower decision (less area).
     """
+    platform = as_platform(machine)
+    counts = platform.to_counts()
     n, Q = g.n, g.num_types
     total = float(sum(counts))
     avg = (g.proc * np.asarray(counts, dtype=np.float64)).sum(axis=1) / total
@@ -200,12 +360,15 @@ def heft(g: TaskGraph, counts: list[int], *, comm_aware: bool = True) -> Schedul
         exp_delay = g.comm * (1.0 - float((frac ** 2).sum()))
     rank = g.upward_rank(avg, exp_delay)
     order = np.argsort(-rank, kind="stable")
+    moldable = g.max_width > 1
 
     # Per (type, proc): sorted list of (start, finish) busy intervals.
     busy: list[list[list[tuple[float, float]]]] = [
         [[] for _ in range(counts[q])] for q in range(Q)]
     start = np.zeros(n); finish = np.zeros(n)
     alloc = np.zeros(n, dtype=np.int32); proc_of = np.zeros(n, dtype=np.int32)
+    width_of = np.ones(n, dtype=np.int32)
+    units: list[tuple[int, ...]] = [()] * n
 
     def earliest_fit(intervals: list[tuple[float, float]], r: float, p: float) -> float:
         """Earliest start >= r of a length-p slot (insertion/backfilling)."""
@@ -223,6 +386,7 @@ def heft(g: TaskGraph, counts: list[int], *, comm_aware: bool = True) -> Schedul
         pi = g.pred_idx[p0:p1]
         pfin = finish[pi] if p1 > p0 else None
         best = (np.inf, 0, 0, 0.0)  # (finish, q, pid, start)
+        best_w = (1, (0,))          # (width, unit ids) of the incumbent
         for q in range(Q):
             p = g.proc[j, q]
             if not np.isfinite(p):
@@ -240,9 +404,30 @@ def heft(g: TaskGraph, counts: list[int], *, comm_aware: bool = True) -> Schedul
                 # Tie-break toward GPUs (higher q) per the paper's Thm-1 convention.
                 if f < best[0] - 1e-12 or (abs(f - best[0]) <= 1e-12 and q > best[1]):
                     best = (f, q, pid, s)
+                    best_w = (1, (pid,))
+            if moldable:
+                # Wider candidates: claim the w least-loaded units append-only.
+                ends = sorted((busy[q][pid][-1][1] if busy[q][pid] else 0.0,
+                               pid) for pid in range(counts[q]))
+                for w in range(2, min(g.max_width, counts[q]) + 1):
+                    pw = g.proc_w(j, q, w)
+                    s = max(r, ends[w - 1][0])
+                    f = s + pw
+                    if f < best[0] - 1e-12 or (
+                            abs(f - best[0]) <= 1e-12 and q > best[1]):
+                        ids = tuple(pid for _, pid in ends[:w])
+                        best = (f, q, ids[0], s)
+                        best_w = (w, ids)
         f, q, pid, s = best
+        w, ids = best_w
         alloc[j], proc_of[j], start[j], finish[j] = q, pid, s, f
-        iv = busy[q][pid]
-        iv.append((s, f))
-        iv.sort()
-    return Schedule(alloc=alloc, proc=proc_of, start=start, finish=finish)
+        width_of[j] = w
+        units[j] = ids
+        for u in ids:
+            iv = busy[q][u]
+            iv.append((s, f))
+            iv.sort()
+    if not moldable:
+        return Schedule(alloc=alloc, proc=proc_of, start=start, finish=finish)
+    return Schedule(alloc=alloc, proc=proc_of, start=start, finish=finish,
+                    width=width_of, procs=tuple(units))

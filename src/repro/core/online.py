@@ -16,12 +16,22 @@ committed to — crossing a type boundary on edge (i, j) delays j's data by
 ``g.comm[i→j]``.  Ready times are therefore computed *per type* (a (Q,)
 vector); R_{j,gpu} above uses the GPU entry.  With zero edge costs every
 entry coincides and all policies reduce to the paper's semantics.
+
+Moldable tasks: on a graph with speedup curves the CPU-vs-GPU threshold
+generalizes to a width-aware rule (``erls_decide_moldable``): each side is
+represented by its *efficient* width (the widest slot whose per-unit
+efficiency stays above a floor, ``efficient_width``), Step 1 compares the
+curve-shrunk times at those widths, and Step 2 becomes R2 over *areas*
+(w·p)/√m — so committing a wide slot is charged for all the units it
+occupies.  At width 1 every formula reduces symbol-for-symbol to the
+paper's rule, and the committed state is the shared
+``repro.platform.PoolState`` (width-w commits claim w units atomically).
 """
 from __future__ import annotations
 
-import heapq
-
 import numpy as np
+
+from repro.platform import Decision, PoolState, as_decision, as_platform
 
 from .dag import CPU, GPU, TaskGraph
 from .listsched import Schedule, list_schedule
@@ -56,6 +66,88 @@ def erls_decide(pc: float, pg: float, m: int, k: int, r_gpu: float) -> int:
     return rule_r2(pc, pg, m, k)                   # Step 2
 
 
+def efficient_width(g: TaskGraph, j: int, pool_size: int,
+                    eff_floor: float = 0.5) -> int:
+    """The widest slot for task j whose per-unit efficiency
+    ``speedup(w)/w`` stays >= ``eff_floor`` (capped by the pool size).
+
+    Efficiency is non-increasing in width (a ``TaskGraph.speedup``
+    invariant), so this is the last width above the floor — 1 on a
+    curve-free graph.
+    """
+    if g.speedup is None or pool_size <= 1:
+        return 1
+    W = min(g.max_width, int(pool_size))
+    eff = g.speedup[j, :W] / np.arange(1, W + 1)
+    above = np.flatnonzero(eff >= eff_floor - 1e-12)
+    return int(above[-1]) + 1 if above.size else 1
+
+
+def erls_decide_moldable(pc: float, pg: float, m: int, k: int, r_gpu: float,
+                         wc: int = 1, wg: int = 1) -> Decision:
+    """Width-aware ER-LS decision — the paper's rule over (type, width).
+
+    ``pc``/``pg`` are the *curve-shrunk* times at the candidate widths
+    ``wc``/``wg`` (see :func:`efficient_width`), and ``r_gpu`` is the
+    earliest time ``wg`` GPUs are simultaneously free (floored at the data
+    ready time).  Step 1 compares the shrunk times; Step 2 is R2 over the
+    *areas* ``w·p`` each slot occupies.  At ``wc == wg == 1`` this is
+    symbol-for-symbol :func:`erls_decide`.
+    """
+    if pc >= r_gpu + pg:                                       # Step 1
+        return Decision(GPU, wg)
+    if wc * pc / np.sqrt(m) <= wg * pg / np.sqrt(k):           # Step 2 (R2)
+        return Decision(CPU, wc)
+    return Decision(GPU, wg)
+
+
+def decide_erls(g: TaskGraph, j: int, m: int, k: int, ready: np.ndarray,
+                state) -> "Decision | int":
+    """The complete per-task ER-LS decision against a ``PoolState`` — ONE
+    implementation shared by the pure-core online loop and the simulation
+    adapter (the ``erls_decide`` pattern, extended to widths): rigid graphs
+    take the paper's int-returning rule, moldable graphs the width-aware
+    rule at each side's efficient width."""
+    if g.speedup is None:
+        pc, pg = g.proc[j, CPU], g.proc[j, GPU]
+        r_gpu = max(state.earliest_idle(GPU), float(ready[GPU]))
+        return erls_decide(pc, pg, m, k, r_gpu)
+    wc = efficient_width(g, j, m)
+    wg = efficient_width(g, j, k)
+    r_gpu = max(state.earliest_idle(GPU, wg), float(ready[GPU]))
+    return erls_decide_moldable(g.proc_w(j, CPU, wc), g.proc_w(j, GPU, wg),
+                                m, k, r_gpu, wc, wg)
+
+
+def decide_eft(g: TaskGraph, j: int, counts, ready: np.ndarray,
+               state) -> "Decision | int":
+    """The complete per-task EFT decision against a ``PoolState`` — shared
+    by ``eft_online`` and the simulation adapter.  Rigid graphs keep the
+    historical type-only loop (bit-parity); on moldable graphs every
+    (type, width) slot competes, ties toward the smaller processing time."""
+    if g.speedup is None:
+        best_q, best_f = 0, np.inf
+        for q in range(g.num_types):
+            p = g.proc[j, q]
+            if not np.isfinite(p):
+                continue
+            f = max(float(ready[q]), state.earliest_idle(q)) + p
+            if f < best_f - 1e-12 or (abs(f - best_f) <= 1e-12
+                                      and p < g.proc[j, best_q]):
+                best_q, best_f = q, f
+        return best_q
+    best, best_f, best_p = Decision(0), np.inf, np.inf
+    for q in range(g.num_types):
+        for w in range(1, min(g.max_width, int(counts[q])) + 1):
+            p = g.proc_w(j, q, w)
+            if not np.isfinite(p):
+                continue
+            f = max(float(ready[q]), state.earliest_idle(q, w)) + p
+            if f < best_f - 1e-12 or (abs(f - best_f) <= 1e-12 and p < best_p):
+                best, best_f, best_p = Decision(q, w), f, p
+    return best
+
+
 def _arrival_order(g: TaskGraph, rng: np.random.Generator | None = None) -> np.ndarray:
     """A precedence-respecting arrival order (randomized topo if rng given)."""
     if rng is None:
@@ -74,22 +166,8 @@ def _arrival_order(g: TaskGraph, rng: np.random.Generator | None = None) -> np.n
     return order
 
 
-class _OnlineMachine:
-    """Committed schedule state: per-type heaps of (free_time, proc_id)."""
-
-    def __init__(self, counts: list[int]):
-        self.free = [[(0.0, p) for p in range(c)] for c in counts]
-        for h in self.free:
-            heapq.heapify(h)
-
-    def earliest_idle(self, q: int) -> float:
-        return self.free[q][0][0]
-
-    def commit(self, q: int, ready: float, p: float) -> tuple[int, float, float]:
-        f, pid = heapq.heappop(self.free[q])
-        s = max(ready, f)
-        heapq.heappush(self.free[q], (s + p, pid))
-        return pid, s, s + p
+# The committed-schedule view is the shared ``repro.platform.PoolState`` —
+# the same heaps the simulation engine, streams engine and dispatcher use.
 
 
 def ready_per_type(g: TaskGraph, j: int, finish: np.ndarray,
@@ -117,65 +195,73 @@ def ready_per_type(g: TaskGraph, j: int, finish: np.ndarray,
     return ready
 
 
-def _run_online(g: TaskGraph, counts: list[int], decide, order: np.ndarray) -> Schedule:
-    """Drive an online policy; ``decide(j, ready, mach) -> type`` sees the
-    machine state and the (Q,) per-type data-ready vector."""
+def _run_online(g: TaskGraph, platform, decide, order: np.ndarray) -> Schedule:
+    """Drive an online policy; ``decide(j, ready, mach) -> Decision | type``
+    sees the pool state and the (Q,) per-type data-ready vector."""
     n = g.n
-    Q = len(counts)
-    mach = _OnlineMachine(counts)
+    Q = platform.num_types
+    mach = PoolState(platform)
     alloc = np.zeros(n, dtype=np.int32)
+    width = np.ones(n, dtype=np.int32)
     proc = np.zeros(n, dtype=np.int32)
     start = np.zeros(n); finish = np.zeros(n)
+    units: list[tuple[int, ...]] = [()] * n
+    wide = False
     for j in order:
         j = int(j)
         ready = ready_per_type(g, j, finish, alloc, Q)
-        q = decide(j, ready, mach)
-        alloc[j] = q
-        proc[j], start[j], finish[j] = mach.commit(q, ready[q], g.proc[j, q])
-    return Schedule(alloc=alloc, proc=proc, start=start, finish=finish)
+        d = as_decision(decide(j, ready, mach))
+        alloc[j], width[j] = d.rtype, d.width
+        wide = wide or d.width > 1
+        units[j], start[j], finish[j] = mach.commit_wide(
+            d.rtype, ready[d.rtype], g.proc_w(j, d.rtype, d.width), d.width)
+        proc[j] = units[j][0]
+    if not wide:
+        return Schedule(alloc=alloc, proc=proc, start=start, finish=finish)
+    return Schedule(alloc=alloc, proc=proc, start=start, finish=finish,
+                    width=width, procs=tuple(units))
 
 
 # ------------------------------------------------------------------ policies
-def er_ls(g: TaskGraph, counts: list[int], order: np.ndarray | None = None) -> Schedule:
-    """The paper's on-line algorithm (enhanced rules + list scheduling)."""
-    m, k = counts[CPU], counts[GPU]
+def er_ls(g: TaskGraph, machine, order: np.ndarray | None = None) -> Schedule:
+    """The paper's on-line algorithm (enhanced rules + list scheduling) —
+    width-aware on moldable graphs via :func:`decide_erls`."""
+    platform = as_platform(machine)
+    m, k = platform.counts[CPU], platform.counts[GPU]
 
-    def decide(j: int, ready: np.ndarray, mach: _OnlineMachine) -> int:
-        pc, pg = g.proc[j, CPU], g.proc[j, GPU]
-        r_gpu = max(mach.earliest_idle(GPU), ready[GPU])
-        return erls_decide(pc, pg, m, k, r_gpu)
+    def decide(j: int, ready: np.ndarray, mach: PoolState):
+        return decide_erls(g, j, m, k, ready, mach)
 
-    return _run_online(g, counts, decide, g.topo if order is None else order)
-
-
-def eft_online(g: TaskGraph, counts: list[int], order: np.ndarray | None = None) -> Schedule:
-    """Baseline: commit each arriving task to the processor minimizing its EFT."""
-    def decide(j: int, ready: np.ndarray, mach: _OnlineMachine) -> int:
-        best_q, best_f = 0, np.inf
-        for q in range(g.num_types):
-            p = g.proc[j, q]
-            if not np.isfinite(p):
-                continue
-            f = max(ready[q], mach.earliest_idle(q)) + p
-            if f < best_f - 1e-12 or (abs(f - best_f) <= 1e-12 and p < g.proc[j, best_q]):
-                best_q, best_f = q, f
-        return best_q
-
-    return _run_online(g, counts, decide, g.topo if order is None else order)
+    return _run_online(g, platform, decide,
+                       g.topo if order is None else order)
 
 
-def greedy_online(g: TaskGraph, counts: list[int],
+def eft_online(g: TaskGraph, machine, order: np.ndarray | None = None) -> Schedule:
+    """Baseline: commit each arriving task to the slot minimizing its EFT
+    (every (type, width) slot competes on a moldable graph)."""
+    platform = as_platform(machine)
+
+    def decide(j: int, ready: np.ndarray, mach: PoolState):
+        return decide_eft(g, j, platform.counts, ready, mach)
+
+    return _run_online(g, platform, decide,
+                       g.topo if order is None else order)
+
+
+def greedy_online(g: TaskGraph, machine,
                   rule: str = "R3", order: np.ndarray | None = None) -> Schedule:
     """Baseline: allocation by a processing-time-only rule, then List Scheduling."""
-    m, k = counts[CPU], counts[GPU]
+    platform = as_platform(machine)
+    m, k = platform.counts[CPU], platform.counts[GPU]
     fn = RULES[rule]
     alloc = np.asarray([fn(g.proc[j, CPU], g.proc[j, GPU], m, k) for j in range(g.n)],
                        dtype=np.int32)
-    return list_schedule(g, counts, alloc)
+    return list_schedule(g, platform, alloc)
 
 
-def random_online(g: TaskGraph, counts: list[int], seed: int = 0) -> Schedule:
+def random_online(g: TaskGraph, machine, seed: int = 0) -> Schedule:
     """Baseline: uniformly random side per task, then List Scheduling."""
+    platform = as_platform(machine)
     rng = np.random.default_rng(seed)
     alloc = rng.integers(0, g.num_types, size=g.n).astype(np.int32)
-    return list_schedule(g, counts, alloc)
+    return list_schedule(g, platform, alloc)

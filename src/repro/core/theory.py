@@ -92,20 +92,29 @@ def erls_competitive_bound(m: int, k: int) -> float:
 def makespan_lower_bound(g: TaskGraph, counts) -> float:
     """A bound every feasible schedule obeys, independent of the algorithm:
 
-        max( CP under per-task best-type times,
+        max( CP under per-task best-decision times,
              total best-type work / total machine count,
-             largest single best-type task ).
+             largest single best-decision task ).
 
     Weaker than LP* but valid for *any* allocation (LP* assumes the
     allocation is free to be fractional; this never exceeds OPT either) —
     the property tests in ``tests/test_sim_*`` check every simulated
     schedule against it.
+
+    On a moldable graph the CP/longest terms use the fully-widened times
+    ``tmin / speedup[:, -1]`` (the fastest any (type, width) decision can
+    run a task), while the area term keeps the width-1 ``tmin``: per-unit
+    efficiency never exceeds 1, so a task's occupied area is minimized at
+    width 1.  Curve-free graphs are untouched.
     """
+    if hasattr(counts, "to_counts"):   # Platform (duck-typed: no sim import)
+        counts = counts.to_counts()
     tmin = np.min(g.proc, axis=1)
     if not np.all(np.isfinite(tmin)):
         tmin = np.where(np.isfinite(tmin), tmin, 0.0)
-    cp = g.critical_path(tmin)
+    tfast = tmin if g.speedup is None else tmin / g.speedup[:, -1]
+    cp = g.critical_path(tfast)
     total = float(sum(counts))
     area = float(tmin.sum()) / total if total else 0.0
-    longest = float(tmin.max()) if tmin.size else 0.0
+    longest = float(tfast.max()) if tfast.size else 0.0
     return max(cp, area, longest)

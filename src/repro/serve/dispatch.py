@@ -26,6 +26,7 @@ import dataclasses
 
 from repro.core.dag import GPU
 from repro.core.online import erls_decide
+from repro.platform import Decision, as_decision
 from repro.sim.engine import MachineState
 
 
@@ -34,8 +35,8 @@ class Pool:
     """A homogeneous group of workers (one resource type).
 
     Occupancy is delegated to a single-type ``repro.sim.engine.MachineState``
-    — the same committed-schedule view the simulation engine's online
-    policies condition on."""
+    (= ``repro.platform.PoolState``) — the same committed-schedule view the
+    simulation engine's online policies condition on."""
 
     name: str
     workers: int
@@ -44,11 +45,14 @@ class Pool:
     def __post_init__(self):
         self._state = MachineState((self.workers,))
 
-    def earliest_idle(self) -> float:
-        return self._state.earliest_idle(0)
+    def earliest_idle(self, width: int = 1) -> float:
+        return self._state.earliest_idle(0, width)
 
-    def commit(self, ready: float, work: float) -> tuple[int, float, float]:
-        return self._state.commit(0, ready, work / self.speed)
+    def commit(self, ready: float, work: float,
+               width: int = 1) -> tuple[int, float, float]:
+        pids, s, f = self._state.commit_wide(0, ready, work / self.speed,
+                                             width)
+        return pids[0], s, f
 
 
 @dataclasses.dataclass
@@ -69,6 +73,7 @@ class Placement:
     start: float
     finish: float
     backup: bool = False
+    width: int = 1             # workers occupied (the ``Decision`` width)
 
 
 class ERLSDispatcher:
@@ -86,15 +91,22 @@ class ERLSDispatcher:
         self.cost = cost_model          # (request, phase, pool) -> seconds
         self.sf = straggler_factor
         self.log: list[Placement] = []
+        #: (rid, phase, Decision) — the dispatcher's first-class decision log
+        self.decisions: list[tuple[int, str, Decision]] = []
         self._reqs: dict[int, Request] = {}
 
-    def _decide(self, req: Request, phase: str, ready: float) -> Pool:
+    def _pool_of(self, d: Decision) -> Pool:
+        return self.fast if d.rtype == GPU else self.slow
+
+    def _decide(self, req: Request, phase: str, ready: float) -> Decision:
+        """The per-phase allocation as a ``Decision`` record — the same
+        (type, width) object every other decision surface consumes (serving
+        requests are rigid, so the width is always 1 here)."""
         p_slow = self.cost(req, phase, self.slow)
         p_fast = self.cost(req, phase, self.fast)
         r_fast = max(self.fast.earliest_idle(), ready)
-        side = erls_decide(p_slow, p_fast, self.slow.workers,
-                           self.fast.workers, r_fast)
-        return self.fast if side == GPU else self.slow
+        return as_decision(erls_decide(p_slow, p_fast, self.slow.workers,
+                                       self.fast.workers, r_fast))
 
     def submit(self, req: Request) -> list[Placement]:
         """Dispatch the prefill ≺ decode chain; returns the placements."""
@@ -102,10 +114,13 @@ class ERLSDispatcher:
         ready = req.arrival
         self._reqs[req.rid] = req
         for phase in ("prefill", "decode"):
-            pool = self._decide(req, phase, ready)
+            d = self._decide(req, phase, ready)
+            self.decisions.append((req.rid, phase, d))
+            pool = self._pool_of(d)
             work = self.cost(req, phase, pool) * pool.speed
-            wid, start, finish = pool.commit(ready, work)
-            out.append(Placement(req.rid, phase, pool.name, wid, start, finish))
+            wid, start, finish = pool.commit(ready, work, d.width)
+            out.append(Placement(req.rid, phase, pool.name, wid, start,
+                                 finish, width=d.width))
             ready = finish
         self.log.extend(out)
         return out

@@ -3,10 +3,22 @@
 The paper's experimental section (§6) is a large simulation campaign: run
 every algorithm (HLP-EST/OLS, HEFT, ER-LS, greedy rules, …) over libraries
 of task graphs and machine configurations, and compare makespans against the
-LP lower bound.  The seed repo exposed each scheduler through an ad-hoc entry
-point; this package unifies them behind one ``Scheduler`` protocol and one
-event-driven engine (design after ESTEE, Kobzol et al.), adding what the
-paper's static pipeline could not express:
+LP lower bound.  This package unifies them behind one ``Scheduler`` protocol
+and one event-driven engine (design after ESTEE, Kobzol et al.), built on
+the v2 allocation API of ``repro.platform``:
+
+  * **machines are ``Platform`` objects** — typed pools with canonical
+    names and counts.  ``Machine`` is the simulation-facing subclass;
+    legacy bare ``counts`` lists still work through a deprecation shim.
+  * **decisions are ``Decision`` records** — an allocation is
+    ``(type, width)``, not a bare int.  On *moldable* graphs
+    (``TaskGraph.speedup`` curves) a width-w task claims w units of one
+    pool and shrinks by its curve: schedulers search widths (MHLP's
+    width-indexed LP, width-aware HEFT/ER-LS/EFT), the engine commits them
+    atomically, and ``width=1`` reproduces the paper's rigid model
+    bit-for-bit (golden-tested).
+
+Beyond the paper's static pipeline it adds:
 
   * **stochastic runtimes** — ``proc`` entries are *estimates*; the engine
     perturbs them with a seeded ``NoiseModel`` (lognormal / uniform) and
@@ -14,27 +26,27 @@ paper's static pipeline could not express:
     measurable;
   * **communication costs** — edges may carry transfer costs
     (``TaskGraph.comm``), charged by every scheduler and by the engine
-    whenever a dependence crosses the CPU/GPU type boundary (the ESTEE /
-    StarPU network model the paper's machine model omits); scenario
+    whenever a dependence crosses the CPU/GPU type boundary; scenario
     families expose this as a CCR knob and ``ccr=0`` reproduces the
     communication-free behavior bit-for-bit;
   * **arrival streams** — tasks may carry release times, turning any offline
     instance into an online one;
   * **scenario families** — ``repro.sim.scenarios`` generates the paper's
     workloads (chains, fork-join, layered/STG, tiled Cholesky/LU), the
-    network-bound ``netbound`` instance, and a bridge to
-    ``repro.core.workloads``, each parameterized by
-    ``(n, Q, counts, speedup distribution, ccr, seed)``;
+    network-bound ``netbound`` instance, the moldable ``moldable_cholesky``
+    family (per-kernel Amdahl curves), and a bridge to
+    ``repro.core.workloads``;
   * **a padded/bucketed JAX path** — ``repro.sim.batch`` evaluates a whole
     heterogeneous campaign of static plans: plans are grouped by the
     power-of-two envelope of (tasks, fan-in), padded to per-bucket maxima,
     and each bucket runs as one jitted vmapped scan (≤ 1 XLA compile per
-    bucket, ``pmap``-sharded across devices when several are visible) —
-    what ``benchmarks.campaign.sim_sweep`` runs the (scenario × scheduler ×
-    seed) grid on in a single invocation.
+    bucket, ``pmap``-sharded across devices when several are visible).
+    Plan tensors carry the full (type, width) decision — the width column
+    rides along and realized times are curve-shrunk before the scan.
 
 Entry points::
 
+    from repro.platform import Platform
     from repro.sim import simulate, make_scheduler, ADAPTERS
     from repro.sim.scenarios import default_suite
 
@@ -44,15 +56,18 @@ Entry points::
                          noise=NoiseModel("lognormal", 0.1), seed=sc.seed)
             print(sc.name, name, r.makespan)
 """
+from repro.platform import Decision, Platform
+
 from .adapters import ADAPTERS, FrozenPlanScheduler, make_scheduler, plan_for
-from .engine import (Machine, NoiseModel, Plan, Scheduler, SimResult,
-                     TraceEvent, simulate)
+from .engine import (Machine, MachineState, NoiseModel, Plan, Scheduler,
+                     SimResult, TraceEvent, plan_times, simulate)
 from .scenarios import (SCENARIO_FAMILIES, Scenario, default_suite,
-                        from_estee, make_scenario, to_estee)
+                        from_estee, make_scenario, moldable_suite, to_estee)
 
 __all__ = [
     "ADAPTERS", "FrozenPlanScheduler", "make_scheduler", "plan_for",
-    "Machine", "NoiseModel", "Plan", "Scheduler", "SimResult", "TraceEvent",
-    "simulate", "SCENARIO_FAMILIES", "Scenario", "default_suite",
-    "from_estee", "make_scenario", "to_estee",
+    "Decision", "Platform", "Machine", "MachineState", "NoiseModel", "Plan",
+    "Scheduler", "SimResult", "TraceEvent", "plan_times", "simulate",
+    "SCENARIO_FAMILIES", "Scenario", "default_suite", "from_estee",
+    "make_scenario", "moldable_suite", "to_estee",
 ]

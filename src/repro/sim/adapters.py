@@ -11,13 +11,17 @@ Registry (``ADAPTERS`` / ``make_scheduler``):
   static:   ``hlp_est``, ``hlp_ols``, ``hlp_jax_ols``, ``heft``,
             ``heft_nocomm`` (plans ignoring edge costs — the engine still
             charges them at replay; baseline for communication awareness),
-            ``bruteforce`` (branch-and-bound oracle, n ≤ ~10)
+            ``mhlp_ols`` (width-indexed moldable HLP + width-aware OLS;
+            on a curve-free graph it routes through the exact hlp_ols
+            path), ``bruteforce`` (branch-and-bound oracle, n ≤ ~10)
   online:   ``er_ls``, ``eft``, ``greedy_r1``/``greedy_r2``/``greedy_r3``,
             ``random``
 
 Arrival-driven adapters receive ``ready`` as the (Q,) per-type data-ready
-vector (cross-type edges pay ``g.comm``); with zero edge costs all entries
-coincide with the paper's scalar ready time.
+vector (cross-type edges pay ``g.comm``) and return a
+``repro.platform.Decision`` — or a bare type int, read as width 1 (the
+deprecated pre-v2 protocol the engine still accepts).  With zero edge costs
+and no speedup curves everything coincides with the paper's semantics.
 
 All adapters are stateless between ``simulate`` calls except ``random``,
 which derives its stream from the adapter seed so campaigns stay
@@ -29,25 +33,24 @@ import numpy as np
 
 from repro.core.bruteforce import brute_force_schedule
 from repro.core.dag import CPU, GPU, TaskGraph
-from repro.core.hlp import solve_hlp, solve_qhlp
+from repro.core.hlp import solve_hlp, solve_mhlp, solve_qhlp
 from repro.core.hlp_jax import solve_hlp_jax
 from repro.core.listsched import heft, hlp_est, hlp_ols
-from repro.core.online import RULES, erls_decide
+from repro.core.online import RULES, decide_eft, decide_erls
 
 from .engine import Machine, MachineState, Plan
 
 
 class StaticScheduler:
-    """Base: wrap a ``(g, counts) -> Schedule`` solver into the protocol."""
+    """Base: wrap a ``(g, machine) -> Schedule`` solver into the protocol."""
 
     name = "static"
 
-    def _solve(self, g: TaskGraph, counts: list[int]):
+    def _solve(self, g: TaskGraph, machine: Machine):
         raise NotImplementedError
 
     def allocate(self, g: TaskGraph, machine: Machine) -> Plan:
-        counts = list(machine.counts)
-        return Plan.from_schedule(self._solve(g, counts), counts)
+        return Plan.from_schedule(self._solve(g, machine), machine)
 
     def on_task_arrival(self, j: int, ready: float, state: MachineState) -> int:
         raise RuntimeError(f"{self.name} is a static scheduler")
@@ -58,13 +61,14 @@ class HLPESTScheduler(StaticScheduler):
 
     name = "hlp_est"
 
-    def _allocate_lp(self, g: TaskGraph, counts: list[int]) -> np.ndarray:
+    def _allocate_lp(self, g: TaskGraph, machine: Machine) -> np.ndarray:
+        counts = machine.counts
         if g.num_types == 2:
             return solve_hlp(g, counts[0], counts[1]).alloc
-        return solve_qhlp(g, counts).alloc
+        return solve_qhlp(g, machine).alloc
 
-    def _solve(self, g, counts):
-        return hlp_est(g, counts, self._allocate_lp(g, counts))
+    def _solve(self, g, machine):
+        return hlp_est(g, machine, self._allocate_lp(g, machine))
 
 
 class HLPOLSScheduler(HLPESTScheduler):
@@ -72,8 +76,8 @@ class HLPOLSScheduler(HLPESTScheduler):
 
     name = "hlp_ols"
 
-    def _solve(self, g, counts):
-        return hlp_ols(g, counts, self._allocate_lp(g, counts))
+    def _solve(self, g, machine):
+        return hlp_ols(g, machine, self._allocate_lp(g, machine))
 
 
 class HLPJaxOLSScheduler(HLPOLSScheduler):
@@ -84,11 +88,31 @@ class HLPJaxOLSScheduler(HLPOLSScheduler):
     def __init__(self, iters: int = 300, seed: int = 0):
         self.iters, self.seed = iters, seed
 
-    def _allocate_lp(self, g, counts):
+    def _allocate_lp(self, g, machine):
         if g.num_types != 2:
             raise ValueError("hlp_jax_ols requires Q=2")
-        return solve_hlp_jax(g, counts[0], counts[1], iters=self.iters,
-                             seed=self.seed).alloc
+        return solve_hlp_jax(g, machine.counts[0], machine.counts[1],
+                             iters=self.iters, seed=self.seed).alloc
+
+
+class MoldableHLPScheduler(StaticScheduler):
+    """Width-indexed MHLP allocation + width-aware OLS — the moldable
+    two-phase pipeline.
+
+    On a curve-free (width-1) graph it routes through the exact classic
+    path (``solve_hlp``/``solve_qhlp`` + ``hlp_ols``) so the redesign's
+    golden bit-parity holds; on a moldable graph the LP chooses each task's
+    ``(type, width)`` decision and the width-aware list scheduler inserts
+    width-w tasks across w units of their pool.
+    """
+
+    name = "mhlp_ols"
+
+    def _solve(self, g, machine):
+        if g.max_width == 1:
+            return HLPOLSScheduler()._solve(g, machine)
+        sol = solve_mhlp(g, machine)
+        return hlp_ols(g, machine, sol.alloc, sol.width)
 
 
 class HEFTScheduler(StaticScheduler):
@@ -96,8 +120,8 @@ class HEFTScheduler(StaticScheduler):
 
     name = "heft"
 
-    def _solve(self, g, counts):
-        return heft(g, counts)
+    def _solve(self, g, machine):
+        return heft(g, machine)
 
 
 class HEFTObliviousScheduler(StaticScheduler):
@@ -109,8 +133,8 @@ class HEFTObliviousScheduler(StaticScheduler):
 
     name = "heft_nocomm"
 
-    def _solve(self, g, counts):
-        return heft(g, counts, comm_aware=False)
+    def _solve(self, g, machine):
+        return heft(g, machine, comm_aware=False)
 
 
 class BruteForceScheduler(StaticScheduler):
@@ -118,8 +142,8 @@ class BruteForceScheduler(StaticScheduler):
 
     name = "bruteforce"
 
-    def _solve(self, g, counts):
-        return brute_force_schedule(g, counts)
+    def _solve(self, g, machine):
+        return brute_force_schedule(g, machine)
 
 
 # ----------------------------------------------------------- arrival-driven
@@ -138,35 +162,30 @@ class OnlineScheduler:
 
 
 class ERLSScheduler(OnlineScheduler):
-    """Paper §4.2: Enhanced Rules + List Scheduling (4·√(m/k)-competitive)."""
+    """Paper §4.2: Enhanced Rules + List Scheduling (4·√(m/k)-competitive).
+
+    The per-task decision *is* ``repro.core.online.decide_erls`` — the same
+    function the pure-core loop drives (rigid graphs: the historical int
+    rule; moldable graphs: the width-aware rule at each side's efficient
+    width), so the two paths cannot desynchronize."""
 
     name = "er_ls"
 
     def on_task_arrival(self, j, ready, state):
-        g, machine = self._g, self._machine
-        pc, pg = g.proc[j, CPU], g.proc[j, GPU]
-        r_gpu = max(state.earliest_idle(GPU), float(ready[GPU]))
-        return erls_decide(pc, pg, machine.counts[CPU], machine.counts[GPU],
-                           r_gpu)
+        machine = self._machine
+        return decide_erls(self._g, j, machine.counts[CPU],
+                           machine.counts[GPU], ready, state)
 
 
 class EFTScheduler(OnlineScheduler):
-    """Commit each arriving task to the type minimizing its estimated EFT."""
+    """Commit each arriving task to the slot minimizing its estimated EFT —
+    the shared ``repro.core.online.decide_eft`` rule (every (type, width)
+    slot competes on a moldable graph)."""
 
     name = "eft"
 
     def on_task_arrival(self, j, ready, state):
-        g = self._g
-        best_q, best_f = 0, np.inf
-        for q in range(g.num_types):
-            p = g.proc[j, q]
-            if not np.isfinite(p):
-                continue
-            f = max(float(ready[q]), state.earliest_idle(q)) + p
-            if f < best_f - 1e-12 or (abs(f - best_f) <= 1e-12
-                                      and p < g.proc[j, best_q]):
-                best_q, best_f = q, f
-        return best_q
+        return decide_eft(self._g, j, self._machine.counts, ready, state)
 
 
 class GreedyRuleScheduler(OnlineScheduler):
@@ -210,8 +229,10 @@ class FrozenPlanScheduler:
     def allocate(self, g: TaskGraph, machine: Machine) -> Plan:
         return self._plan
 
-    def on_task_arrival(self, j: int, ready, state: MachineState) -> int:
-        return int(self._plan.alloc[j])
+    def on_task_arrival(self, j: int, ready, state: MachineState):
+        if self._plan.width is None:
+            return int(self._plan.alloc[j])
+        return self._plan.decision(j)
 
 
 def plan_for(name: str, g: TaskGraph, machine: Machine, **kw) -> Plan:
@@ -231,8 +252,7 @@ def plan_for(name: str, g: TaskGraph, machine: Machine, **kw) -> Plan:
     if plan is None:
         from .engine import simulate
         plan = Plan.from_schedule(
-            simulate(g, machine, sched, validate=False).schedule,
-            machine.counts)
+            simulate(g, machine, sched, validate=False).schedule, machine)
     return plan
 
 
@@ -240,6 +260,7 @@ ADAPTERS = {
     "hlp_est": HLPESTScheduler,
     "hlp_ols": HLPOLSScheduler,
     "hlp_jax_ols": HLPJaxOLSScheduler,
+    "mhlp_ols": MoldableHLPScheduler,
     "heft": HEFTScheduler,
     "heft_nocomm": HEFTObliviousScheduler,
     "er_ls": ERLSScheduler,

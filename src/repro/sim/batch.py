@@ -78,6 +78,15 @@ class PlanDag:
     floor: jnp.ndarray       # (n,)   per-task earliest-start floor (release
                              #        time / busy-machine conditioning); 0 =
                              #        the classic closed-campaign replay
+    width: jnp.ndarray       # (n,)   units each task occupies (moldable
+                             #        decisions).  The replay scan does not
+                             #        read it — a width-w task's occupancy is
+                             #        already encoded as its w chain preds and
+                             #        its curve-shrunk entry in ``times`` — but
+                             #        the plan tensor carries the full
+                             #        (type, width) decision so downstream
+                             #        introspection (and the width-aware
+                             #        samplers) never re-derive it.
 
 
 def _plan_arrays(g: TaskGraph, plan: Plan):
@@ -126,10 +135,18 @@ def _plan_arrays(g: TaskGraph, plan: Plan):
     return order, pred, delay
 
 
+def _plan_width(g: TaskGraph, plan: Plan) -> np.ndarray:
+    """(n,) width column of a plan's decisions (ones on rigid plans)."""
+    if plan.width is None:
+        return np.ones(g.n, dtype=np.int32)
+    return np.asarray(plan.width, dtype=np.int32)
+
+
 def build_plan_dag(g: TaskGraph, plan: Plan,
                    floor: np.ndarray | None = None) -> PlanDag:
     """Fuse DAG predecessors (with their transfer delays under the plan's
-    allocation) with each task's processor-sequence predecessor.
+    allocation) with each task's processor-sequence predecessors (one chain
+    pred per unit a width-w task occupies).
 
     ``floor`` optionally gives each task an earliest-start time (release
     times, or per-processor busy horizons when a rollout conditions on a
@@ -138,7 +155,8 @@ def build_plan_dag(g: TaskGraph, plan: Plan,
     f = np.zeros(g.n) if floor is None else np.asarray(floor, dtype=np.float64)
     return PlanDag(order=jnp.asarray(order), pred=jnp.asarray(pred),
                    pred_mask=jnp.asarray(pred >= 0),
-                   pred_delay=jnp.asarray(delay), floor=jnp.asarray(f))
+                   pred_delay=jnp.asarray(delay), floor=jnp.asarray(f),
+                   width=jnp.asarray(_plan_width(g, plan)))
 
 
 def _one_makespan(dag: PlanDag, times: jnp.ndarray) -> jnp.ndarray:
@@ -193,13 +211,15 @@ def sample_actual_batch(g: TaskGraph, plan: Plan, noise: NoiseModel,
 
     Row s uses ``np.random.default_rng(seeds[s])`` exactly like
     ``engine.simulate(..., seed=seeds[s])`` — the two paths see identical
-    noise streams.
+    noise streams.  Moldable decisions shrink each entry by the task's
+    speedup curve at the plan's width (``engine.plan_times`` semantics).
     """
-    alloc = np.asarray(plan.alloc, dtype=np.int64)
+    from .engine import plan_times
+
     rows = []
     for s in seeds:
         actual = noise.sample(g.proc, np.random.default_rng(int(s)))
-        rows.append(actual[np.arange(g.n), alloc])
+        rows.append(plan_times(g, plan, actual))
     return np.stack(rows)
 
 
@@ -224,6 +244,8 @@ class BatchedPlanDag:
     pred_mask: jnp.ndarray   # (B, n_pad, P_pad) bool
     pred_delay: jnp.ndarray  # (B, n_pad, P_pad) float
     floor: jnp.ndarray       # (B, n_pad) float — per-task start floors
+    width: jnp.ndarray       # (B, n_pad) int32 — decision widths (phantom
+                             #            tasks pad at width 1; see PlanDag)
 
     @property
     def batch(self) -> int:
@@ -259,19 +281,22 @@ class BatchedPlanDag:
         pred = np.full((B, n_pad, P_pad), -1, dtype=np.int32)
         delay = np.zeros((B, n_pad, P_pad), dtype=np.float64)
         floor = np.zeros((B, n_pad), dtype=np.float64)
+        width = np.ones((B, n_pad), dtype=np.int32)
         for b, (o, p, d) in enumerate(arrays):
             n, Pi = p.shape
             order[b, :n] = o
             order[b, n:] = n  # empty slice for the bucket's largest item
             pred[b, :n, :Pi] = p
             delay[b, :n, :Pi] = d
+            width[b, :n] = _plan_width(items[b][0], items[b][1])
             if floors is not None:
                 floor[b, :n] = floors[b]
         return BatchedPlanDag(order=jnp.asarray(order),
                               pred=jnp.asarray(pred),
                               pred_mask=jnp.asarray(pred >= 0),
                               pred_delay=jnp.asarray(delay),
-                              floor=jnp.asarray(floor))
+                              floor=jnp.asarray(floor),
+                              width=jnp.asarray(width))
 
 
 def _pad_times(times: np.ndarray, n_pad: int) -> np.ndarray:
@@ -287,12 +312,13 @@ def _pad_times(times: np.ndarray, n_pad: int) -> np.ndarray:
 def _bucket_key(g: TaskGraph, plan: Plan) -> tuple[int, int]:
     """Power-of-two envelope of (n + 1 phantom slot, max augmented fan-in).
 
-    The augmented fan-in is bounded by the DAG fan-in + 1 chain pred; using
-    the bound (instead of the exact value) keeps the key cheap and stable.
+    The augmented fan-in is bounded by the DAG fan-in plus one chain pred
+    per unit of the widest decision (1 on rigid plans); using the bound
+    (instead of the exact value) keeps the key cheap and stable.
     """
     n = g.n
     fan = int(np.diff(g.pred_ptr).max()) if g.n else 0
-    p = fan + 1
+    p = fan + (int(plan.width.max()) if plan.width is not None else 1)
     return (1 << int(np.ceil(np.log2(max(n + 1, 2)))),
             1 << int(np.ceil(np.log2(max(p, 1)))))
 
@@ -310,12 +336,13 @@ def bucket_plans(items: list[tuple[TaskGraph, Plan]]
 def _bucket_makespans(bd: BatchedPlanDag, times: jnp.ndarray) -> jnp.ndarray:
     _TRACES["bucket"] += 1  # trace-time side effect: counts compiles
 
-    def per_item(order, pred, mask, delay, floor, t):
+    def per_item(order, pred, mask, delay, floor, width, t):
         return jax.vmap(partial(_one_makespan,
-                                PlanDag(order, pred, mask, delay, floor)))(t)
+                                PlanDag(order, pred, mask, delay, floor,
+                                        width)))(t)
 
     return jax.vmap(per_item)(bd.order, bd.pred, bd.pred_mask,
-                              bd.pred_delay, bd.floor, times)
+                              bd.pred_delay, bd.floor, bd.width, times)
 
 
 def _bucket_makespans_sharded(bd: BatchedPlanDag,

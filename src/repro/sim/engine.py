@@ -43,32 +43,19 @@ import numpy as np
 
 from repro.core.dag import TaskGraph
 from repro.core.listsched import Schedule
+from repro.platform import Platform, PoolState, as_decision
 
 
 # ------------------------------------------------------------------ machine
-@dataclasses.dataclass(frozen=True)
-class Machine:
-    """Typed processor pools: ``counts[q]`` identical processors of type q."""
+class Machine(Platform):
+    """Typed processor pools — the simulation-facing name of
+    ``repro.platform.Platform`` (kept as a subclass so every existing
+    ``Machine(...)`` construction and ``isinstance`` check still holds).
 
-    counts: tuple[int, ...]
-    names: tuple[str, ...] | None = None
-
-    def __post_init__(self):
-        object.__setattr__(self, "counts", tuple(int(c) for c in self.counts))
-        if any(c < 0 for c in self.counts):
-            raise ValueError("negative processor count")
-
-    @property
-    def num_types(self) -> int:
-        return len(self.counts)
-
-    @property
-    def total(self) -> int:
-        return sum(self.counts)
-
-    @staticmethod
-    def hybrid(m: int, k: int) -> "Machine":
-        return Machine((m, k), names=("cpu", "gpu"))
+    Pool names now always render: an unnamed construction gets the
+    canonical labels (``cpu``/``gpu``/...), so traces and tables from
+    ``Machine.hybrid`` and scenario-built machines agree.
+    """
 
 
 # -------------------------------------------------------------------- noise
@@ -108,42 +95,49 @@ class NoiseModel:
 # --------------------------------------------------------------------- plan
 @dataclasses.dataclass(frozen=True)
 class Plan:
-    """Static scheduling decision: full assignment + per-processor order."""
+    """Static scheduling decision: full (type, width) assignment +
+    per-processor order.  ``width`` / ``procs`` are ``None`` on rigid
+    (width-1) plans — the historical representation, byte-for-byte."""
 
     alloc: np.ndarray                 # (n,) resource type per task
-    proc: np.ndarray                  # (n,) processor index within its type
+    proc: np.ndarray                  # (n,) first processor index within type
     sequences: dict[tuple[int, int], list[int]]   # (q, pid) -> ordered tasks
+    width: np.ndarray | None = None   # (n,) units per task; None = all 1
+    procs: tuple[tuple[int, ...], ...] | None = None  # full unit sets
+
+    def width_of(self, j: int) -> int:
+        return 1 if self.width is None else int(self.width[j])
+
+    def decision(self, j: int):
+        """Task j's allocation as a first-class ``Decision`` record."""
+        from repro.platform import Decision
+        return Decision(int(self.alloc[j]), self.width_of(j))
 
     @staticmethod
-    def from_schedule(sched: Schedule, counts) -> "Plan":
+    def from_schedule(sched: Schedule, machine) -> "Plan":
         return Plan(alloc=np.asarray(sched.alloc, dtype=np.int32),
                     proc=np.asarray(sched.proc, dtype=np.int32),
-                    sequences=sched.machine_sequences(list(counts)))
+                    sequences=sched.machine_sequences(machine),
+                    width=(None if sched.width is None
+                           else np.asarray(sched.width, dtype=np.int32)),
+                    procs=sched.procs)
 
 
-class MachineState:
-    """The committed schedule as seen by an online scheduler at arrival time."""
+class MachineState(PoolState):
+    """The committed schedule as seen by an online scheduler at arrival time
+    — the simulation-facing name of ``repro.platform.PoolState`` (one
+    implementation also serves the pure-core online loop, the streams
+    engine and the serving dispatcher)."""
 
-    def __init__(self, counts: tuple[int, ...]):
-        self.free = [[(0.0, p) for p in range(c)] for c in counts]
-        for h in self.free:
-            heapq.heapify(h)
 
-    def earliest_idle(self, q: int) -> float:
-        return self.free[q][0][0] if self.free[q] else np.inf
-
-    def busy_until(self, q: int) -> np.ndarray:
-        """Sorted (ascending) commitment horizon of every type-q processor —
-        the state a simulation-in-the-loop rollout conditions on."""
-        return np.sort([f for f, _ in self.free[q]])
-
-    def commit(self, q: int, ready: float, p: float) -> tuple[int, float, float]:
-        if not self.free[q]:
-            raise RuntimeError(f"no processors of type {q}")
-        f, pid = heapq.heappop(self.free[q])
-        s = max(ready, f)
-        heapq.heappush(self.free[q], (s + p, pid))
-        return pid, s, s + p
+def plan_times(g: TaskGraph, plan: Plan, actual: np.ndarray) -> np.ndarray:
+    """(n,) realized times of a plan's (type, width) decisions, from an
+    (n, Q) realized width-1 times matrix."""
+    times = actual[np.arange(g.n), np.asarray(plan.alloc, dtype=np.int64)]
+    if plan.width is not None and g.speedup is not None:
+        times = times / g.speedup[np.arange(g.n),
+                                  np.asarray(plan.width, dtype=np.int64) - 1]
+    return times
 
 
 @runtime_checkable
@@ -157,9 +151,11 @@ class Scheduler(Protocol):
         ...
 
     def on_task_arrival(self, j: int, ready: np.ndarray,
-                        state: MachineState) -> int:
-        """Resource type for arriving task ``j`` (online policies only).
-        ``ready`` is the (Q,) per-type data-ready vector."""
+                        state: MachineState) -> "int | object":
+        """Allocation for arriving task ``j`` (online policies only): a
+        ``repro.platform.Decision`` — or a bare resource-type int, read as
+        ``width=1`` (the deprecated pre-v2 protocol).  ``ready`` is the (Q,)
+        per-type data-ready vector."""
         ...
 
 
@@ -172,6 +168,7 @@ class TraceEvent:
     rtype: int
     proc: int
     job: int = -1       # owning job when ``simulate`` is given ``job_of``
+    width: int = 1      # units occupied (moldable tasks)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -205,19 +202,23 @@ def _execute_plan(g: TaskGraph, plan: Plan, times: np.ndarray,
     """Dynamic replay of a static plan under realized task ``times``.
 
     Data-ready times are delayed by ``g.comm`` on cross-type DAG edges
-    (processor-sequence chain edges transfer nothing).
+    (processor-sequence chain edges transfer nothing).  A width-w task
+    appears in w per-unit sequences, so it carries one chain dependency per
+    claimed unit (width-1 plans have exactly the historical single-chain
+    structure).
     """
     n = g.n
     start = np.zeros(n)
     finish = np.zeros(n)
     delay = g.edge_delays(plan.alloc)
-    prev_on_proc = np.full(n, -1, dtype=np.int64)
-    next_on_proc = np.full(n, -1, dtype=np.int64)
+    chain_prev: list[list[int]] = [[] for _ in range(n)]
+    chain_next: list[list[int]] = [[] for _ in range(n)]
     for seq in plan.sequences.values():
         for a, b in zip(seq[:-1], seq[1:]):
-            prev_on_proc[b] = a
-            next_on_proc[a] = b
-    remaining = np.diff(g.pred_ptr).astype(np.int64) + (prev_on_proc >= 0)
+            chain_prev[b].append(a)
+            chain_next[a].append(b)
+    remaining = np.diff(g.pred_ptr).astype(np.int64) \
+        + np.asarray([len(c) for c in chain_prev], dtype=np.int64)
     heap: list[tuple[float, int]] = []
     for j in np.flatnonzero(remaining == 0):
         heapq.heappush(heap, (float(release[j]), int(j)))
@@ -228,11 +229,9 @@ def _execute_plan(g: TaskGraph, plan: Plan, times: np.ndarray,
         finish[j] = r + times[j]
         done += 1
         # Each finished task releases one slot per dependency role: one per
-        # outgoing DAG edge, plus one for its successor in the processor
-        # sequence (which may be the same task — it then holds two slots).
-        succ = list(map(int, g.succs(j)))
-        nxt = int(next_on_proc[j])
-        for v in succ + ([nxt] if nxt >= 0 else []):
+        # outgoing DAG edge, plus one per successor slot in its units'
+        # sequences (which may be the same task — it then holds two slots).
+        for v in list(map(int, g.succs(j))) + chain_next[j]:
             remaining[v] -= 1
             if remaining[v] == 0:
                 ready = float(release[v])
@@ -241,37 +240,79 @@ def _execute_plan(g: TaskGraph, plan: Plan, times: np.ndarray,
                     ready = max(ready, float(
                         (finish[g.pred_idx[p0:p1]]
                          + delay[g.pred_eid[p0:p1]]).max()))
-                if prev_on_proc[v] >= 0:
-                    ready = max(ready, float(finish[prev_on_proc[v]]))
+                for i in chain_prev[v]:
+                    ready = max(ready, float(finish[i]))
                 heapq.heappush(heap, (ready, v))
     if done != n:
         raise RuntimeError("plan execution deadlocked (bad plan sequences?)")
     return start, finish
 
 
+def _commit_decision(g: TaskGraph, scheduler: Scheduler, state: MachineState,
+                     j: int, ready: np.ndarray, decision,
+                     times_matrix: np.ndarray, num_types: int):
+    """Normalize one arrival decision (bare int or ``Decision``) and commit
+    it: width-w commits claim w units atomically, the realized time shrinks
+    by the task's curve."""
+    d = as_decision(decision)
+    if not 0 <= d.rtype < num_types:
+        raise ValueError(f"scheduler {scheduler.name} returned bad type "
+                         f"{d.rtype}")
+    t = float(times_matrix[j, d.rtype])
+    if d.width > 1:
+        if g.speedup is None or d.width > g.max_width:
+            raise ValueError(f"scheduler {scheduler.name} returned width "
+                             f"{d.width} on a graph of max width {g.max_width}")
+        t /= float(g.speedup[j, d.width - 1])
+    pids, s, f = state.commit_wide(d.rtype, float(ready[d.rtype]), t, d.width)
+    return d, pids, s, f
+
+
+class _ArrivalLog:
+    """Accumulates arrival-loop commitments into Schedule arrays (the
+    width/procs fields stay ``None`` for all-rigid runs — byte parity)."""
+
+    def __init__(self, n: int):
+        self.alloc = np.zeros(n, dtype=np.int32)
+        self.width = np.ones(n, dtype=np.int32)
+        self.proc = np.zeros(n, dtype=np.int32)
+        self.start = np.zeros(n)
+        self.finish = np.zeros(n)
+        self.units: list[tuple[int, ...]] = [()] * n
+        self.wide = False
+
+    def record(self, j: int, d, pids, s: float, f: float) -> None:
+        self.alloc[j], self.width[j] = d.rtype, d.width
+        self.proc[j], self.start[j], self.finish[j] = pids[0], s, f
+        self.units[j] = pids
+        self.wide = self.wide or d.width > 1
+
+    def arrays(self):
+        if not self.wide:
+            return self.alloc, self.proc, self.start, self.finish, None, None
+        return (self.alloc, self.proc, self.start, self.finish, self.width,
+                tuple(self.units))
+
+
 def _run_arrivals(g: TaskGraph, machine: Machine, scheduler: Scheduler,
                   times_matrix: np.ndarray, release: np.ndarray,
                   order: np.ndarray):
-    """Arrival-driven loop: irrevocable (type, proc, start) per arrival."""
+    """Arrival-driven loop: irrevocable (type, width, procs, start) per
+    arrival."""
     from repro.core.online import ready_per_type
 
-    n = g.n
     state = MachineState(machine.counts)
-    alloc = np.zeros(n, dtype=np.int32)
-    proc = np.zeros(n, dtype=np.int32)
-    start = np.zeros(n)
-    finish = np.zeros(n)
+    log = _ArrivalLog(g.n)
     for j in order:
         j = int(j)
-        ready = ready_per_type(g, j, finish, alloc, machine.num_types,
+        ready = ready_per_type(g, j, log.finish, log.alloc, machine.num_types,
                                floor=float(release[j]))
-        q = int(scheduler.on_task_arrival(j, ready, state))
-        if not 0 <= q < machine.num_types:
-            raise ValueError(f"scheduler {scheduler.name} returned bad type {q}")
-        alloc[j] = q
-        proc[j], start[j], finish[j] = state.commit(q, float(ready[q]),
-                                                    times_matrix[j, q])
-    return alloc, proc, start, finish
+        d, pids, s, f = _commit_decision(
+            g, scheduler, state, j, ready,
+            scheduler.on_task_arrival(j, ready, state), times_matrix,
+            machine.num_types)
+        log.record(j, d, pids, s, f)
+    return log.arrays()
 
 
 def run_arrivals_ready(g: TaskGraph, machine: Machine, scheduler: Scheduler,
@@ -294,10 +335,7 @@ def run_arrivals_ready(g: TaskGraph, machine: Machine, scheduler: Scheduler,
 
     n = g.n
     state = MachineState(machine.counts) if state is None else state
-    alloc = np.zeros(n, dtype=np.int32)
-    proc = np.zeros(n, dtype=np.int32)
-    start = np.zeros(n)
-    finish = np.zeros(n)
+    log = _ArrivalLog(n)
     remaining = np.diff(g.pred_ptr).astype(np.int64)
     heap: list[tuple[float, int]] = [
         (float(release[j]), int(j)) for j in np.flatnonzero(remaining == 0)]
@@ -305,24 +343,24 @@ def run_arrivals_ready(g: TaskGraph, machine: Machine, scheduler: Scheduler,
     done = 0
     while heap:
         t, j = heapq.heappop(heap)
-        ready = ready_per_type(g, j, finish, alloc, machine.num_types,
+        ready = ready_per_type(g, j, log.finish, log.alloc, machine.num_types,
                                floor=max(float(release[j]), t))
-        q = int(scheduler.on_task_arrival(j, ready, state))
-        if not 0 <= q < machine.num_types:
-            raise ValueError(f"scheduler {scheduler.name} returned bad type {q}")
-        alloc[j] = q
-        proc[j], start[j], finish[j] = state.commit(q, float(ready[q]),
-                                                    times_matrix[j, q])
+        d, pids, s, f = _commit_decision(
+            g, scheduler, state, j, ready,
+            scheduler.on_task_arrival(j, ready, state), times_matrix,
+            machine.num_types)
+        log.record(j, d, pids, s, f)
         done += 1
         for v in map(int, g.succs(j)):
             remaining[v] -= 1
             if remaining[v] == 0:
                 p0, p1 = g.pred_ptr[v], g.pred_ptr[v + 1]
-                arr = max(float(release[v]), float(finish[g.pred_idx[p0:p1]].max()))
+                arr = max(float(release[v]),
+                          float(log.finish[g.pred_idx[p0:p1]].max()))
                 heapq.heappush(heap, (arr, v))
     if done != n:
         raise RuntimeError("ready-driven arrival loop stalled (cyclic graph?)")
-    return alloc, proc, start, finish
+    return log.arrays()
 
 
 def simulate(g: TaskGraph, machine: Machine, scheduler: Scheduler, *,
@@ -372,24 +410,26 @@ def simulate(g: TaskGraph, machine: Machine, scheduler: Scheduler, *,
 
     plan = scheduler.allocate(g, machine)
     if plan is not None:
-        times = actual[np.arange(g.n), np.asarray(plan.alloc, dtype=np.int64)]
+        times = plan_times(g, plan, actual)
         start, finish = _execute_plan(g, plan, times, release)
         sched = Schedule(alloc=np.asarray(plan.alloc, dtype=np.int32),
                          proc=np.asarray(plan.proc, dtype=np.int32),
-                         start=start, finish=finish)
+                         start=start, finish=finish,
+                         width=plan.width, procs=plan.procs)
     else:
         if arrival == "ready":
-            alloc, proc, start, finish = run_arrivals_ready(
+            alloc, proc, start, finish, width, procs = run_arrivals_ready(
                 g, machine, scheduler, actual, release)
         else:
-            alloc, proc, start, finish = _run_arrivals(
+            alloc, proc, start, finish, width, procs = _run_arrivals(
                 g, machine, scheduler, actual, release,
                 g.topo if order is None else order)
-        sched = Schedule(alloc=alloc, proc=proc, start=start, finish=finish)
+        sched = Schedule(alloc=alloc, proc=proc, start=start, finish=finish,
+                         width=width, procs=procs)
 
     if validate:
         g_actual = dataclasses.replace(g, proc=actual)
-        sched.validate(g_actual, list(machine.counts))
+        sched.validate(g_actual, machine)
         if (sched.start < release - 1e-9).any():
             raise AssertionError("task starts before its release time")
 
@@ -397,10 +437,12 @@ def simulate(g: TaskGraph, machine: Machine, scheduler: Scheduler, *,
     if trace:
         jl = (lambda j: int(job_of[j])) if job_of is not None else (lambda j: -1)
         ev = [TraceEvent(float(sched.start[j]), "start", j,
-                         int(sched.alloc[j]), int(sched.proc[j]), jl(j))
+                         int(sched.alloc[j]), int(sched.proc[j]), jl(j),
+                         sched.width_of(j))
               for j in range(g.n)]
         ev += [TraceEvent(float(sched.finish[j]), "finish", j,
-                          int(sched.alloc[j]), int(sched.proc[j]), jl(j))
+                          int(sched.alloc[j]), int(sched.proc[j]), jl(j),
+                          sched.width_of(j))
                for j in range(g.n)]
         if job_of is not None:
             for jid in map(int, np.unique(job_of)):

@@ -50,7 +50,7 @@ from typing import Callable
 
 import numpy as np
 
-from repro.core.dag import TaskGraph
+from repro.core.dag import TaskGraph, amdahl_speedup
 from repro.core.workloads import chameleon, fork_join
 
 from .engine import Machine
@@ -238,6 +238,35 @@ def netbound_scenario(width: int = 12, depth: int = 5, num_types: int = 2,
                     "netbound", g, _machine(counts, rng), seed)
 
 
+def moldable_cholesky_scenario(nb_blocks: int = 4, block_size: int = 320,
+                               num_types: int = 2, counts=(8, 4),
+                               seed: int = 0, ccr: float = 0.0,
+                               max_width: int = 4) -> Scenario:
+    """Tiled Cholesky with *moldable* kernels (Prou et al.'s setting).
+
+    Each Chameleon kernel class gets an Amdahl speedup curve whose parallel
+    fraction reflects how tile kernels actually scale: gemm/syrk updates are
+    embarrassingly parallel, triangular solves less so, and the panel
+    factorization is the serial bottleneck.  Widths are capped by the larger
+    pool.  The curve stream is separate from the task-time stream, so the
+    underlying times and machine draws match the rigid ``cholesky`` family
+    seed-for-seed — the width-1 restriction of this scenario IS the classic
+    instance.
+    """
+    rng = np.random.default_rng(seed)
+    g = chameleon("potrf", nb_blocks, block_size, num_types=num_types,
+                  seed=seed)
+    base = {"potrf": 0.60, "trsm": 0.78, "syrk": 0.88, "gemm": 0.93}
+    crng = np.random.default_rng([seed, 0x301D])
+    alpha = np.clip([base[nm.split("(")[0]] + crng.normal(0.0, 0.03)
+                     for nm in g.names], 0.0, 0.98)
+    machine = _machine(counts, rng)
+    W = max(1, min(max_width, max(machine.counts)))
+    g = with_ccr(g.with_speedup(amdahl_speedup(alpha, W)), ccr, seed)
+    return Scenario(f"moldable_cholesky_nb{nb_blocks}_b{block_size}_s{seed}"
+                    f"{_ccr_tag(ccr)}", "moldable_cholesky", g, machine, seed)
+
+
 def from_workloads(app: str = "posv", nb_blocks: int = 5, block_size: int = 320,
                    num_types: int = 2, counts=None, seed: int = 0,
                    ccr: float = 0.0) -> Scenario:
@@ -342,8 +371,17 @@ SCENARIO_FAMILIES: dict[str, Callable[..., Scenario]] = {
     "lu": lu_scenario,
     "random": random_scenario,
     "netbound": netbound_scenario,
+    "moldable_cholesky": moldable_cholesky_scenario,
     "from_workloads": from_workloads,
 }
+
+
+def moldable_suite(seed: int = 0, *, counts=(8, 4),
+                   num: int = 4) -> list[Scenario]:
+    """The moldable campaign suite: ``num`` seeds of the moldable Cholesky
+    family (the instances where width-aware allocation should pay)."""
+    return [moldable_cholesky_scenario(counts=counts, seed=seed + i)
+            for i in range(num)]
 
 
 def make_scenario(family: str, **params) -> Scenario:

@@ -60,6 +60,9 @@ DEFAULT_JOB_PARAMS: dict[str, dict] = {
     "netbound": dict(width=6, depth=3),
     "cholesky": dict(nb_blocks=3),
     "lu": dict(nb_blocks=3),
+    # the scenario machine is ignored by the stream (jobs contribute only
+    # their graph), but the counts knob caps the curve widths drawn here
+    "moldable_cholesky": dict(nb_blocks=3, counts=(8, 4)),
 }
 
 
@@ -85,9 +88,10 @@ class JobFactory:
              rng: np.random.Generator) -> Job:
         fam = self.families[int(rng.integers(len(self.families)))]
         gseed = int(rng.integers(2 ** 31 - 1))
-        sc = make_scenario(fam, counts=(1, 1), num_types=self.num_types,
-                           ccr=self.ccr, seed=gseed,
-                           **self.params.get(fam, {}))
+        kw = dict(counts=(1, 1), num_types=self.num_types, ccr=self.ccr,
+                  seed=gseed)
+        kw.update(self.params.get(fam, {}))   # per-family knobs may override
+        sc = make_scenario(fam, **kw)
         return Job(jid=jid, tenant=tenant, arrival=float(arrival),
                    graph=sc.graph, name=sc.name)
 

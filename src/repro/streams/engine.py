@@ -29,6 +29,7 @@ import numpy as np
 from repro.core.listsched import Schedule
 from repro.core.online import ready_per_type
 from repro.core.theory import makespan_lower_bound
+from repro.platform import as_decision
 from repro.sim.engine import Machine, MachineState, NoiseModel
 
 from .arrivals import Job
@@ -40,19 +41,28 @@ from .tenants import JobRecord, TaskRecord, TenantLedger
 class _JobState:
     """Mutable per-job bookkeeping while the job is in flight."""
 
-    __slots__ = ("job", "actual", "alloc", "proc", "start", "finish",
-                 "remaining", "committed")
+    __slots__ = ("job", "actual", "alloc", "width", "units", "proc", "start",
+                 "finish", "remaining", "committed", "wide")
 
     def __init__(self, job: Job, actual: np.ndarray):
         n = job.graph.n
         self.job = job
         self.actual = actual                      # (n, Q) realized times
         self.alloc = np.zeros(n, dtype=np.int32)
+        self.width = np.ones(n, dtype=np.int32)
+        self.units: list[tuple[int, ...]] = [()] * n
         self.proc = np.zeros(n, dtype=np.int32)
         self.start = np.zeros(n)
         self.finish = np.zeros(n)
         self.remaining = np.diff(job.graph.pred_ptr).astype(np.int64)
         self.committed = 0
+        self.wide = False
+
+    def schedule(self) -> Schedule:
+        return Schedule(alloc=self.alloc, proc=self.proc, start=self.start,
+                        finish=self.finish,
+                        width=self.width if self.wide else None,
+                        procs=tuple(self.units) if self.wide else None)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,14 +98,16 @@ def _validate_stream(states: dict[int, _JobState], tasks: list[TaskRecord],
     ``Schedule.validate``, plus no overlap on any shared processor."""
     for js in states.values():
         g = dataclasses.replace(js.job.graph, proc=js.actual)
-        Schedule(alloc=js.alloc, proc=js.proc, start=js.start,
-                 finish=js.finish).validate(g, counts)
+        js.schedule().validate(g, counts)
         if (js.start < js.job.arrival - 1e-9).any():
             raise AssertionError(
                 f"job {js.job.jid}: task starts before the job's release")
+    # expand width-w tasks to every unit they occupy, then check per unit
     by_proc: dict[tuple[int, int], list[TaskRecord]] = {}
     for t in tasks:
-        by_proc.setdefault((t.rtype, t.proc), []).append(t)
+        units = states[t.jid].units[t.task] or (t.proc,)
+        for u in units:
+            by_proc.setdefault((t.rtype, u), []).append(t)
     for plist in by_proc.values():
         plist = sorted(plist, key=lambda t: t.start)
         for a, b in zip(plist[:-1], plist[1:]):
@@ -153,16 +165,26 @@ def run_stream(source, machine: Machine, policy, *,
         g = js.job.graph
         ready = ready_per_type(g, i, js.finish, js.alloc, machine.num_types,
                                floor=t)
-        q = int(policy.assign(js.job, i, ready, state))
+        d = as_decision(policy.assign(js.job, i, ready, state))
+        q, w = d.rtype, d.width
         if not 0 <= q < machine.num_types:
             raise ValueError(f"policy {policy.name} returned bad type {q}")
-        js.alloc[i] = q
-        pid, s, f = state.commit(q, float(ready[q]), float(js.actual[i, q]))
-        js.proc[i], js.start[i], js.finish[i] = pid, s, f
+        actual_t = float(js.actual[i, q])
+        if w > 1:
+            if g.speedup is None or w > g.max_width:
+                raise ValueError(f"policy {policy.name} returned width {w} "
+                                 f"on a graph of max width {g.max_width}")
+            actual_t /= float(g.speedup[i, w - 1])
+        js.alloc[i], js.width[i] = q, w
+        js.wide = js.wide or w > 1
+        pids, s, f = state.commit_wide(q, float(ready[q]), actual_t, w)
+        js.units[i] = pids
+        js.proc[i], js.start[i], js.finish[i] = pids[0], s, f
         js.committed += 1
         ledger.add_task(TaskRecord(jid=js.job.jid, task=i,
-                                   tenant=js.job.tenant, rtype=q, proc=pid,
-                                   arrival=t, start=s, finish=f))
+                                   tenant=js.job.tenant, rtype=q,
+                                   proc=pids[0], arrival=t, start=s,
+                                   finish=f, width=w))
         for v in map(int, g.succs(i)):
             js.remaining[v] -= 1
             if js.remaining[v] == 0:
@@ -172,8 +194,9 @@ def run_stream(source, machine: Machine, policy, *,
                                       next(seq), (js, v)))
         if js.committed == g.n:                          # job complete
             jfin = float(js.finish.max())
-            busy = tuple(float(js.actual[np.arange(g.n), js.alloc]
-                               [js.alloc == qq].sum())
+            # realized per-type busy *area*: width-w tasks occupy w units
+            span = (js.finish - js.start) * js.width
+            busy = tuple(float(span[js.alloc == qq].sum())
                          for qq in range(machine.num_types))
             ledger.add_job(JobRecord(
                 jid=js.job.jid, tenant=js.job.tenant, name=js.job.name,

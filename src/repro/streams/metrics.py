@@ -60,7 +60,7 @@ def utilization(tasks: list[TaskRecord], machine: Machine,
         horizon = max((t.finish for t in tasks), default=0.0)
     busy = np.zeros(machine.num_types)
     for t in tasks:
-        busy[t.rtype] += t.finish - t.start
+        busy[t.rtype] += (t.finish - t.start) * t.width  # w units occupied
     denom = np.asarray(machine.counts, dtype=float) * max(horizon, 1e-12)
     return np.divide(busy, denom, out=np.zeros_like(busy), where=denom > 0)
 

@@ -1,11 +1,14 @@
 """Stream allocation policies — including simulation-in-the-loop.
 
-A stream policy takes the open system's irrevocable per-task type decision:
+A stream policy takes the open system's irrevocable per-task allocation
+decision:
 
   * ``on_job_arrival(job, t, state, machine)`` — the whole DAG is revealed;
-  * ``assign(job, i, ready, state) -> type``   — task ``i`` of ``job`` is
-    ready; ``ready`` is the (Q,) per-type data-ready vector and ``state``
-    the shared committed-machine view;
+  * ``assign(job, i, ready, state) -> Decision | type`` — task ``i`` of
+    ``job`` is ready; ``ready`` is the (Q,) per-type data-ready vector and
+    ``state`` the shared committed-machine view.  The return value is a
+    ``repro.platform.Decision`` (type + moldable width) — a bare type int,
+    the deprecated pre-v2 protocol, is read as width 1;
   * ``on_job_complete(job)`` — bookkeeping hook.
 
 ``AdapterPolicy`` lifts any ``repro.sim`` adapter into this interface:
@@ -68,12 +71,12 @@ def conditioned_plan(adapter: str, g, machine: Machine,
     plan0 = sched.allocate(g, machine)
     if plan0 is not None:
         sched = FrozenPlanScheduler(plan0, name=adapter)
-    alloc, proc, start, finish = run_arrivals_ready(
+    alloc, proc, start, finish, width, procs = run_arrivals_ready(
         g, machine, sched, g.proc, np.zeros(g.n),
         state=_clone_state(busy, now, machine.counts))
     return Plan.from_schedule(
-        Schedule(alloc=alloc, proc=proc, start=start, finish=finish),
-        machine.counts)
+        Schedule(alloc=alloc, proc=proc, start=start, finish=finish,
+                 width=width, procs=procs), machine)
 
 
 class StreamPolicy:
@@ -118,8 +121,8 @@ class AdapterPolicy(StreamPolicy):
     def assign(self, job, i, ready, state):
         sched, plan = self._by_job[job.jid]
         if plan is not None:
-            return int(plan.alloc[i])
-        return int(sched.on_task_arrival(i, ready, state))
+            return plan.decision(i)
+        return sched.on_task_arrival(i, ready, state)
 
     def on_job_complete(self, job):
         self._by_job.pop(job.jid, None)
@@ -210,8 +213,8 @@ class SimInTheLoop(StreamPolicy):
             return self.fallback.assign(job, i, ready, state)
         sched, plan = chosen
         if plan is not None:
-            return int(plan.alloc[i])
-        return int(sched.on_task_arrival(i, ready, state))
+            return plan.decision(i)
+        return sched.on_task_arrival(i, ready, state)
 
     def on_job_complete(self, job):
         self._chosen.pop(job.jid, None)

@@ -23,10 +23,11 @@ class TaskRecord:
     task: int          # local task id within its job's graph
     tenant: int
     rtype: int
-    proc: int
+    proc: int          # first unit; a moldable task holds ``width`` units
     arrival: float     # when the task became dispatchable (ready event time)
     start: float
     finish: float
+    width: int = 1     # units occupied (the ``Decision`` width)
 
     @property
     def wait(self) -> float:

@@ -1,0 +1,65 @@
+"""Public-API snapshot — breaks surface in PRs, not in user code.
+
+``__all__`` of the four scheduling-facing packages is pinned; additions are
+fine (extend the snapshot in the same PR, with the changelog naming them),
+but a *removal or rename* fails here first.  Every exported name must also
+resolve to a real attribute.
+"""
+import importlib
+
+import pytest
+
+API = {
+    "repro.platform": [
+        "Decision", "PLATFORMS", "Platform", "PoolState", "as_decision",
+        "as_platform", "decisions_of", "default_type_names", "pack_decisions",
+    ],
+    "repro.core": [
+        "CPU", "GPU", "HLPSolution", "RULES", "Schedule", "TaskGraph",
+        "amdahl_speedup", "brute_force_opt", "brute_force_schedule",
+        "canonical_round_moldable", "decide_eft", "decide_erls",
+        "efficient_width", "er_ls", "eft_online",
+        "erls_decide", "erls_decide_moldable", "greedy_online", "heft",
+        "hlp_est", "hlp_ols", "list_schedule", "lp_lower_bound",
+        "makespan_lower_bound", "mhlp_choices", "ols_rank", "powerlaw_speedup",
+        "random_online", "solve_hlp", "solve_mhlp", "solve_qhlp",
+        "validate_speedup",
+    ],
+    "repro.sim": [
+        "ADAPTERS", "Decision", "FrozenPlanScheduler", "Machine",
+        "MachineState", "NoiseModel", "Plan", "Platform",
+        "SCENARIO_FAMILIES", "Scenario", "Scheduler", "SimResult",
+        "TraceEvent", "default_suite", "from_estee", "make_scenario",
+        "make_scheduler", "moldable_suite", "plan_for", "plan_times",
+        "simulate", "to_estee",
+    ],
+    "repro.streams": [
+        "AdapterPolicy", "ClosedLoopSource", "DEFAULT_JOB_PARAMS", "Job",
+        "JobFactory", "JobRecord", "MMPPProcess", "OpenLoopSource",
+        "PoissonProcess", "SimInTheLoop", "StreamPolicy", "StreamResult",
+        "TaskRecord", "TenantLedger", "bounded_slowdown", "chameleon_stream",
+        "job_slowdowns", "make_policy", "mean_queue_length", "open_stream",
+        "queue_length_series", "replay_estee", "run_stream", "tenant_summary",
+        "utilization",
+    ],
+}
+
+
+@pytest.mark.parametrize("module", sorted(API))
+def test_public_api_surface(module):
+    mod = importlib.import_module(module)
+    assert sorted(mod.__all__) == sorted(API[module]), (
+        f"{module}.__all__ drifted — update tests/test_api_surface.py in "
+        f"the same PR and call the change out in the changelog")
+    for name in mod.__all__:
+        assert getattr(mod, name, None) is not None, f"{module}.{name}"
+
+
+def test_adapter_registry_covers_the_moldable_planner():
+    from repro.sim import ADAPTERS
+    assert "mhlp_ols" in ADAPTERS
+
+
+def test_scenario_registry_covers_the_moldable_family():
+    from repro.sim import SCENARIO_FAMILIES
+    assert "moldable_cholesky" in SCENARIO_FAMILIES

@@ -1,0 +1,96 @@
+"""Hypothesis properties of the moldable allocation stack.
+
+The satellite contract of the v2 API redesign:
+
+  * speedup curves are non-decreasing in width with **non-increasing
+    per-unit efficiency** (speedup(w)/w) — for the analytic constructors
+    and for every table ``validate_speedup`` accepts;
+  * the allocation-phase makespan objective is **monotone non-increasing
+    when a pool grows**: both the width-indexed MHLP relaxation value λ*
+    and the universal lower bound can only improve with more units.
+    (Pointwise *schedule* makespans can exhibit Graham's anomalies under
+    list scheduling, which is why the monotone object is the allocation
+    objective the LP optimizes, not one scheduler's output.)
+  * ``Platform`` round-trips through ``to_counts()``/``from_counts()``;
+  * width-aware schedules on random moldable instances stay feasible and
+    respect the universal lower bound.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (amdahl_speedup, hlp_ols, makespan_lower_bound,
+                        powerlaw_speedup, solve_mhlp, validate_speedup)
+from repro.platform import Platform
+from conftest import random_dag
+
+
+def _moldable(seed: int, n: int, W: int):
+    g = random_dag(seed, n=n, p_edge=0.25)
+    rng = np.random.default_rng(seed + 1)
+    return g.with_speedup(amdahl_speedup(rng.uniform(0.3, 0.97, g.n), W))
+
+
+# ------------------------------------------------------------------- curves
+@given(alpha=st.floats(0.0, 1.0), W=st.integers(1, 16))
+def test_amdahl_curves_satisfy_the_invariants(alpha, W):
+    s = amdahl_speedup(alpha, W)
+    validate_speedup(s, 1)                     # raises on violation
+    eff = s[0] / np.arange(1, W + 1)
+    assert (np.diff(s[0]) >= -1e-12).all()
+    assert (np.diff(eff) <= 1e-12).all()       # per-unit efficiency falls
+    assert eff[0] == pytest.approx(1.0)
+
+
+@given(gamma=st.floats(0.0, 1.0), W=st.integers(1, 16))
+def test_powerlaw_curves_satisfy_the_invariants(gamma, W):
+    validate_speedup(powerlaw_speedup(gamma, W), 1)
+
+
+# ----------------------------------------------------------------- platform
+@given(counts=st.lists(st.integers(0, 64), min_size=1, max_size=5))
+def test_platform_round_trips_through_counts(counts):
+    p = Platform.from_counts(counts)
+    assert p.to_counts() == counts
+    assert Platform.from_counts(p.to_counts()) == p
+    assert p.num_types == len(counts) and p.total == sum(counts)
+    assert len(p.names) == len(counts)
+
+
+# ----------------------------------------------- pool-growth monotonicity
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10 ** 6), n=st.integers(4, 10),
+       m=st.integers(1, 5), k=st.integers(1, 3), W=st.integers(1, 3),
+       grow=st.sampled_from([0, 1]))
+def test_allocation_makespan_monotone_when_a_pool_grows(seed, n, m, k, W,
+                                                        grow):
+    """Growing either pool can only lower the MHLP makespan objective λ*
+    (its feasible region only widens) and the universal lower bound."""
+    g = _moldable(seed, n, W)
+    small = Platform.hybrid(m, k)
+    counts = [m, k]
+    counts[grow] += 1
+    big = Platform.from_counts(counts)
+    assert solve_mhlp(g, big).lp_value <= \
+        solve_mhlp(g, small).lp_value + 1e-7
+    assert makespan_lower_bound(g, big.to_counts()) <= \
+        makespan_lower_bound(g, small.to_counts()) + 1e-12
+
+
+# ----------------------------------------------- feasibility of the pipeline
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10 ** 6), n=st.integers(4, 12),
+       m=st.integers(2, 6), k=st.integers(1, 4), W=st.integers(2, 4))
+def test_moldable_two_phase_pipeline_stays_feasible(seed, n, m, k, W):
+    """MHLP decisions + width-aware OLS: feasible (precedence, width
+    capacity, per-unit non-overlap) and never below the universal bound."""
+    g = _moldable(seed, n, W)
+    p = Platform.hybrid(m, k)
+    sol = solve_mhlp(g, p)
+    assert (sol.width >= 1).all()
+    assert (sol.width <= np.asarray(p.to_counts())[sol.alloc]).all()
+    sched = hlp_ols(g, p, sol.alloc, sol.width)
+    sched.validate(g, p)
+    assert sched.makespan >= makespan_lower_bound(g, p.to_counts()) - 1e-9
