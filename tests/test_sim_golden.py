@@ -6,16 +6,28 @@ stream) will shift one of these numbers.  Values were produced by
 ``repro.sim.simulate`` at the recorded seeds; each entry is
 ``(noise_free, lognormal_0.2)``.
 
+The Allocation-API-v2 contract rides on top: ``golden_width1.json`` holds
+pre-redesign makespans *and SHA-256 schedule hashes* for **every** adapter
+in ``ADAPTERS``, and ``test_width1_curves_bit_parity`` replays them over
+graphs carrying explicit width-1 speedup curves — the redesigned
+(Platform/Decision/moldable) stack must reproduce each schedule
+byte-for-byte.
+
 If a change is *intentional* (e.g. a better rounding rule), regenerate with::
 
     PYTHONPATH=src python -c "import tests.test_sim_golden as t; t.regenerate()"
 
 and justify the shift in the PR description.
 """
+import hashlib
+import json
+import os
+
+import numpy as np
 import pytest
 
 from repro.sim import NoiseModel, make_scheduler, simulate
-from repro.sim.scenarios import default_suite
+from repro.sim.scenarios import default_suite, random_scenario
 
 ALGS = ("hlp_est", "hlp_ols", "heft", "er_ls")
 
@@ -74,6 +86,63 @@ def test_golden_makespans():
         exp0, exp1 = GOLDEN[name][alg]
         assert v0 == pytest.approx(exp0, rel=1e-9), (name, alg, "noise-free")
         assert v1 == pytest.approx(exp1, rel=1e-9), (name, alg, "lognormal")
+
+
+# ------------------------------------------------ width-1 bit-parity (v2)
+with open(os.path.join(os.path.dirname(__file__),
+                       "golden_width1.json")) as _f:
+    GOLDEN_W1 = json.load(_f)
+
+
+def _sched_hash(s) -> str:
+    h = hashlib.sha256()
+    for a in (np.asarray(s.alloc, np.int64), np.asarray(s.proc, np.int64),
+              np.asarray(s.start, np.float64),
+              np.asarray(s.finish, np.float64)):
+        h.update(a.tobytes())
+    return h.hexdigest()
+
+
+def _w1_suite():
+    """The fixture's scenarios: the default suite plus the small instance
+    that carries the bruteforce / hlp_jax_ols cells."""
+    return list(default_suite(seed=0)) + [
+        random_scenario(n=9, seed=7, counts=(3, 2))]
+
+
+def test_width1_fixture_covers_every_adapter():
+    from repro.sim import ADAPTERS
+    covered = {alg for cells in GOLDEN_W1.values() for alg in cells}
+    missing = set(ADAPTERS) - covered - {"mhlp_ols"}   # mhlp_ols is new in
+    # this redesign: its width-1 parity is pinned against the hlp_ols cells
+    assert not missing, f"adapters without a width-1 golden: {missing}"
+
+
+def test_width1_curves_bit_parity():
+    """Every golden adapter cell, replayed on a graph carrying *explicit*
+    width-1 speedup curves, is byte-identical to the pre-redesign run:
+    exact makespan equality and equal schedule hashes (alloc, procs,
+    starts, finishes), clean and under noise."""
+    for sc in _w1_suite():
+        g = sc.graph.with_speedup(np.ones((sc.graph.n, 1)))
+        for alg, exp in GOLDEN_W1[sc.name].items():
+            r0 = simulate(g, sc.machine, make_scheduler(alg), seed=sc.seed)
+            r1 = simulate(g, sc.machine, make_scheduler(alg),
+                          noise=NoiseModel("lognormal", 0.2), seed=sc.seed)
+            assert r0.makespan == exp["clean"], (sc.name, alg)
+            assert r1.makespan == exp["noisy"], (sc.name, alg)
+            assert _sched_hash(r0.schedule) == exp["hash_clean"], (sc.name, alg)
+            assert _sched_hash(r1.schedule) == exp["hash_noisy"], (sc.name, alg)
+
+
+def test_mhlp_routes_to_exact_hlp_at_width1():
+    """The moldable adapter's width-1 restriction IS the classic pipeline:
+    on width-1 curves its schedules hash-match the hlp_ols goldens."""
+    for sc in _w1_suite():
+        g = sc.graph.with_speedup(np.ones((sc.graph.n, 1)))
+        r = simulate(g, sc.machine, make_scheduler("mhlp_ols"), seed=sc.seed)
+        assert _sched_hash(r.schedule) == \
+            GOLDEN_W1[sc.name]["hlp_ols"]["hash_clean"], sc.name
 
 
 def regenerate():  # pragma: no cover - maintenance helper
