@@ -159,28 +159,36 @@ def online_2type(full: bool = False, verbose: bool = False) -> dict:
 # ------------------------------------------------------- unified sim sweep
 def sim_sweep(full: bool = False, noise_scale: float = 0.2,
               num_seeds: int | None = None, ccr: float = 0.5,
-              verbose: bool = False) -> dict:
+              verbose: bool = False, base_seed: int = 0) -> dict:
     """Every scheduler adapter × every scenario family × noise seeds.
 
     The suite mixes the historical communication-free families with their
     CCR-enabled variants and the network-bound ``netbound`` instance.  All
-    static adapters (hlp_est / hlp_ols / heft / heft_nocomm / hlp_jax_ols)
-    allocate once per scenario, then the *entire* (scenario × scheduler ×
-    seed) grid — including the noise-free row — evaluates through the
-    padded/bucketed ``repro.sim.batch`` path: at most one XLA compile per
-    shape bucket for the whole campaign, sharded across devices when more
-    than one is visible.  Arrival-driven adapters (er_ls / eft / greedy /
-    random) run the scalar engine per seed.  Reports the mean makespan, the
-    lower-bound ratio, the noise *degradation* (mean noisy / noise-free
-    makespan) per adapter, and the comm-aware-vs-oblivious HEFT gap.
+    static adapters (hlp_est / hlp_ols / cahlp_ols / heft / heft_nocomm /
+    hlp_jax_ols) allocate once per scenario, then the *entire* (scenario ×
+    scheduler × seed) grid — including the noise-free row — evaluates
+    through the padded/bucketed ``repro.sim.batch`` path: at most one XLA
+    compile per shape bucket for the whole campaign, sharded across devices
+    when more than one is visible.  Arrival-driven adapters (er_ls / eft /
+    greedy / random) run the scalar engine per seed.  Reports the mean
+    makespan, the lower-bound ratio (``ratio_denominator`` — the universal
+    bound tightened by the comm-aware LP*), the noise *degradation* (mean
+    noisy / noise-free makespan) per adapter, the comm-aware-vs-oblivious
+    HEFT gap, and the **comm-aware allocation gain** ``cahlp_comm_gain`` —
+    how much the comm-oblivious HLP allocation pays over CAHLP on the
+    comm-carrying (``comm_suite`` + ``netbound``) scenarios.
 
-    A *moldable* sub-campaign rides the same bucketed path: on the
-    ``moldable_cholesky`` family (per-kernel Amdahl speedup curves) the
-    width-indexed MHLP allocation (``mhlp_ols``) competes against its own
-    width-1 restriction (``hlp_ols`` on the identical graphs); the summary
-    reports the mean-makespan gain of allocating widths.
+    Two *moldable* sub-campaigns ride the same bucketed path on the
+    ``moldable_cholesky`` family (per-kernel Amdahl speedup curves): the
+    width-indexed MHLP allocation (``mhlp_ols``) against its own width-1
+    restriction (``hlp_ols``, identical graphs — ``mhlp_width_gain``), and,
+    on CCR-enabled instances, the comm-aware CAMHLP against the
+    comm-oblivious MHLP (``camhlp_comm_gain``).
+
+    ``base_seed`` shifts every scenario-generator seed (the
+    ``benchmarks.run --seed`` knob), so one flag re-rolls the whole grid.
     """
-    from repro.core.theory import makespan_lower_bound
+    from repro.core.theory import ratio_denominator
     from repro.sim import NoiseModel, make_scheduler, simulate
     from repro.sim.batch import bucketed_makespans, sample_actual_batch, trace_count
     from repro.sim.scenarios import comm_suite, default_suite, moldable_suite
@@ -188,11 +196,12 @@ def sim_sweep(full: bool = False, noise_scale: float = 0.2,
     num_seeds = num_seeds or (32 if full else 8)
     noise = NoiseModel("lognormal", noise_scale)
     seeds = list(range(num_seeds))
-    suite = default_suite(seed=0) + comm_suite(seed=50, ccr=ccr)
+    suite = default_suite(seed=base_seed) + comm_suite(seed=base_seed + 50,
+                                                       ccr=ccr)
     if full:
-        suite += default_suite(seed=100, counts=(16, 4))
-        suite += comm_suite(seed=150, counts=(16, 4), ccr=ccr)
-    static = (["hlp_est", "hlp_ols", "heft", "heft_nocomm"]
+        suite += default_suite(seed=base_seed + 100, counts=(16, 4))
+        suite += comm_suite(seed=base_seed + 150, counts=(16, 4), ccr=ccr)
+    static = (["hlp_est", "hlp_ols", "cahlp_ols", "heft", "heft_nocomm"]
               + (["hlp_jax_ols"] if full else []))
     online = ["er_ls", "eft", "greedy_r2", "random"]
 
@@ -203,7 +212,10 @@ def sim_sweep(full: bool = False, noise_scale: float = 0.2,
     items, grids, keys = [], [], []
     lbs = {}
     for sc in suite:
-        lbs[sc.name] = makespan_lower_bound(sc.graph, sc.counts)
+        # the denominator's LP is solved independently of the adapters'
+        # (cahlp re-solves the same relaxation internally): the bound must
+        # not depend on which adapters ran, and the instances are LP-small
+        lbs[sc.name] = ratio_denominator(sc.graph, sc.counts)
         for name in static:
             plan = make_scheduler(name).allocate(sc.graph, sc.machine)
             clean_row = sample_actual_batch(sc.graph, plan, NoiseModel(), [0])
@@ -213,13 +225,21 @@ def sim_sweep(full: bool = False, noise_scale: float = 0.2,
             keys.append((sc.name, name))
     sweeps = bucketed_makespans(items, grids)
 
-    # Moldable sub-campaign: width-aware MHLP vs its width-1 restriction on
-    # the same graphs, through the same ≤-1-compile-per-bucket path.
-    m_suite = moldable_suite(seed=200, num=8 if full else 4)
+    # Moldable sub-campaigns: width-aware MHLP vs its width-1 restriction,
+    # and comm-aware CAMHLP vs oblivious MHLP on CCR-enabled instances —
+    # through the same ≤-1-compile-per-bucket path.
+    m_num = 8 if full else 4
+    m_suite = [(sc, ("mhlp_ols", "hlp_ols"))
+               for sc in moldable_suite(seed=base_seed + 200, num=m_num)]
+    # CCR = 2 (the netbound regime): below ~1 the transfers are too cheap
+    # for the comm-aware widths to pay for the type locality they buy.
+    m_suite += [(sc, ("camhlp_ols", "mhlp_ols"))
+                for sc in moldable_suite(seed=base_seed + 400, num=m_num,
+                                         ccr=2.0)]
     m_items, m_grids, m_keys = [], [], []
-    for sc in m_suite:
-        lbs[sc.name] = makespan_lower_bound(sc.graph, sc.counts)
-        for name in ("mhlp_ols", "hlp_ols"):
+    for sc, algs in m_suite:
+        lbs[sc.name] = ratio_denominator(sc.graph, sc.counts)
+        for name in algs:
             plan = make_scheduler(name).allocate(sc.graph, sc.machine)
             clean_row = sample_actual_batch(sc.graph, plan, NoiseModel(), [0])
             noisy = sample_actual_batch(sc.graph, plan, noise, seeds)
@@ -257,20 +277,26 @@ def sim_sweep(full: bool = False, noise_scale: float = 0.2,
             rows.append([sc.name, sc.family, name, lb, clean, mean,
                          float(ms.std()), float(np.percentile(ms, 95)),
                          len(seeds)])
-        # the headline communication claim: aware vs oblivious HEFT —
-        # only where the graph carries comm (elsewhere the plans are
-        # bit-identical and the ratio is 1.0 by construction)
+        # the headline communication claims, only where the graph carries
+        # comm (elsewhere the competing plans are bit-identical and the
+        # ratio is 1.0 by construction): aware-vs-oblivious HEFT for the
+        # scheduling phase, CAHLP-vs-HLP for the *allocation* phase.
         if sc.graph.has_comm:
             agg["heft_comm_gain"].append(
                 results[(sc.name, "heft_nocomm")][1].mean()
                 / results[(sc.name, "heft")][1].mean())
+            agg["cahlp_comm_gain"].append(
+                results[(sc.name, "hlp_ols")][1].mean()
+                / results[(sc.name, "cahlp_ols")][1].mean())
+            if sc.family == "netbound":   # the family the claim lives on
+                agg["cahlp_netbound_gain"].append(agg["cahlp_comm_gain"][-1])
         if verbose:
             print(f"  sim_sweep {sc.name} done")
 
     m_results = {k: (float(v[0]), v[1:]) for k, v in zip(m_keys, m_sweeps)}
-    for sc in m_suite:
+    for sc, algs in m_suite:
         lb = lbs[sc.name]
-        for name in ("mhlp_ols", "hlp_ols"):
+        for name in algs:
             clean, ms = m_results[(sc.name, name)]
             n_runs += len(seeds)
             mean = float(ms.mean())
@@ -278,10 +304,16 @@ def sim_sweep(full: bool = False, noise_scale: float = 0.2,
             rows.append([sc.name, sc.family, name, lb, clean, mean,
                          float(ms.std()), float(np.percentile(ms, 95)),
                          len(seeds)])
-        # the moldable claim: width-aware allocation vs width-1 restriction
-        agg["mhlp_width_gain"].append(
-            m_results[(sc.name, "hlp_ols")][1].mean()
-            / m_results[(sc.name, "mhlp_ols")][1].mean())
+        if algs == ("mhlp_ols", "hlp_ols"):
+            # the moldable claim: width-aware allocation vs width-1
+            agg["mhlp_width_gain"].append(
+                m_results[(sc.name, "hlp_ols")][1].mean()
+                / m_results[(sc.name, "mhlp_ols")][1].mean())
+        else:
+            # comm-aware widths: CAMHLP vs oblivious MHLP under transfers
+            agg["camhlp_comm_gain"].append(
+                m_results[(sc.name, "mhlp_ols")][1].mean()
+                / m_results[(sc.name, "camhlp_ols")][1].mean())
         if verbose:
             print(f"  sim_sweep {sc.name} done")
     _write_csv("sim_sweep.csv",
@@ -296,7 +328,7 @@ def sim_sweep(full: bool = False, noise_scale: float = 0.2,
 
 # ------------------------------------------------------ open-system streams
 def streams_campaign(full: bool = False, noise_scale: float = 0.2,
-                     verbose: bool = False) -> dict:
+                     verbose: bool = False, base_seed: int = 0) -> dict:
     """Open-system grid: (arrival process × policy × seed) job streams.
 
     Every cell runs a multi-tenant stream of whole-DAG jobs through
@@ -310,6 +342,8 @@ def streams_campaign(full: bool = False, noise_scale: float = 0.2,
     against the paper's online rules and per-job HEFT planning; the summary
     reports its mean-slowdown edge over plain ER-LS on the bursty stream
     and the number of XLA compiles the whole campaign's rollouts cost.
+    ``base_seed`` shifts every stream seed (the ``benchmarks.run --seed``
+    knob).
     """
     from repro.sim import NoiseModel
     from repro.sim.batch import trace_count
@@ -322,7 +356,7 @@ def streams_campaign(full: bool = False, noise_scale: float = 0.2,
     noise = NoiseModel("lognormal", noise_scale)
     num_jobs = 32 if full else 16
     num_tenants = 4
-    seeds = list(range(4 if full else 2))
+    seeds = [base_seed + s for s in range(4 if full else 2)]
     policies = ["er_ls", "eft", "greedy_r2", "heft", "sim_in_the_loop"]
 
     def source(proc_name: str, seed: int):

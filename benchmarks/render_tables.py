@@ -7,6 +7,10 @@ Sections:
     (``python -m benchmarks.run --only sim``): per scenario family, the
     mean and p95 makespan / lower-bound ratio of every scheduler adapter,
     the companion of the paper's Fig. 3–7 ratio plots.
+  * §Communication-aware vs oblivious — from the same ``sim_sweep.csv``:
+    per family, the oblivious/aware makespan ratio of the HEFT pair
+    (scheduling phase) and the (M)HLP vs CA(M)HLP pairs (allocation
+    phase) on the comm-carrying scenarios.
   * §Streams campaign — from ``artifacts/streams_campaign.csv``
     (``python -m benchmarks.run --only streams``): per (arrival process,
     tenant), the p50/p95 bounded slowdown every stream policy delivers —
@@ -93,6 +97,65 @@ def render_sim(path: str = None) -> str:
     return "\n".join(out)
 
 
+#: (label, oblivious scheduler, aware scheduler) columns of the comm table.
+_COMM_PAIRS = (("HEFT nocomm/aware", "heft_nocomm", "heft"),
+               ("HLP-OLS/CAHLP-OLS", "hlp_ols", "cahlp_ols"),
+               ("MHLP-OLS/CAMHLP-OLS", "mhlp_ols", "camhlp_ols"))
+
+
+def render_comm_alloc(path: str = None) -> str:
+    """Per-family comm-oblivious vs comm-aware ratio table (mean | p95).
+
+    Each cell is the ratio of the oblivious scheduler's noisy makespan to
+    its comm-aware counterpart's, averaged over the family's comm-carrying
+    scenarios — >1 means pricing the network pays.  The HEFT pair is the
+    scheduling-phase gap (PR 2); the (M)HLP pairs are the *allocation*-phase
+    gap this refactor adds (``sim/cahlp_comm_gain``/``camhlp_comm_gain``).
+    """
+    path = path or os.path.join(ART, "sim_sweep.csv")
+    if not os.path.exists(path):
+        return ("\n### Communication-aware vs oblivious\n\n(no artifacts/"
+                "sim_sweep.csv — run: python -m benchmarks.run --only sim)\n")
+    with open(path, newline="") as f:
+        rows = list(csv.DictReader(f))
+    # scenario -> scheduler -> (mean, p95); keep only comm-carrying scenarios
+    per_sc: dict[str, dict[str, tuple[float, float]]] = defaultdict(dict)
+    fam_of: dict[str, str] = {}
+    for r in rows:
+        if "ccr" not in r["scenario"] and r["family"] != "netbound":
+            continue
+        per_sc[r["scenario"]][r["scheduler"]] = (
+            float(r["makespan_noisy_mean"]), float(r["makespan_noisy_p95"]))
+        fam_of[r["scenario"]] = r["family"]
+    # family -> pair label -> list of (mean ratio, p95 ratio) over scenarios
+    cell: dict[str, dict[str, list[tuple[float, float]]]] = defaultdict(
+        lambda: defaultdict(list))
+    for sc, by_sched in per_sc.items():
+        for label, obl, aware in _COMM_PAIRS:
+            if obl in by_sched and aware in by_sched:
+                cell[fam_of[sc]][label].append(
+                    (by_sched[obl][0] / by_sched[aware][0],
+                     by_sched[obl][1] / by_sched[aware][1]))
+    out = ["\n### Communication-aware vs oblivious (makespan ratio, "
+           "oblivious/aware; mean | p95 over noise seeds — >1 = pricing "
+           "the network pays)\n"]
+    labels = [lb for lb, _, _ in _COMM_PAIRS]
+    out.append("| family | " + " | ".join(labels) + " |")
+    out.append("|---" * (len(labels) + 1) + "|")
+    for fam in sorted(cell):
+        row = [fam]
+        for lb in labels:
+            v = cell[fam].get(lb)
+            if not v:
+                row.append("—")
+            else:
+                mean = sum(x[0] for x in v) / len(v)
+                p95 = sum(x[1] for x in v) / len(v)
+                row.append(f"{mean:.3f} \\| {p95:.3f}")
+        out.append("| " + " | ".join(row) + " |")
+    return "\n".join(out)
+
+
 def render_streams(path: str = None) -> str:
     """Per-(process, tenant) p50/p95 bounded-slowdown table per policy."""
     path = path or os.path.join(ART, "streams_campaign.csv")
@@ -135,4 +198,5 @@ if __name__ == "__main__":
         print("(no artifacts/dryrun_results.jsonl — "
               "run: python -m repro.launch.dryrun)")
     print(render_sim())
+    print(render_comm_alloc())
     print(render_streams())

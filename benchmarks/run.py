@@ -15,7 +15,7 @@ import sys
 import time
 
 
-def bench_offline2(full: bool) -> list[str]:
+def bench_offline2(full: bool, seed: int = 0) -> list[str]:
     from . import campaign
     t0 = time.perf_counter()
     r = campaign.offline_2type(full=full)
@@ -38,7 +38,7 @@ def bench_offline2(full: bool) -> list[str]:
     return lines
 
 
-def bench_offline3(full: bool) -> list[str]:
+def bench_offline3(full: bool, seed: int = 0) -> list[str]:
     from . import campaign
     t0 = time.perf_counter()
     r = campaign.offline_3type(full=full)
@@ -58,7 +58,7 @@ def bench_offline3(full: bool) -> list[str]:
     return lines
 
 
-def bench_online(full: bool) -> list[str]:
+def bench_online(full: bool, seed: int = 0) -> list[str]:
     from . import campaign
     t0 = time.perf_counter()
     r = campaign.online_2type(full=full)
@@ -80,11 +80,11 @@ def bench_online(full: bool) -> list[str]:
     return lines
 
 
-def bench_sim(full: bool) -> list[str]:
+def bench_sim(full: bool, seed: int = 0) -> list[str]:
     """Unified repro.sim sweep: all adapters × scenario families × noise."""
     from . import campaign
     t0 = time.perf_counter()
-    r = campaign.sim_sweep(full=full)
+    r = campaign.sim_sweep(full=full, base_seed=seed)
     dt = time.perf_counter() - t0
     per = dt / max(r["runs"], 1) * 1e6
     lines = []
@@ -94,8 +94,14 @@ def bench_sim(full: bool) -> list[str]:
                      f"noise_degrade={r['ratios']['degrade_' + alg]:.4f}")
     gain = (r["ratios"]["heft_comm_gain"] - 1) * 100
     lines.append(f"sim/heft_comm_gain,{per:.0f},oblivious_penalty_pct={gain:.2f}")
+    again = (r["ratios"]["cahlp_comm_gain"] - 1) * 100
+    nbgain = (r["ratios"]["cahlp_netbound_gain"] - 1) * 100
+    lines.append(f"sim/cahlp_comm_gain,{per:.0f},oblivious_penalty_pct={again:.2f};"
+                 f"netbound_pct={nbgain:.2f}")
     wgain = (r["ratios"]["mhlp_width_gain"] - 1) * 100
     lines.append(f"sim/mhlp_width_gain,{per:.0f},width1_penalty_pct={wgain:.2f}")
+    cmgain = (r["ratios"]["camhlp_comm_gain"] - 1) * 100
+    lines.append(f"sim/camhlp_comm_gain,{per:.0f},oblivious_penalty_pct={cmgain:.2f}")
     print(f"# sim: {r['runs']} runs over {r['scenarios']} scenarios in "
           f"{dt:.1f}s | {r['plans']} static plans in {r['compiles']} XLA "
           f"compiles (bucketed) | LB ratios " +
@@ -105,17 +111,21 @@ def bench_sim(full: bool) -> list[str]:
                    for a in r["schedulers"]))
     print(f"#   comm-aware HEFT vs oblivious: oblivious pays {gain:+.1f}% "
           f"(mean over comm scenarios; engine charges comm either way)")
+    print(f"#   comm-aware *allocation*: oblivious HLP pays {again:+.1f}% "
+          f"mean makespan vs CAHLP on the comm scenarios — {nbgain:+.1f}% "
+          f"on the netbound family (the LP sees the network)")
     print(f"#   moldable: width-1 HLP pays {wgain:+.1f}% mean makespan vs "
-          f"width-aware MHLP on the moldable_cholesky family")
+          f"width-aware MHLP on the moldable_cholesky family; oblivious "
+          f"MHLP pays {cmgain:+.1f}% vs CAMHLP under transfers")
     return lines
 
 
-def bench_streams(full: bool) -> list[str]:
+def bench_streams(full: bool, seed: int = 0) -> list[str]:
     """Open-system streams: (arrival process × policy × seed) grid with
     per-tenant bounded slowdown, utilization, and rollout compile count."""
     from . import campaign
     t0 = time.perf_counter()
-    r = campaign.streams_campaign(full=full)
+    r = campaign.streams_campaign(full=full, base_seed=seed)
     dt = time.perf_counter() - t0
     per = dt / max(r["runs"], 1) * 1e6
     lines = []
@@ -137,7 +147,7 @@ def bench_streams(full: bool) -> list[str]:
     return lines
 
 
-def bench_roofline(full: bool) -> list[str]:
+def bench_roofline(full: bool, seed: int = 0) -> list[str]:
     """Summarize dry-run roofline artifacts (produced by repro.launch.dryrun)."""
     art = os.path.join(os.path.dirname(__file__), "..", "artifacts",
                        "dryrun_results.jsonl")
@@ -162,7 +172,7 @@ def bench_roofline(full: bool) -> list[str]:
     return lines
 
 
-def bench_solver(full: bool) -> list[str]:
+def bench_solver(full: bool, seed: int = 0) -> list[str]:
     """Allocation-phase runtime: exact HiGHS LP vs the jitted JAX solver
     (the paper reports ~100 s GLPK solves on its largest instances)."""
     import time
@@ -184,7 +194,7 @@ def bench_solver(full: bool) -> list[str]:
     return lines
 
 
-def bench_kernels(full: bool) -> list[str]:
+def bench_kernels(full: bool, seed: int = 0) -> list[str]:
     from . import kernel_bench
     return kernel_bench.run(full)
 
@@ -229,6 +239,9 @@ def main() -> None:
                     help="full §6 grid (nb=20, all block sizes, 64 3-type configs)")
     ap.add_argument("--only", type=str, default="",
                     help="comma-separated subset of: " + ",".join(BENCHES))
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base seed for the campaign grids (sim + streams): "
+                         "shifts every scenario/stream generator seed")
     ap.add_argument("--list", action="store_true",
                     help="print the (scheduler × scenario × platform) "
                          "registry and exit")
@@ -242,12 +255,14 @@ def main() -> None:
         print(f"unknown --only target(s): {','.join(unknown)}; "
               f"have {','.join(BENCHES)}", file=sys.stderr)
         sys.exit(2)
+    print(f"# benchmarks.run: targets={','.join(names)} full={args.full} "
+          f"base_seed={args.seed}", flush=True)
     all_lines = ["name,us_per_call,derived"]
     failed: list[str] = []
     for name in names:
         print(f"== {name} ==", flush=True)
         try:
-            all_lines += BENCHES[name](args.full)
+            all_lines += BENCHES[name](args.full, args.seed)
         except Exception as e:  # finish the harness, but don't hide the loss
             print(f"# {name} FAILED: {type(e).__name__}: {e}")
             all_lines.append(f"{name},0,FAILED")

@@ -5,6 +5,7 @@
 # (bare counts lists still accepted via a deprecation shim) and decisions
 # are `(type, width)` `Decision` records — moldable tasks carry speedup
 # curves (`TaskGraph.speedup`) solved by the width-indexed MHLP relaxation.
+from .allocation import AllocationProblem, frac_objective
 from .bruteforce import brute_force_opt, brute_force_schedule
 from .dag import (CPU, GPU, TaskGraph, amdahl_speedup, powerlaw_speedup,
                   validate_speedup)
@@ -17,6 +18,7 @@ from .online import (decide_eft, decide_erls, er_ls, eft_online,
 from .theory import makespan_lower_bound
 
 __all__ = [
+    "AllocationProblem", "frac_objective",
     "CPU", "GPU", "TaskGraph", "amdahl_speedup", "powerlaw_speedup",
     "validate_speedup", "HLPSolution", "lp_lower_bound", "solve_hlp",
     "solve_qhlp", "solve_mhlp", "mhlp_choices", "canonical_round_moldable",

@@ -37,6 +37,18 @@ enters pool q's load bound.  ``solve_mhlp`` rounds to the per-task argmax
 tie-break to the width axis.  With a one-column curve table MHLP is exactly
 QHLP (and, at Q=2, its optimum equals HLP's).
 
+Since the comm-aware-allocation refactor every solver below is a thin
+driver: the problem itself — choice grid, per-choice times, area terms and
+(optionally) per-edge transfer costs — is one shared
+``repro.core.allocation.AllocationProblem`` IR, and the constraint matrices
+come from its two lowerings (``hybrid_lp`` for the paper's scalar-x hybrid
+LP, ``grid_lp`` for QHLP/MHLP).  Passing ``comm_aware=True`` prices each
+edge's transfer cost into the allocation phase (crossing linearized with
+coupling variables; see ``allocation.py``): the LP then *sees the network*
+instead of leaving it to the scheduling phase.  With zero edge costs the
+comm-aware problem is byte-identical to the oblivious one — the paper's
+model, golden-tested bit-for-bit.
+
 Solved exactly with scipy's HiGHS (the paper used GLPK).  A JAX-native
 first-order solver lives in ``repro.core.hlp_jax`` and is validated against
 this exact solver in the tests.
@@ -46,11 +58,14 @@ from __future__ import annotations
 import dataclasses
 
 import numpy as np
-import scipy.sparse as sp
 from scipy.optimize import linprog
 
 from repro.platform import Decision, as_platform
 
+# mhlp_choices / _choice_times moved to the IR module; re-imported here so
+# historical ``from repro.core.hlp import ...`` call sites keep working.
+from .allocation import (AllocationProblem, _choice_times, frac_objective,
+                         grid_lp, hybrid_lp, mhlp_choices)
 from .dag import CPU, GPU, TaskGraph
 
 
@@ -71,9 +86,20 @@ class HLPSolution:
         return decisions_of(self.alloc, self.width)
 
 
+def _linprog(lp):
+    """Run one assembled LP through HiGHS, returning the ``OptimizeResult``
+    (callers read ``res.x`` / ``res.fun``)."""
+    res = linprog(lp.c, A_ub=lp.A_ub, b_ub=lp.b_ub, A_eq=lp.A_eq,
+                  b_eq=lp.b_eq, bounds=lp.bounds, method="highs")
+    if not res.success:
+        raise RuntimeError(f"allocation LP failed: {res.message}")
+    return res
+
+
 # --------------------------------------------------------------------- hybrid
 def canonical_round(g: TaskGraph, m: int, k: int, x: np.ndarray, *,
-                    slack: float = 0.02) -> np.ndarray:
+                    slack: float = 0.02,
+                    prob: AllocationProblem | None = None) -> np.ndarray:
     """Deterministic degeneracy-free rounding of a (near-)optimal hybrid x.
 
     The input ``x`` enters only through its λ: the λ budget is
@@ -85,130 +111,80 @@ def canonical_round(g: TaskGraph, m: int, k: int, x: np.ndarray, *,
     solutions of the same instance therefore yield identical allocations
     unless some decision's λ lands inside their (sub-percent) λ gap.
 
+    With a comm-aware ``prob``, both the budget and every context λ price
+    the edge transfer costs, so the tie-break accounts for the *marginal
+    transfer cost* of flipping a task's type — a task whose flip would put
+    a heavy edge across the type boundary keeps its side even when the
+    compute-only λ would let it move.
+
     Cost: up to two full λ evaluations per task, O(n·(n+e)) total — fine
     for the parity-test sizes this opt-in mode exists for; keep the default
     threshold rounding on large instances.
     """
+    if prob is not None and prob.comm_aware:
+        budget = frac_objective(prob, np.stack([x, 1.0 - x], axis=1)) \
+            * (1.0 + slack)
+
+        def lam(y: np.ndarray) -> float:
+            # integral context: the engine-identical comm-charged bound
+            return g.graham_lower_bound(
+                [m, k], np.where(y >= 0.5, CPU, GPU).astype(np.int32))
+    else:
+        budget = g.lp_objective([m, k], x) * (1.0 + slack)
+        lam = lambda y: g.lp_objective([m, k], y)
+
     pc, pg = g.proc[:, CPU], g.proc[:, GPU]
-    budget = g.lp_objective([m, k], x) * (1.0 + slack)
     fast = (pc <= pg).astype(np.float64)        # 1 = CPU is the faster side
     y = fast.copy()                             # context: undecided -> faster
     for j in range(g.n):
-        lam_fast = g.lp_objective([m, k], y)    # y[j] already sits at fast[j]
+        lam_fast = lam(y)                       # y[j] already sits at fast[j]
         if lam_fast > budget:
             # over budget on the faster side: keep whichever side hurts the
             # context λ less (the budget stays the shared reference point)
             y[j] = 1.0 - fast[j]
-            if g.lp_objective([m, k], y) > max(budget, lam_fast):
+            if lam(y) > max(budget, lam_fast):
                 y[j] = fast[j]
     return np.where(y >= 0.5, CPU, GPU).astype(np.int32)
 
 
-def solve_hlp(g: TaskGraph, m: int, k: int, *,
-              canonical: bool = False) -> HLPSolution:
-    """Exact LP relaxation of HLP for the hybrid (m CPUs, k GPUs) platform."""
+def solve_hlp(g: TaskGraph, m: int, k: int, *, canonical: bool = False,
+              comm_aware: bool = False) -> HLPSolution:
+    """Exact LP relaxation of HLP for the hybrid (m CPUs, k GPUs) platform.
+
+    ``comm_aware=True`` prices each edge's transfer cost into the LP (one
+    crossing variable per edge, charged on the edge's precedence row); on a
+    zero-``comm`` graph the assembled LP — and hence the solution — is
+    byte-identical to the oblivious one.
+    """
     if g.num_types != 2:
         raise ValueError("solve_hlp is for Q=2; use solve_qhlp")
     n = g.n
-    pc, pg = g.proc[:, CPU], g.proc[:, GPU]
-    dp = pc - pg  # coefficient of x_j in the allocated length
-
-    # Variable layout: [x_0..x_{n-1}, C_0..C_{n-1}, λ]
-    nv = 2 * n + 1
-    rows, cols, vals, rhs = [], [], [], []
-    r = 0
-
-    def add(row_entries, b):
-        nonlocal r
-        for c, v in row_entries:
-            rows.append(r); cols.append(c); vals.append(v)
-        rhs.append(b); r += 1
-
-    # (1) edge constraints: C_i - C_j + dp_j x_j <= -p_j
-    for i, j in g.edges:
-        add([(n + i, 1.0), (n + j, -1.0), (j, dp[j])], -pg[j])
-    # (2) source constraints: dp_j x_j - C_j <= -p_j
-    indeg = np.diff(g.pred_ptr)
-    for j in np.flatnonzero(indeg == 0):
-        add([(int(j), dp[j]), (n + int(j), -1.0)], -pg[j])
-    # (3) C_j - λ <= 0
-    for j in range(n):
-        add([(n + j, 1.0), (2 * n, -1.0)], 0.0)
-    # (4) (1/m) Σ pc_j x_j - λ <= 0
-    add([(j, pc[j] / m) for j in range(n)] + [(2 * n, -1.0)], 0.0)
-    # (5) (1/k) Σ pg_j (1 - x_j) <= λ  ->  -(1/k) Σ pg_j x_j - λ <= -(1/k) Σ pg_j
-    add([(j, -pg[j] / k) for j in range(n)] + [(2 * n, -1.0)], -float(pg.sum()) / k)
-
-    A = sp.csr_matrix((vals, (rows, cols)), shape=(r, nv))
-    c = np.zeros(nv); c[2 * n] = 1.0
-    bounds = [(0.0, 1.0)] * n + [(0.0, None)] * (n + 1)
-    res = linprog(c, A_ub=A, b_ub=np.asarray(rhs), bounds=bounds, method="highs")
-    if not res.success:
-        raise RuntimeError(f"HLP LP failed: {res.message}")
+    prob = AllocationProblem.build(g, (m, k), comm_aware=comm_aware,
+                                   rigid=True)
+    res = _linprog(hybrid_lp(prob))
     x = np.clip(res.x[:n], 0.0, 1.0)
-    alloc = (canonical_round(g, m, k, x) if canonical
+    alloc = (canonical_round(g, m, k, x, prob=prob) if canonical
              else np.where(x >= 0.5, CPU, GPU).astype(np.int32))
     return HLPSolution(x_frac=x, lp_value=float(res.fun), alloc=alloc)
 
 
 # ------------------------------------------------------------------- Q types
-def solve_qhlp(g: TaskGraph, counts) -> HLPSolution:
-    """Exact LP relaxation of QHLP for Q >= 2 resource types (paper §5)."""
+def solve_qhlp(g: TaskGraph, counts, *,
+               comm_aware: bool = False) -> HLPSolution:
+    """Exact LP relaxation of QHLP for Q >= 2 resource types (paper §5).
+
+    ``comm_aware=True`` prices edge transfer costs with per-edge type
+    couplings (see ``repro.core.allocation``); zero comm assembles the
+    byte-identical historical LP.
+    """
     counts = as_platform(counts, warn=False).to_counts()
     n, q = g.n, g.num_types
     if len(counts) != q:
         raise ValueError(f"need {q} machine counts, got {len(counts)}")
     p = g.proc  # (n, Q)
-
-    # Variable layout: [x_{0,0}..x_{0,Q-1}, ..., x_{n-1,Q-1}, C_0..C_{n-1}, λ]
-    def xv(j: int, t: int) -> int:
-        return j * q + t
-
-    cv = lambda j: n * q + j
-    lv = n * q + n
-    nv = lv + 1
-
-    rows, cols, vals, rhs = [], [], [], []
-    r = 0
-
-    def add(row_entries, b):
-        nonlocal r
-        for c_, v_ in row_entries:
-            rows.append(r); cols.append(c_); vals.append(v_)
-        rhs.append(b); r += 1
-
-    # (9) C_i + Σ_q p_jq x_jq <= C_j
-    for i, j in g.edges:
-        add([(cv(int(i)), 1.0), (cv(int(j)), -1.0)]
-            + [(xv(int(j), t), p[j, t]) for t in range(q)], 0.0)
-    # (10) Σ_q p_jq x_jq <= C_j for sources
-    indeg = np.diff(g.pred_ptr)
-    for j in np.flatnonzero(indeg == 0):
-        add([(xv(int(j), t), p[j, t]) for t in range(q)] + [(cv(int(j)), -1.0)], 0.0)
-    # (11) C_j <= λ
-    for j in range(n):
-        add([(cv(j), 1.0), (lv, -1.0)], 0.0)
-    # (12) per-type load
-    for t in range(q):
-        add([(xv(j, t), p[j, t] / counts[t]) for j in range(n)] + [(lv, -1.0)], 0.0)
-
-    A_ub = sp.csr_matrix((vals, (rows, cols)), shape=(r, nv))
-    b_ub = np.asarray(rhs)
-
-    # (13) Σ_q x_{j,q} = 1 (equalities)
-    er, ec, ev = [], [], []
-    for j in range(n):
-        for t in range(q):
-            er.append(j); ec.append(xv(j, t)); ev.append(1.0)
-    A_eq = sp.csr_matrix((ev, (er, ec)), shape=(n, nv))
-    b_eq = np.ones(n)
-
-    c = np.zeros(nv); c[lv] = 1.0
-    bounds = [(0.0, 1.0)] * (n * q) + [(0.0, None)] * (n + 1)
-    res = linprog(c, A_ub=A_ub, b_ub=b_ub, A_eq=A_eq, b_eq=b_eq,
-                  bounds=bounds, method="highs")
-    if not res.success:
-        raise RuntimeError(f"QHLP LP failed: {res.message}")
+    prob = AllocationProblem.build(g, counts, comm_aware=comm_aware,
+                                   rigid=True)
+    res = _linprog(grid_lp(prob))
     x = res.x[: n * q].reshape(n, q)
 
     # Rounding: argmax_q x_{j,q}; ties -> smallest processing time.
@@ -220,58 +196,42 @@ def solve_qhlp(g: TaskGraph, counts) -> HLPSolution:
     return HLPSolution(x_frac=x, lp_value=float(res.fun), alloc=alloc)
 
 
-def lp_lower_bound(g: TaskGraph, counts) -> float:
+def lp_lower_bound(g: TaskGraph, counts, *,
+                   comm_aware: bool | None = None) -> float:
     """LP* — the paper's denominator for experimental ratios.
 
     Moldable graphs route through the width-indexed MHLP relaxation (its
     feasible set contains every (type, width) schedule, so its λ* is the
-    right denominator there)."""
+    right denominator there).  By default the LP prices the graph's edge
+    transfer costs whenever it carries any (``comm_aware=None`` — every
+    schedule the engine measures pays them, so the comm-aware λ* is both
+    valid and tighter on network-bound instances); pass ``False`` for the
+    paper's transfer-free denominator."""
     platform = as_platform(counts, warn=False)
+    ca = bool(g.has_comm) if comm_aware is None else comm_aware
     if g.max_width > 1:
-        return solve_mhlp(g, platform).lp_value
+        return solve_mhlp(g, platform, comm_aware=ca).lp_value
     if g.num_types == 2:
-        return solve_hlp(g, platform.counts[0], platform.counts[1]).lp_value
-    return solve_qhlp(g, platform.to_counts()).lp_value
+        return solve_hlp(g, platform.counts[0], platform.counts[1],
+                         comm_aware=ca).lp_value
+    return solve_qhlp(g, platform.to_counts(), comm_aware=ca).lp_value
 
 
 # ----------------------------------------------------------- moldable (MHLP)
-def mhlp_choices(g: TaskGraph, counts) -> list[tuple[int, int]]:
-    """The (type, width) decision grid of the width-indexed LP: every pool
-    crossed with widths 1..min(max curve width, pool size)."""
-    return [(q, w) for q in range(g.num_types)
-            for w in range(1, min(g.max_width, int(counts[q])) + 1)]
-
-
-def _choice_times(g: TaskGraph, choices: list[tuple[int, int]]) -> np.ndarray:
-    """(n, C) processing time of each task under each (type, width) choice."""
-    cols = [g.proc[:, q] if w == 1 or g.speedup is None
-            else g.proc[:, q] / g.speedup[:, w - 1]
-            for q, w in choices]
-    return np.stack(cols, axis=1)
-
-
 def _mhlp_objective_frac(g: TaskGraph, counts, x: np.ndarray,
-                         choices: list[tuple[int, int]],
-                         p_choice: np.ndarray) -> float:
-    """Exact λ(x) of a fractional (n, C) choice distribution: critical path
-    under the mixed lengths plus per-pool area loads.
-
-    Infeasible (non-finite) choices contribute only where they carry mass:
-    ``inf·0`` would otherwise poison the whole objective with NaN even
-    though the LP correctly pinned those variables to zero."""
-    contrib = np.where(x > 0, p_choice * x, 0.0)   # (n, C), inf·0 -> 0
-    times = contrib.sum(axis=1)
-    lam = g.critical_path(times)
-    for q in range(g.num_types):
-        sel = [c for c, (qq, _) in enumerate(choices) if qq == q]
-        area = sum(float(choices[c][1]) * float(contrib[:, c].sum())
-                   for c in sel)
-        lam = max(lam, area / counts[q])
-    return lam
+                         choices, p_choice: np.ndarray) -> float:
+    """Back-compat shim: the comm-oblivious fractional λ — now one call to
+    the IR's :func:`repro.core.allocation.frac_objective`."""
+    prob = AllocationProblem(g=g, counts=tuple(int(c) for c in counts),
+                             choices=tuple(choices), p_choice=p_choice,
+                             finite=np.isfinite(p_choice),
+                             comm=np.zeros(g.num_edges))
+    return frac_objective(prob, x)
 
 
 def canonical_round_moldable(g: TaskGraph, machine, x: np.ndarray, *,
-                             slack: float = 0.02
+                             slack: float = 0.02,
+                             prob: AllocationProblem | None = None
                              ) -> tuple[np.ndarray, np.ndarray]:
     """``canonical_round`` extended to the width axis.
 
@@ -282,15 +242,17 @@ def canonical_round_moldable(g: TaskGraph, machine, x: np.ndarray, *,
     (candidates tried in ascending processing time, ties toward narrower
     widths) and otherwise the choice minimizing the context λ.  Two
     near-optimal fractional MHLP solutions therefore round identically
-    unless a decision's λ lands inside their λ gap.  O(n·C·(n+e)) — a
+    unless a decision's λ lands inside their λ gap.  With a comm-aware
+    ``prob`` the budget prices the edge transfer costs (the integral
+    context λ, ``graham_lower_bound``, always has).  O(n·C·(n+e)) — a
     parity/comparability tool, not the default rounding.
     """
     platform = as_platform(machine, warn=False)
     counts = platform.to_counts()
-    choices = mhlp_choices(g, counts)
-    p_choice = _choice_times(g, choices)
-    budget = _mhlp_objective_frac(g, counts, x, choices, p_choice) \
-        * (1.0 + slack)
+    if prob is None:
+        prob = AllocationProblem.build(g, platform)
+    choices, p_choice = prob.choices, prob.p_choice
+    budget = frac_objective(prob, x) * (1.0 + slack)
     # candidate order per task: ascending time, ties toward narrow widths
     order = [sorted(range(len(choices)),
                     key=lambda c: (p_choice[j, c], choices[c][1]))
@@ -318,79 +280,34 @@ def canonical_round_moldable(g: TaskGraph, machine, x: np.ndarray, *,
     return alloc, width
 
 
-def solve_mhlp(g: TaskGraph, machine, *, canonical: bool = False) -> HLPSolution:
+def solve_mhlp(g: TaskGraph, machine, *, canonical: bool = False,
+               comm_aware: bool = False) -> HLPSolution:
     """Exact LP relaxation of moldable HLP over (type, width) choices.
 
     Variables x_{j,q,w} ∈ [0,1] with Σ_{q,w} x_{j,q,w} = 1 per task;
     fractional length ℓ_j = Σ p_{j,q,w} x_{j,q,w}; constraints are QHLP's
     (9)–(13) with the load bound charging the *area* w·p_{j,q,w} a width-w
     slot really occupies.  With a width-1 curve table this is exactly QHLP.
-    Rounding: per-task argmax over choices, ties toward the smallest
-    processing time then the narrower width — or the deterministic
-    ``canonical_round_moldable`` tie-break with ``canonical=True``.
+    ``comm_aware=True`` additionally prices each edge's transfer cost on
+    its precedence row (type couplings; the width-indexed choice grid is
+    where the edge terms hang).  Rounding: per-task argmax over choices,
+    ties toward the smallest processing time then the narrower width — or
+    the deterministic ``canonical_round_moldable`` tie-break with
+    ``canonical=True``.
     """
     platform = as_platform(machine)
-    counts = platform.to_counts()
     n = g.n
-    if len(counts) != g.num_types:
-        raise ValueError(f"need {g.num_types} pool counts, got {len(counts)}")
-    choices = mhlp_choices(g, counts)
-    C = len(choices)
-    p_choice = _choice_times(g, choices)
-
-    def xv(j: int, c: int) -> int:
-        return j * C + c
-
-    cv = lambda j: n * C + j
-    lv = n * C + n
-    nv = lv + 1
-
-    rows, cols, vals, rhs = [], [], [], []
-    r = 0
-
-    def add(row_entries, b):
-        nonlocal r
-        for c_, v_ in row_entries:
-            rows.append(r); cols.append(c_); vals.append(v_)
-        rhs.append(b); r += 1
-
-    finite = np.isfinite(p_choice)
-    for i, j in g.edges:
-        add([(cv(int(i)), 1.0), (cv(int(j)), -1.0)]
-            + [(xv(int(j), c), p_choice[j, c]) for c in range(C)
-               if finite[j, c]], 0.0)
-    indeg = np.diff(g.pred_ptr)
-    for j in np.flatnonzero(indeg == 0):
-        add([(xv(int(j), c), p_choice[j, c]) for c in range(C)
-             if finite[j, c]] + [(cv(int(j)), -1.0)], 0.0)
-    for j in range(n):
-        add([(cv(j), 1.0), (lv, -1.0)], 0.0)
-    for q in range(g.num_types):
-        add([(xv(j, c), choices[c][1] * p_choice[j, c] / counts[q])
-             for j in range(n) for c in range(C)
-             if choices[c][0] == q and finite[j, c]] + [(lv, -1.0)], 0.0)
-
-    A_ub = sp.csr_matrix((vals, (rows, cols)), shape=(r, nv))
-    b_ub = np.asarray(rhs)
-
-    er, ec, ev = [], [], []
-    for j in range(n):
-        for c in range(C):
-            er.append(j); ec.append(xv(j, c)); ev.append(1.0)
-    A_eq = sp.csr_matrix((ev, (er, ec)), shape=(n, nv))
-    b_eq = np.ones(n)
-
-    obj = np.zeros(nv); obj[lv] = 1.0
-    bounds = [(0.0, 0.0) if not finite[j, c] else (0.0, 1.0)
-              for j in range(n) for c in range(C)] + [(0.0, None)] * (n + 1)
-    res = linprog(obj, A_ub=A_ub, b_ub=b_ub, A_eq=A_eq, b_eq=b_eq,
-                  bounds=bounds, method="highs")
-    if not res.success:
-        raise RuntimeError(f"MHLP LP failed: {res.message}")
+    if len(platform.counts) != g.num_types:
+        raise ValueError(
+            f"need {g.num_types} pool counts, got {len(platform.counts)}")
+    prob = AllocationProblem.build(g, platform, comm_aware=comm_aware)
+    choices, p_choice = prob.choices, prob.p_choice
+    C = prob.C
+    res = _linprog(grid_lp(prob))
     x = np.clip(res.x[: n * C].reshape(n, C), 0.0, 1.0)
 
     if canonical:
-        alloc, width = canonical_round_moldable(g, platform, x)
+        alloc, width = canonical_round_moldable(g, platform, x, prob=prob)
     else:
         alloc = np.empty(n, dtype=np.int32)
         width = np.empty(n, dtype=np.int32)

@@ -13,6 +13,18 @@ path, expressed as a ``lax.scan`` over the topological order — runs jitted,
 so the allocation phase scales to graphs far beyond what the paper solved
 with GLPK (and runs on accelerators).
 
+Problem data comes from the shared ``repro.core.allocation.AllocationProblem``
+IR — the same (type, width) choice grid, per-choice times, area terms and
+per-edge comm terms the exact HiGHS backend assembles its LPs from.  One
+jitted kernel (``_solve_choice``) serves every choice-grid problem — QHLP,
+moldable MHLP, and their comm-aware variants: a per-task softmax over the
+grid, with the *expected* transfer cost of each edge under the softmax
+distribution (a smooth upper bound on the exact LP's total-variation
+crossing term) folded into the soft longest path as comm-augmented edge
+delays.  The historical hybrid sigmoid kernel (``_solve``) is kept verbatim
+as the comm-free Q=2 fast path — its iterates are pinned bit-for-bit by the
+golden suite.
+
 This is a *beyond-paper* substitute for the exact solver in
 ``repro.core.hlp`` (scipy/HiGHS); the tests validate it against the exact LP
 on random instances.  Any iterate x yields λ(x) >= LP*, so ratios reported
@@ -27,8 +39,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .allocation import AllocationProblem, frac_objective
 from .dag import CPU, GPU, TaskGraph
-from .hlp import HLPSolution
+from .hlp import HLPSolution, canonical_round, canonical_round_moldable
 
 _NEG = -1e30
 
@@ -42,29 +55,40 @@ class PaddedDag:
     pred_mask: jnp.ndarray  # (n, P) bool
     pc: jnp.ndarray         # (n,) CPU times
     pg: jnp.ndarray         # (n,) GPU times
+    pred_comm: jnp.ndarray  # (n, P) transfer cost of each pred edge (0 padded)
 
     @staticmethod
     def from_graph(g: TaskGraph) -> "PaddedDag":
         P = max(1, int(np.diff(g.pred_ptr).max()) if g.n else 1)
         pred = np.full((g.n, P), -1, dtype=np.int32)
+        pcomm = np.zeros((g.n, P), dtype=np.float64)
         for j in range(g.n):
             pj = g.preds(j)
             pred[j, : pj.size] = pj
+            pcomm[j, : pj.size] = g.comm[g.pred_edges(j)]
         return PaddedDag(
             topo=jnp.asarray(g.topo), pred=jnp.asarray(pred),
             pred_mask=jnp.asarray(pred >= 0),
-            pc=jnp.asarray(g.proc[:, CPU]), pg=jnp.asarray(g.proc[:, GPU]))
+            pc=jnp.asarray(g.proc[:, CPU]), pg=jnp.asarray(g.proc[:, GPU]),
+            pred_comm=jnp.asarray(pcomm))
 
 
-def soft_longest_path(d: PaddedDag, times: jnp.ndarray, tau: jnp.ndarray) -> jnp.ndarray:
+def soft_longest_path(d: PaddedDag, times: jnp.ndarray, tau: jnp.ndarray,
+                      edge_delay: jnp.ndarray | None = None) -> jnp.ndarray:
     """Temperature-τ softmax-relaxed longest path; τ→0 recovers the exact CP.
 
     Runs as a scan over the topological order: each step finishes one task
     from the (already final) finish times of its predecessors.
+    ``edge_delay`` optionally adds an (n, P) per-pred-slot delay (the
+    comm-augmented edge delays of the comm-aware solvers); ``None`` traces
+    the historical delay-free graph.
     """
 
     def step(finish, j):
-        pf = jnp.where(d.pred_mask[j], finish[d.pred[j]], _NEG)
+        pf = finish[d.pred[j]]
+        if edge_delay is not None:
+            pf = pf + edge_delay[j]
+        pf = jnp.where(d.pred_mask[j], pf, _NEG)
         # soft-max over predecessors (upper-bounds the hard max by τ·log P).
         m = jnp.max(pf)
         has_pred = jnp.any(d.pred_mask[j])
@@ -79,9 +103,13 @@ def soft_longest_path(d: PaddedDag, times: jnp.ndarray, tau: jnp.ndarray) -> jnp
     return m + tau * jnp.log(jnp.sum(jnp.exp((finish - m) / tau)) + 1e-30)
 
 
-def hard_longest_path(d: PaddedDag, times: jnp.ndarray) -> jnp.ndarray:
+def hard_longest_path(d: PaddedDag, times: jnp.ndarray,
+                      edge_delay: jnp.ndarray | None = None) -> jnp.ndarray:
     def step(finish, j):
-        pf = jnp.where(d.pred_mask[j], finish[d.pred[j]], 0.0)
+        pf = finish[d.pred[j]]
+        if edge_delay is not None:
+            pf = pf + edge_delay[j]
+        pf = jnp.where(d.pred_mask[j], pf, 0.0)
         finish = finish.at[j].set(jnp.max(pf, initial=0.0) + times[j])
         return finish, ()
 
@@ -139,18 +167,24 @@ def _solve(d: PaddedDag, m: int, k: int, iters: int, seed: int):
     return best_x, best_val
 
 
-# ------------------------------------------------------------ moldable MHLP
-@partial(jax.jit, static_argnames=("iters",))
-def _solve_moldable(d: PaddedDag, p_choice: jnp.ndarray, area: jnp.ndarray,
-                    type_mask: jnp.ndarray, inv_counts: jnp.ndarray,
-                    iters: int, seed: int):
-    """First-order MHLP: softmax over (type, width) choices per task.
+# ----------------------------------------------------- choice-grid problems
+@partial(jax.jit, static_argnames=("iters", "use_comm"))
+def _solve_choice(d: PaddedDag, p_choice: jnp.ndarray, area: jnp.ndarray,
+                  type_mask: jnp.ndarray, inv_counts: jnp.ndarray,
+                  iters: int, seed: int, use_comm: bool = False):
+    """First-order solver for any choice-grid ``AllocationProblem``: a
+    per-task softmax over the (type, width) choices.
 
     ``p_choice`` (n, C) holds the choice processing times, ``area`` (n, C)
     the width-weighted areas, ``type_mask`` (Q, C) the pool membership of
     each choice and ``inv_counts`` (Q,) the reciprocal pool sizes.  Same
     Adam-on-logits / annealed-soft-longest-path scheme as the hybrid
-    solver, with the softmax replacing the sigmoid.
+    solver, with the softmax replacing the sigmoid.  With ``use_comm`` each
+    pred edge is delayed by its cost times the *expected* crossing
+    probability under the softmax distribution (smooth in z; an upper
+    bound on the exact LP's total-variation crossing term), so the
+    gradient sees the network; without it the traced graph is exactly the
+    historical comm-free one.
     """
     n, C = p_choice.shape
 
@@ -162,15 +196,25 @@ def _solve_moldable(d: PaddedDag, p_choice: jnp.ndarray, area: jnp.ndarray,
         per_choice = (area * x).sum(axis=0)       # (C,)
         return (type_mask @ per_choice) * inv_counts
 
+    def delays(x):
+        # (n, P) expected transfer delay of each pred edge: cost times the
+        # chance two independent draws from the endpoints' type marginals
+        # differ (masked slots gather garbage but carry zero cost).
+        if not use_comm:
+            return None
+        X = x @ type_mask.T                       # (n, Q) type marginals
+        cross = 1.0 - jnp.einsum("npq,nq->np", X[d.pred], X)
+        return d.pred_comm * cross
+
     def lam_exact(x):
         times = (p_choice * x).sum(axis=1)
-        cp = hard_longest_path(d, times)
+        cp = hard_longest_path(d, times, delays(x))
         return jnp.maximum(cp, jnp.max(loads(x)))
 
     def loss(z, tau):
         x = mix(z)
         times = (p_choice * x).sum(axis=1)
-        cp = soft_longest_path(d, times, tau)
+        cp = soft_longest_path(d, times, tau, delays(x))
         terms = jnp.concatenate([jnp.stack([cp]), loads(x)])
         mx = jnp.max(terms)
         return mx + tau * jnp.log(jnp.sum(jnp.exp((terms - mx) / tau)))
@@ -206,45 +250,49 @@ def _solve_moldable(d: PaddedDag, p_choice: jnp.ndarray, area: jnp.ndarray,
     return best_x, best_val
 
 
+def _solve_problem(prob: AllocationProblem, iters: int,
+                   seed: int) -> np.ndarray:
+    """Run the jitted choice-grid kernel on an ``AllocationProblem`` and
+    return the renormalized (n, C) fractional distribution."""
+    p_dev = np.where(prob.finite, prob.p_choice, 1e12)  # price out, keep
+    #                                                     grads finite
+    area = p_dev * prob.width_of.astype(np.float64)
+    d = PaddedDag.from_graph(prob.g)
+    x, _ = _solve_choice(d, jnp.asarray(p_dev), jnp.asarray(area),
+                         jnp.asarray(prob.type_mask),
+                         jnp.asarray(1.0 / np.asarray(prob.counts,
+                                                      dtype=np.float64)),
+                         int(iters), int(seed), use_comm=prob.comm_aware)
+    x = np.asarray(x, dtype=np.float64)
+    x = np.where(prob.finite, x, 0.0)
+    x /= x.sum(axis=1, keepdims=True)
+    return x
+
+
 def solve_mhlp_jax(g: TaskGraph, machine, iters: int = 400, seed: int = 0, *,
-                   canonical: bool = False) -> HLPSolution:
+                   canonical: bool = False,
+                   comm_aware: bool = False) -> HLPSolution:
     """First-order width-indexed MHLP — ``hlp.solve_mhlp``'s jitted sibling.
 
-    Optimizes a per-task softmax over the (type, width) choice grid with the
-    annealed soft longest path.  As with the hybrid solver, the returned
-    ``lp_value`` is the *exact* λ of the best iterate — a feasible
-    relaxation objective, hence ≥ the HiGHS optimum (validated in the
-    tests), so ratios reported against it stay conservative.
+    Optimizes a per-task softmax over the (type, width) choice grid of the
+    shared ``AllocationProblem`` with the annealed soft longest path;
+    ``comm_aware=True`` folds each edge's expected transfer cost into the
+    path (the gradient then *sees the network*).  As with the hybrid
+    solver, the returned ``lp_value`` is the *exact* λ of the best iterate
+    — a feasible relaxation objective, hence ≥ the HiGHS optimum (validated
+    in the tests), so ratios reported against it stay conservative.
     ``canonical=True`` shares ``canonical_round_moldable`` with the exact
     solver for task-wise comparable decisions.
     """
     from repro.platform import as_platform
 
-    from .hlp import (_choice_times, _mhlp_objective_frac,
-                      canonical_round_moldable, mhlp_choices)
-
     platform = as_platform(machine)
-    counts = platform.to_counts()
-    choices = mhlp_choices(g, counts)
-    p_choice = _choice_times(g, choices)
-    finite = np.isfinite(p_choice)
-    p_dev = np.where(finite, p_choice, 1e12)  # price out, keep grads finite
-    area = p_dev * np.asarray([w for _, w in choices], dtype=np.float64)
-    type_mask = np.zeros((g.num_types, len(choices)))
-    for c, (q, _) in enumerate(choices):
-        type_mask[q, c] = 1.0
-    inv_counts = 1.0 / np.asarray(counts, dtype=np.float64)
-
-    d = PaddedDag.from_graph(g)
-    x, _ = _solve_moldable(d, jnp.asarray(p_dev), jnp.asarray(area),
-                           jnp.asarray(type_mask), jnp.asarray(inv_counts),
-                           int(iters), int(seed))
-    x = np.asarray(x, dtype=np.float64)
-    x = np.where(finite, x, 0.0)
-    x /= x.sum(axis=1, keepdims=True)
-    val = _mhlp_objective_frac(g, counts, x, choices, p_choice)
+    prob = AllocationProblem.build(g, platform, comm_aware=comm_aware)
+    choices, p_choice = prob.choices, prob.p_choice
+    x = _solve_problem(prob, iters, seed)
+    val = frac_objective(prob, x)
     if canonical:
-        alloc, width = canonical_round_moldable(g, platform, x)
+        alloc, width = canonical_round_moldable(g, platform, x, prob=prob)
     else:
         alloc = np.empty(g.n, dtype=np.int32)
         width = np.empty(g.n, dtype=np.int32)
@@ -258,17 +306,30 @@ def solve_mhlp_jax(g: TaskGraph, machine, iters: int = 400, seed: int = 0, *,
 
 
 def solve_hlp_jax(g: TaskGraph, m: int, k: int, iters: int = 400,
-                  seed: int = 0, *, canonical: bool = False) -> HLPSolution:
+                  seed: int = 0, *, canonical: bool = False,
+                  comm_aware: bool = False) -> HLPSolution:
     """Drop-in replacement for ``hlp.solve_hlp`` (approximate but jitted/scalable).
 
     ``canonical=True`` routes the rounding through the deterministic
     degeneracy-free tie-break shared with the exact solver
     (``hlp.canonical_round``), making the two allocations comparable
-    task-wise even though the fractional optima differ."""
-    from .hlp import canonical_round
-
+    task-wise even though the fractional optima differ.  ``comm_aware=True``
+    solves the rigid Q=2 choice grid through the comm-augmented kernel
+    (edge costs enter the soft longest path); the comm-free path is the
+    historical sigmoid kernel, bit-for-bit.
+    """
     if g.num_types != 2:
         raise ValueError("hybrid solver: Q must be 2")
+    prob = AllocationProblem.build(g, (m, k), comm_aware=comm_aware,
+                                   rigid=True)
+    if prob.comm_aware:
+        x2 = _solve_problem(prob, iters, seed)
+        x = x2[:, CPU]
+        val = frac_objective(prob, x2)
+        alloc = (canonical_round(g, m, k, x, prob=prob) if canonical
+                 else np.where(x >= 0.5, CPU, GPU).astype(np.int32))
+        return HLPSolution(x_frac=x, lp_value=float(val), alloc=alloc,
+                           status="first-order")
     d = PaddedDag.from_graph(g)
     x, val = _solve(d, int(m), int(k), int(iters), int(seed))
     x = np.asarray(x, dtype=np.float64)

@@ -130,14 +130,32 @@ class Schedule:
 
 
 # -------------------------------------------------------------- offline: LS
+def comm_tiebreak_key(g: TaskGraph, alloc: np.ndarray) -> np.ndarray:
+    """(n,) secondary list-scheduling key for comm-aware pipelines: each
+    task's total inbound cross-type transfer volume under the allocation —
+    the marginal transfer cost its placement actually pays.  Among
+    equal-priority ready tasks the one whose inputs already sit on its side
+    (smaller key) starts first, so freshly-arrived local data is consumed
+    before data still in flight.  All-zero (hence order-neutral) on
+    transfer-free instances."""
+    key = np.zeros(g.n)
+    if g.num_edges:
+        np.add.at(key, g.edges[:, 1], g.edge_delays(alloc))
+    return key
+
+
 def list_schedule(g: TaskGraph, machine, alloc: np.ndarray,
                   priority: np.ndarray | None = None,
-                  width: np.ndarray | None = None) -> Schedule:
+                  width: np.ndarray | None = None,
+                  tie_break: np.ndarray | None = None) -> Schedule:
     """Typed List Scheduling with fixed (type, width) decisions.
 
     ``priority``: higher runs first among simultaneously-ready tasks
     (default: natural order == the paper's EST policy; pass the OLS rank for
-    HLP-OLS).  ``width``: optional per-task unit counts (moldable tasks); a
+    HLP-OLS).  ``tie_break``: optional secondary key among equal-priority
+    ready tasks (lower first; e.g. :func:`comm_tiebreak_key` — an all-zero
+    key reproduces the default task-id ordering exactly).  ``width``:
+    optional per-task unit counts (moldable tasks); a
     width-w task claims the w earliest-idle units of its pool atomically and
     a task that does not fit the currently idle units is skipped in favor of
     lower-priority ready tasks that do (no artificial idling — the Graham
@@ -152,11 +170,14 @@ def list_schedule(g: TaskGraph, machine, alloc: np.ndarray,
         if (width == 1).all() and g.speedup is None:
             width = None   # rigid instance: take the bit-parity path
     if width is not None:
-        return _list_schedule_moldable(g, counts, alloc, width, priority)
+        return _list_schedule_moldable(g, counts, alloc, width, priority,
+                                       tie_break)
 
     n = g.n
     alloc = np.asarray(alloc, dtype=np.int32)
     pr = np.zeros(n) if priority is None else np.asarray(priority, dtype=np.float64)
+    tb = np.zeros(n) if tie_break is None \
+        else np.asarray(tie_break, dtype=np.float64)
     times = g.alloc_times(alloc)
     delay = g.edge_delays(alloc)   # transfer delay per edge under this alloc
 
@@ -166,8 +187,8 @@ def list_schedule(g: TaskGraph, machine, alloc: np.ndarray,
     finish = np.full(n, -1.0)
     proc_of = np.full(n, -1, dtype=np.int32)
 
-    # Per-type: heap of (free_time, proc_id); ready PQ of (-priority, j);
-    # "becoming ready" heap of (ready_time, -priority, j).
+    # Per-type: heap of (free_time, proc_id); ready PQ of (-priority, tb, j);
+    # "becoming ready" heap of (ready_time, -priority, tb, j).
     free = [[(0.0, p) for p in range(counts[q])] for q in range(g.num_types)]
     for h in free:
         heapq.heapify(h)
@@ -175,7 +196,7 @@ def list_schedule(g: TaskGraph, machine, alloc: np.ndarray,
     becoming: list[list] = [[] for _ in range(g.num_types)]
 
     for j in np.flatnonzero(indeg == 0):
-        heapq.heappush(becoming[alloc[j]], (0.0, -pr[j], int(j)))
+        heapq.heappush(becoming[alloc[j]], (0.0, -pr[j], tb[j], int(j)))
 
     t = 0.0
     scheduled = 0
@@ -185,10 +206,10 @@ def list_schedule(g: TaskGraph, machine, alloc: np.ndarray,
             progressed = False
             for q in range(g.num_types):
                 while becoming[q] and becoming[q][0][0] <= t + 1e-15:
-                    rt, np_, j = heapq.heappop(becoming[q])
-                    heapq.heappush(ready[q], (np_, j))
+                    rt, np_, tb_, j = heapq.heappop(becoming[q])
+                    heapq.heappush(ready[q], (np_, tb_, j))
                 while ready[q] and free[q] and free[q][0][0] <= t + 1e-15:
-                    _, j = heapq.heappop(ready[q])
+                    _, _, j = heapq.heappop(ready[q])
                     f, pid = heapq.heappop(free[q])
                     start[j] = t
                     finish[j] = t + times[j]
@@ -202,7 +223,8 @@ def list_schedule(g: TaskGraph, machine, alloc: np.ndarray,
                         indeg[v] -= 1
                         if indeg[v] == 0:
                             heapq.heappush(becoming[alloc[v]],
-                                           (ready_time[v], -pr[v], int(v)))
+                                           (ready_time[v], -pr[v], tb[v],
+                                            int(v)))
         if scheduled == n:
             break
         # Advance to the next event.
@@ -220,13 +242,16 @@ def list_schedule(g: TaskGraph, machine, alloc: np.ndarray,
 
 def _list_schedule_moldable(g: TaskGraph, counts: list[int], alloc: np.ndarray,
                             width: np.ndarray,
-                            priority: np.ndarray | None) -> Schedule:
+                            priority: np.ndarray | None,
+                            tie_break: np.ndarray | None = None) -> Schedule:
     """Width-aware LS: same event structure as the width-1 loop, but a task
     claims ``width[j]`` units atomically (skipping it when too few are idle
     *now* lets narrower lower-priority tasks backfill)."""
     n = g.n
     alloc = np.asarray(alloc, dtype=np.int32)
     pr = np.zeros(n) if priority is None else np.asarray(priority, dtype=np.float64)
+    tb = np.zeros(n) if tie_break is None \
+        else np.asarray(tie_break, dtype=np.float64)
     times = g.moldable_times(alloc, width)
     delay = g.edge_delays(alloc)
 
@@ -244,7 +269,7 @@ def _list_schedule_moldable(g: TaskGraph, counts: list[int], alloc: np.ndarray,
     becoming: list[list] = [[] for _ in range(g.num_types)]
 
     for j in np.flatnonzero(indeg == 0):
-        heapq.heappush(becoming[alloc[j]], (0.0, -pr[j], int(j)))
+        heapq.heappush(becoming[alloc[j]], (0.0, -pr[j], tb[j], int(j)))
 
     t = 0.0
     scheduled = 0
@@ -254,11 +279,11 @@ def _list_schedule_moldable(g: TaskGraph, counts: list[int], alloc: np.ndarray,
             progressed = False
             for q in range(g.num_types):
                 while becoming[q] and becoming[q][0][0] <= t + 1e-15:
-                    rt, np_, j = heapq.heappop(becoming[q])
-                    heapq.heappush(ready[q], (np_, j))
-                skipped: list[tuple[float, int]] = []
+                    rt, np_, tb_, j = heapq.heappop(becoming[q])
+                    heapq.heappush(ready[q], (np_, tb_, j))
+                skipped: list[tuple[float, float, int]] = []
                 while ready[q] and free[q] and free[q][0][0] <= t + 1e-15:
-                    np_, j = heapq.heappop(ready[q])
+                    np_, tb_, j = heapq.heappop(ready[q])
                     w = int(width[j])
                     claimed = []
                     while (free[q] and free[q][0][0] <= t + 1e-15
@@ -267,7 +292,7 @@ def _list_schedule_moldable(g: TaskGraph, counts: list[int], alloc: np.ndarray,
                     if len(claimed) < w:      # too few idle units right now
                         for item in claimed:
                             heapq.heappush(free[q], item)
-                        skipped.append((np_, j))
+                        skipped.append((np_, tb_, j))
                         continue
                     start[j] = t
                     finish[j] = t + times[j]
@@ -283,7 +308,8 @@ def _list_schedule_moldable(g: TaskGraph, counts: list[int], alloc: np.ndarray,
                         indeg[v] -= 1
                         if indeg[v] == 0:
                             heapq.heappush(becoming[alloc[v]],
-                                           (ready_time[v], -pr[v], int(v)))
+                                           (ready_time[v], -pr[v], tb[v],
+                                            int(v)))
                 for item in skipped:
                     heapq.heappush(ready[q], item)
         if scheduled == n:
@@ -324,10 +350,18 @@ def hlp_est(g: TaskGraph, machine, alloc: np.ndarray,
 
 
 def hlp_ols(g: TaskGraph, machine, alloc: np.ndarray,
-            width: np.ndarray | None = None) -> Schedule:
-    """Scheduling phase of HLP-OLS: LS ordered by the post-allocation rank."""
+            width: np.ndarray | None = None, *,
+            comm_tiebreak: bool = False) -> Schedule:
+    """Scheduling phase of HLP-OLS: LS ordered by the post-allocation rank.
+
+    ``comm_tiebreak=True`` — the comm-aware allocation pipeline's hook —
+    breaks rank ties by each task's marginal inbound transfer cost
+    (:func:`comm_tiebreak_key`); on a transfer-free instance the key is
+    all-zero and the schedule is bit-identical to the default."""
+    tb = comm_tiebreak_key(g, alloc) if comm_tiebreak and g.has_comm else None
     return list_schedule(g, machine, alloc,
-                         priority=ols_rank(g, alloc, width), width=width)
+                         priority=ols_rank(g, alloc, width), width=width,
+                         tie_break=tb)
 
 
 # ------------------------------------------------------------ offline: HEFT

@@ -118,3 +118,28 @@ def makespan_lower_bound(g: TaskGraph, counts) -> float:
     area = float(tmin.sum()) / total if total else 0.0
     longest = float(tfast.max()) if tfast.size else 0.0
     return max(cp, area, longest)
+
+
+def ratio_denominator(g: TaskGraph, counts, *, lp_max_n: int = 256) -> float:
+    """The campaign's makespan-ratio denominator: the universal
+    :func:`makespan_lower_bound`, tightened by the allocation LP's λ* when
+    the instance is LP-sized.
+
+    ``lp_lower_bound`` prices the graph's edge transfer costs into the
+    allocation phase (``repro.core.allocation``), so on network-bound
+    instances this denominator *sees the network* — the universal bound
+    cannot charge transfers at all (a one-type schedule pays none), which
+    is exactly the gap between LP-based allocation bounds and realized
+    makespans the two-resource survey points at.  Both terms lower-bound
+    every comm-charged schedule, so the max is a valid, tighter
+    denominator; oversized or type-infeasible instances fall back to the
+    universal bound alone.
+    """
+    if hasattr(counts, "to_counts"):   # Platform (duck-typed: no sim import)
+        counts = counts.to_counts()
+    lb = makespan_lower_bound(g, counts)
+    if (0 < g.n <= lp_max_n and all(c > 0 for c in counts)
+            and np.isfinite(g.proc).all()):
+        from .hlp import lp_lower_bound
+        lb = max(lb, lp_lower_bound(g, counts))
+    return lb

@@ -121,21 +121,53 @@ class Platform:
         return PoolState(self)
 
 
+#: Call sites (file, line) that already emitted a deprecation warning.  A
+#: campaign loops one entry point over thousands of tasks; warning once per
+#: *call site* keeps the signal (every distinct legacy usage is reported)
+#: without the spam (one line per site per process, whatever the warning
+#: filters say — pytest's ``always`` filter included).
+_WARNED_CALLSITES: set[tuple[str, int]] = set()
+
+
+def _reset_deprecation_registry() -> None:
+    """Forget which call sites warned (test isolation helper)."""
+    _WARNED_CALLSITES.clear()
+
+
+def _warn_deprecated_once(message: str, stacklevel: int) -> None:
+    """``warnings.warn`` deduplicated per shim call site.
+
+    The registry key is the code line that invoked the deprecated shim —
+    for a public entry point that still accepts legacy arguments that is
+    the entry point itself, so a campaign looping it over thousands of
+    tasks emits exactly one warning per entry point per process."""
+    import sys
+    try:
+        fr = sys._getframe(2)     # caller of the shim (as_platform's caller)
+        site = (fr.f_code.co_filename, fr.f_lineno)
+    except ValueError:            # shallower stack than expected
+        site = ("<unknown>", 0)
+    if site in _WARNED_CALLSITES:
+        return
+    _WARNED_CALLSITES.add(site)
+    warnings.warn(message, DeprecationWarning, stacklevel=stacklevel + 1)
+
+
 def as_platform(obj, *, warn: bool = True) -> Platform:
     """Normalize a machine argument: ``Platform`` (or subclass) passes
     through; a bare counts sequence — the deprecated pre-v2 encoding — is
     adopted via :meth:`Platform.from_counts`, emitting a
-    ``DeprecationWarning`` unless ``warn=False`` (internal call sites that
-    already warned once).
+    ``DeprecationWarning`` once per call site unless ``warn=False``
+    (internal call sites that already warned once).
     """
     if isinstance(obj, Platform):
         return obj
     if isinstance(obj, (list, tuple, np.ndarray)):
         if warn:
-            warnings.warn(
+            _warn_deprecated_once(
                 "passing a bare counts list is deprecated; pass a "
                 "repro.platform.Platform (e.g. Platform.hybrid(m, k))",
-                DeprecationWarning, stacklevel=3)
+                stacklevel=3)
         return Platform.from_counts(int(c) for c in obj)
     raise TypeError(f"expected Platform or counts sequence, got {type(obj)!r}")
 

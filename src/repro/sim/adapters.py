@@ -11,6 +11,9 @@ Registry (``ADAPTERS`` / ``make_scheduler``):
   static:   ``hlp_est``, ``hlp_ols``, ``hlp_jax_ols``, ``heft``,
             ``heft_nocomm`` (plans ignoring edge costs — the engine still
             charges them at replay; baseline for communication awareness),
+            ``cahlp_ols``/``camhlp_ols`` (comm-aware allocation: the
+            HLP/MHLP LP prices edge transfer costs before scheduling;
+            bit-identical to ``hlp_ols`` at zero comm),
             ``mhlp_ols`` (width-indexed moldable HLP + width-aware OLS;
             on a curve-free graph it routes through the exact hlp_ols
             path), ``bruteforce`` (branch-and-bound oracle, n ≤ ~10)
@@ -93,6 +96,44 @@ class HLPJaxOLSScheduler(HLPOLSScheduler):
             raise ValueError("hlp_jax_ols requires Q=2")
         return solve_hlp_jax(g, machine.counts[0], machine.counts[1],
                              iters=self.iters, seed=self.seed).alloc
+
+
+class CommAwareHLPScheduler(StaticScheduler):
+    """Comm-aware two-phase pipeline (CAHLP-OLS): the allocation LP prices
+    per-edge transfer costs — crossing terms on the choice grid, see
+    ``repro.core.allocation`` — so the *allocation*, not just the
+    scheduling phase, sees the network; then OLS with the comm tie-break.
+
+    On a zero-``comm`` graph the priced LP is byte-identical to the
+    oblivious one, so this adapter reproduces ``hlp_ols`` schedule-hash-
+    for-schedule-hash (golden-tested)."""
+
+    name = "cahlp_ols"
+
+    def _allocate_lp(self, g: TaskGraph, machine: Machine) -> np.ndarray:
+        counts = machine.counts
+        if g.num_types == 2:
+            return solve_hlp(g, counts[0], counts[1], comm_aware=True).alloc
+        return solve_qhlp(g, machine, comm_aware=True).alloc
+
+    def _solve(self, g, machine):
+        return hlp_ols(g, machine, self._allocate_lp(g, machine),
+                       comm_tiebreak=True)
+
+
+class CommAwareMoldableScheduler(StaticScheduler):
+    """CAMHLP-OLS: the width-indexed MHLP with per-edge comm terms hung on
+    the (type, width) choice grid, then width-aware OLS with the comm
+    tie-break.  Width-1 graphs route through the exact CAHLP path (so at
+    ``ccr=0`` this is ``hlp_ols`` bit-for-bit, like ``mhlp_ols``)."""
+
+    name = "camhlp_ols"
+
+    def _solve(self, g, machine):
+        if g.max_width == 1:
+            return CommAwareHLPScheduler()._solve(g, machine)
+        sol = solve_mhlp(g, machine, comm_aware=True)
+        return hlp_ols(g, machine, sol.alloc, sol.width, comm_tiebreak=True)
 
 
 class MoldableHLPScheduler(StaticScheduler):
@@ -260,6 +301,8 @@ ADAPTERS = {
     "hlp_est": HLPESTScheduler,
     "hlp_ols": HLPOLSScheduler,
     "hlp_jax_ols": HLPJaxOLSScheduler,
+    "cahlp_ols": CommAwareHLPScheduler,
+    "camhlp_ols": CommAwareMoldableScheduler,
     "mhlp_ols": MoldableHLPScheduler,
     "heft": HEFTScheduler,
     "heft_nocomm": HEFTObliviousScheduler,

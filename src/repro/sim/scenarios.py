@@ -376,11 +376,13 @@ SCENARIO_FAMILIES: dict[str, Callable[..., Scenario]] = {
 }
 
 
-def moldable_suite(seed: int = 0, *, counts=(8, 4),
-                   num: int = 4) -> list[Scenario]:
+def moldable_suite(seed: int = 0, *, counts=(8, 4), num: int = 4,
+                   ccr: float = 0.0) -> list[Scenario]:
     """The moldable campaign suite: ``num`` seeds of the moldable Cholesky
-    family (the instances where width-aware allocation should pay)."""
-    return [moldable_cholesky_scenario(counts=counts, seed=seed + i)
+    family (the instances where width-aware allocation should pay).
+    ``ccr > 0`` attaches transfer costs — the comm-aware moldable
+    sub-campaign's instances; 0 (the default) is the historical suite."""
+    return [moldable_cholesky_scenario(counts=counts, seed=seed + i, ccr=ccr)
             for i in range(num)]
 
 

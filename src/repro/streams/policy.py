@@ -128,13 +128,24 @@ class AdapterPolicy(StreamPolicy):
         self._by_job.pop(job.jid, None)
 
 
+#: Default rollout candidates; jobs whose DAGs carry edge transfer costs
+#: additionally materialize the comm-aware allocation pipeline (its LP
+#: prices the transfers the stream engine will actually charge).
+DEFAULT_CANDIDATES = ("er_ls", "eft", "heft", "greedy_r2")
+COMM_CANDIDATES = DEFAULT_CANDIDATES + ("cahlp_ols",)
+
+
 class SimInTheLoop(StreamPolicy):
     """Pick each job's allocation by cheap vmapped rollouts at arrival.
 
     Args:
       candidates:    adapter names whose materialized plans compete; each is
                      conditioned on the current backlog via
-                     ``conditioned_plan`` before evaluation.
+                     ``conditioned_plan`` before evaluation.  ``None`` (the
+                     default) selects per job: ``DEFAULT_CANDIDATES``, plus
+                     the comm-aware ``cahlp_ols`` allocator
+                     (``COMM_CANDIDATES``) when the job's DAG carries edge
+                     transfer costs.
       rollout_seeds: noise seeds per rollout; with ``rollout_noise=None``
                      a single estimate-replay rollout per candidate.
       rollout_noise: optional misprediction model applied inside rollouts.
@@ -150,10 +161,12 @@ class SimInTheLoop(StreamPolicy):
       fallback:      arrival-driven adapter used when over budget.
     """
 
-    def __init__(self, candidates=("er_ls", "eft", "heft", "greedy_r2"), *,
+    def __init__(self, candidates=None, *,
                  rollout_seeds=(0,), rollout_noise: NoiseModel | None = None,
                  budget_s: float | None = None, fallback: str = "er_ls"):
-        self.candidates = tuple(candidates)
+        self._auto_candidates = candidates is None
+        self.candidates = (DEFAULT_CANDIDATES if candidates is None
+                           else tuple(candidates))
         if not self.candidates:
             raise ValueError("need at least one candidate")
         self.rollout_seeds = list(rollout_seeds)
@@ -181,17 +194,19 @@ class SimInTheLoop(StreamPolicy):
             self.decisions.append((job.jid, f"fallback:{self.fallback.name}"))
             return
         t0 = time.perf_counter()
+        cands = (COMM_CANDIDATES
+                 if self._auto_candidates and job.graph.has_comm
+                 else self.candidates)
         busy = [state.busy_until(q) for q in range(machine.num_types)]
         plans = [conditioned_plan(c, job.graph, machine, busy, t)
-                 for c in self.candidates]
+                 for c in cands]
         sweeps = sweep_suite_makespans(
             [(job.graph, machine, FrozenPlanScheduler(p, name=c))
-             for c, p in zip(self.candidates, plans)],
+             for c, p in zip(cands, plans)],
             noise=self.rollout_noise, seeds=self.rollout_seeds,
             floor_fn=lambda g, p: rollout_floors(g, p, busy, now=t),
             envelope=True)
-        best = self.candidates[
-            int(np.argmin([float(s.mean()) for s in sweeps]))]
+        best = cands[int(np.argmin([float(s.mean()) for s in sweeps]))]
         # The winner is installed as the job's *allocator*, not a frozen
         # allocation: arrival-driven winners keep deciding per task against
         # the machine state as it actually evolves (freezing the arrival-time

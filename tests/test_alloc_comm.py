@@ -1,0 +1,241 @@
+"""Comm-aware allocation phase: the AllocationProblem IR end to end.
+
+The contract of the refactor, asserted here:
+
+  * one IR feeds every backend — the exact HiGHS lowerings and the JAX
+    first-order kernel consume the same ``AllocationProblem``;
+  * pricing zero comm assembles the byte-identical LP (the paper's model);
+    pricing real comm only raises λ* (a *valid*, tighter lower bound:
+    still below the comm-aware brute-force optimum);
+  * on the network-bound family the comm-aware allocation pipeline
+    (``cahlp_ols``) beats the comm-oblivious one by a measurable margin,
+    evaluated through the bucketed one-jit batch path at ≤ 1 XLA compile
+    per shape bucket;
+  * the deprecation shim warns once per entry point, not once per task.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+import repro.platform as platform_mod
+from repro.core.allocation import AllocationProblem, frac_objective
+from repro.core.bruteforce import brute_force_opt
+from repro.core.hlp import lp_lower_bound, solve_hlp, solve_mhlp, solve_qhlp
+from repro.core.hlp_jax import solve_hlp_jax, solve_mhlp_jax
+from repro.core.listsched import comm_tiebreak_key, hlp_ols, list_schedule
+from repro.core.theory import ratio_denominator
+from repro.sim import Machine, NoiseModel, make_scheduler, simulate
+from repro.sim import batch
+from repro.sim.scenarios import (make_scenario, moldable_cholesky_scenario,
+                                 netbound_scenario)
+from conftest import random_dag
+
+
+def _comm_dag(seed: int = 0, n: int = 16, ccr: float = 1.0):
+    g = random_dag(seed, n=n, p_edge=0.25)
+    rng = np.random.default_rng(seed + 1)
+    return g.with_comm(ccr * float(g.proc.min(axis=1).mean())
+                       * rng.uniform(0.2, 2.0, size=g.num_edges))
+
+
+# ------------------------------------------------------------------- the IR
+def test_problem_build_rigid_and_moldable_grids():
+    g = _comm_dag(seed=1)
+    prob = AllocationProblem.build(g, (4, 2), rigid=True)
+    assert prob.choices == ((0, 1), (1, 1))
+    np.testing.assert_array_equal(prob.p_choice, g.proc)
+    assert not prob.comm_aware                      # oblivious by default
+    ca = AllocationProblem.build(g, (4, 2), comm_aware=True, rigid=True)
+    assert ca.comm_aware
+    np.testing.assert_array_equal(ca.comm, g.comm)
+    gm = g.with_speedup(np.tile([1.0, 1.7], (g.n, 1)))
+    pm = AllocationProblem.build(gm, (4, 2))
+    assert pm.C == 4 and pm.choices == ((0, 1), (0, 2), (1, 1), (1, 2))
+
+
+def test_cross_probability_is_tv_and_integral_indicator():
+    g = _comm_dag(seed=2)
+    prob = AllocationProblem.build(g, (3, 2), comm_aware=True, rigid=True)
+    alloc = (np.arange(g.n) % 2).astype(np.int64)
+    x = np.zeros((g.n, 2))
+    x[np.arange(g.n), alloc] = 1.0                  # integral distribution
+    cross = prob.cross_probability(x)
+    expect = (alloc[g.edges[:, 0]] != alloc[g.edges[:, 1]]).astype(float)
+    np.testing.assert_allclose(cross, expect, atol=1e-12)
+    # fully mixed endpoints: TV = 0 -> no charge even though comm > 0
+    xm = np.full((g.n, 2), 0.5)
+    np.testing.assert_allclose(prob.cross_probability(xm), 0.0, atol=1e-12)
+
+
+def test_frac_objective_prices_comm_on_integral_allocations():
+    g = _comm_dag(seed=3)
+    prob = AllocationProblem.build(g, (3, 2), comm_aware=True, rigid=True)
+    alloc = (np.arange(g.n) % 2).astype(np.int64)
+    x = np.zeros((g.n, 2)); x[np.arange(g.n), alloc] = 1.0
+    # the integral λ is exactly the engine-identical comm-charged bound
+    assert frac_objective(prob, x) == \
+        pytest.approx(g.graham_lower_bound([3, 2], alloc.astype(np.int32)))
+
+
+# ------------------------------------------------------------ the exact LPs
+def test_comm_aware_lp_sandwiched_between_oblivious_lp_and_opt():
+    """LP*_oblivious <= LP*_comm <= comm-charged OPT (brute force)."""
+    for seed in range(3):
+        g = _comm_dag(seed=40 + seed, n=8, ccr=1.5)
+        counts = [2, 1]
+        lo = solve_hlp(g, *counts).lp_value
+        ca = solve_hlp(g, *counts, comm_aware=True).lp_value
+        opt = brute_force_opt(g, counts)
+        assert lo - 1e-9 <= ca <= opt + 1e-6, (seed, lo, ca, opt)
+
+
+def test_lp_lower_bound_tightens_on_netbound():
+    sc = netbound_scenario(counts=(8, 2), seed=0)
+    obl = lp_lower_bound(sc.graph, sc.machine, comm_aware=False)
+    ca = lp_lower_bound(sc.graph, sc.machine)       # auto: graph has comm
+    assert ca > obl * 1.05                          # the edge terms bite
+    assert ratio_denominator(sc.graph, sc.counts) >= ca - 1e-9
+
+
+def test_qhlp_comm_aware_three_types():
+    g = random_dag(seed=9, n=12, num_types=3)
+    rng = np.random.default_rng(10)
+    g = g.with_comm(float(g.proc.min(axis=1).mean())
+                    * rng.uniform(0.5, 2.0, size=g.num_edges))
+    obl = solve_qhlp(g, [3, 2, 2])
+    ca = solve_qhlp(g, [3, 2, 2], comm_aware=True)
+    assert ca.lp_value >= obl.lp_value - 1e-9
+    assert ca.alloc.shape == (g.n,)
+
+
+def test_mhlp_comm_aware_respects_oblivious_bound_and_rounds():
+    sc = moldable_cholesky_scenario(seed=2, ccr=0.8)
+    g = sc.graph
+    obl = solve_mhlp(g, sc.machine)
+    ca = solve_mhlp(g, sc.machine, comm_aware=True)
+    assert ca.lp_value >= obl.lp_value - 1e-9
+    hlp_ols(g, sc.machine, ca.alloc, ca.width).validate(g, sc.machine)
+    can = solve_mhlp(g, sc.machine, comm_aware=True, canonical=True)
+    hlp_ols(g, sc.machine, can.alloc, can.width).validate(g, sc.machine)
+
+
+# ------------------------------------------------------------ the JAX twins
+def test_jax_solvers_consume_the_same_problem():
+    """First-order λ is feasible for the same relaxation: >= the HiGHS
+    optimum, and close on the hybrid grid."""
+    sc = netbound_scenario(counts=(8, 2), seed=1)
+    g = sc.graph
+    exact = solve_hlp(g, 8, 2, comm_aware=True)
+    approx = solve_hlp_jax(g, 8, 2, comm_aware=True, iters=300)
+    assert approx.lp_value >= exact.lp_value - 1e-6
+    assert approx.lp_value <= exact.lp_value * 1.10
+    assert approx.x_frac.shape == (g.n,)            # hybrid projection
+
+    scm = moldable_cholesky_scenario(seed=1, ccr=0.8)
+    em = solve_mhlp(scm.graph, scm.machine, comm_aware=True)
+    am = solve_mhlp_jax(scm.graph, scm.machine, comm_aware=True, iters=250)
+    assert am.lp_value >= em.lp_value - 1e-6
+    hlp_ols(scm.graph, scm.machine, am.alloc, am.width).validate(
+        scm.graph, scm.machine)
+
+
+# --------------------------------------------------- the scheduling tie-break
+def test_zero_tiebreak_reproduces_default_schedule():
+    g = _comm_dag(seed=5)
+    alloc = (np.arange(g.n) % 2).astype(np.int32)
+    a = list_schedule(g, Machine((3, 2)), alloc)
+    b = list_schedule(g, Machine((3, 2)), alloc, tie_break=np.zeros(g.n))
+    for f in ("alloc", "proc", "start", "finish"):
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f))
+    key = comm_tiebreak_key(g, alloc)
+    assert key.shape == (g.n,) and (key >= 0).all()
+    assert comm_tiebreak_key(g.with_comm(0.0), alloc).sum() == 0.0
+
+
+# --------------------------------------------------- the comm-allocation claim
+def test_cahlp_beats_oblivious_hlp_on_netbound_through_bucketed_path():
+    """The acceptance claim: on the netbound family the comm-aware
+    allocation wins by a measurable margin, with the whole (scenario ×
+    scheduler × seed) grid evaluated at <= 1 XLA compile per bucket."""
+    noise = NoiseModel("lognormal", 0.15)
+    seeds = list(range(4))
+    entries = []
+    for seed in range(4):
+        sc = netbound_scenario(counts=(8, 2), seed=seed)
+        for name in ("hlp_ols", "cahlp_ols"):
+            entries.append((sc.graph, sc.machine, make_scheduler(name)))
+    items = [(g, s.allocate(g, m)) for g, m, s in entries]
+    n_buckets = len(batch.bucket_plans(items))
+    before = batch.trace_count("bucket")
+    sweeps = batch.sweep_suite_makespans(entries, noise=noise, seeds=seeds)
+    assert batch.trace_count("bucket") - before <= n_buckets
+    obl = np.mean([s.mean() for s in sweeps[0::2]])
+    aware = np.mean([s.mean() for s in sweeps[1::2]])
+    assert obl / aware > 1.08, (obl, aware)        # the margin is real
+
+
+def test_camhlp_beats_oblivious_mhlp_under_transfers():
+    """In the transfer-dominated regime (CCR = 2, the netbound setting) the
+    comm-aware width-indexed LP wins on the moldable family too."""
+    ratios = []
+    for seed in range(3):
+        sc = moldable_cholesky_scenario(seed=seed, ccr=2.0)
+        obl = simulate(sc.graph, sc.machine, make_scheduler("mhlp_ols"),
+                       seed=0).makespan
+        ca = simulate(sc.graph, sc.machine, make_scheduler("camhlp_ols"),
+                      seed=0).makespan
+        ratios.append(obl / ca)
+    assert np.mean(ratios) > 1.05, ratios
+
+
+# ----------------------------------------------------- streams candidates
+def test_sitl_adds_comm_aware_candidate_on_comm_jobs():
+    """The default SimInTheLoop candidate set grows the comm-aware
+    allocator exactly when a job's DAG carries edge transfer costs."""
+    from repro.streams import (COMM_CANDIDATES, DEFAULT_CANDIDATES,
+                               JobFactory, PoissonProcess, SimInTheLoop,
+                               open_stream, run_stream)
+
+    assert COMM_CANDIDATES == DEFAULT_CANDIDATES + ("cahlp_ols",)
+    machine = Machine.hybrid(4, 2)
+    pol = SimInTheLoop()
+    src = open_stream(PoissonProcess(0.08),
+                      JobFactory(("layered",), ccr=1.0), num_jobs=3,
+                      num_tenants=2, seed=4)
+    res = run_stream(src, machine, pol, seed=0)
+    assert len(res.jobs) == 3
+    assert all(c in COMM_CANDIDATES for _, c in pol.decisions)
+    # explicit candidate lists stay authoritative (no auto-augmentation)
+    pinned = SimInTheLoop(candidates=("er_ls", "eft"))
+    run_stream(open_stream(PoissonProcess(0.08),
+                           JobFactory(("layered",), ccr=1.0), num_jobs=2,
+                           num_tenants=1, seed=5), machine, pinned, seed=0)
+    assert all(c in ("er_ls", "eft") for _, c in pinned.decisions)
+
+
+# ------------------------------------------------------- deprecation dedup
+def test_deprecation_warns_once_per_entry_point():
+    """A campaign loop hitting one entry point with legacy counts lists
+    emits exactly one DeprecationWarning — even under an ``always``
+    filter — and a second entry point gets its own single warning."""
+    from repro.core.listsched import heft
+
+    platform_mod._reset_deprecation_registry()
+    g = random_dag(seed=6, n=8)
+    alloc = np.zeros(g.n, dtype=np.int32)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        for _ in range(25):                         # one site, many tasks
+            list_schedule(g, [2, 1], alloc)
+        for _ in range(25):                         # a second entry point
+            heft(g, [2, 1])
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 2, [str(w.message) for w in dep]
+    # the registry is per call site: a fresh registry warns again
+    platform_mod._reset_deprecation_registry()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        list_schedule(g, [2, 1], alloc)
+    assert sum(issubclass(w.category, DeprecationWarning)
+               for w in rec) == 1

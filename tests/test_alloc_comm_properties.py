@@ -1,0 +1,75 @@
+"""Property tests for the comm-aware allocation LPs (hypothesis).
+
+The two acceptance properties of the refactor:
+
+  (a) at ``ccr=0`` the comm-aware and comm-oblivious LPs are the *same
+      problem* — identical objectives on random graphs (the paper's model
+      is preserved exactly, not approximately);
+  (b) the CA-MHLP objective is non-decreasing in a uniform scale of the
+      edge transfer costs — charging the network more never makes the
+      relaxation more optimistic (its feasible region only shrinks).
+"""
+import numpy as np
+import pytest
+pytest.importorskip("hypothesis")  # dev extra: pip install -r requirements-dev.txt
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dag import TaskGraph
+from repro.core.hlp import solve_hlp, solve_mhlp, solve_qhlp
+from conftest import random_dag
+
+
+def _with_comm(g: TaskGraph, seed: int, scale: float = 1.0) -> TaskGraph:
+    rng = np.random.default_rng(seed)
+    base = float(g.proc.min(axis=1).mean())
+    return g.with_comm(scale * base * rng.uniform(0.1, 2.0, size=g.num_edges))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_zero_comm_makes_aware_and_oblivious_lps_identical(seed):
+    """(a): with no edge costs the priced LP assembles the byte-identical
+    matrix, so HiGHS returns the *same* objective and the same vertex."""
+    g = random_dag(seed, n=10, p_edge=0.3)
+    a = solve_hlp(g, 3, 2)
+    b = solve_hlp(g, 3, 2, comm_aware=True)
+    assert a.lp_value == b.lp_value
+    np.testing.assert_array_equal(a.x_frac, b.x_frac)
+    np.testing.assert_array_equal(a.alloc, b.alloc)
+    qa = solve_qhlp(g, [3, 2])
+    qb = solve_qhlp(g, [3, 2], comm_aware=True)
+    assert qa.lp_value == qb.lp_value
+    np.testing.assert_array_equal(qa.alloc, qb.alloc)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_zero_comm_mhlp_identical_and_comm_never_flatters(seed):
+    """(a) for the moldable grid, plus: pricing real comm only raises λ*."""
+    g = random_dag(seed, n=9, p_edge=0.3).with_speedup(
+        np.tile([1.0, 1.6], (9, 1)))
+    a = solve_mhlp(g, (4, 2))
+    b = solve_mhlp(g, (4, 2), comm_aware=True)
+    assert a.lp_value == b.lp_value
+    np.testing.assert_array_equal(a.alloc, b.alloc)
+    np.testing.assert_array_equal(a.width, b.width)
+    gc = _with_comm(g, seed)
+    assert solve_mhlp(gc, (4, 2), comm_aware=True).lp_value \
+        >= a.lp_value - 1e-9
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10 ** 6),
+       st.lists(st.floats(0.0, 4.0), min_size=2, max_size=4))
+def test_camhlp_objective_monotone_in_uniform_comm_scale(seed, scales):
+    """(b): λ*(s·comm) is non-decreasing in s (uniform edge-cost scaling)."""
+    g = random_dag(seed, n=9, p_edge=0.35).with_speedup(
+        np.tile([1.0, 1.5], (9, 1)))
+    if not g.num_edges:
+        return
+    gc = _with_comm(g, seed)
+    vals = [solve_mhlp(gc.with_comm(s * gc.comm), (4, 2),
+                       comm_aware=True).lp_value
+            for s in sorted(scales)]
+    for lo, hi in zip(vals[:-1], vals[1:]):
+        assert hi >= lo - 1e-7, (sorted(scales), vals)

@@ -15,11 +15,13 @@ API = {
         "as_platform", "decisions_of", "default_type_names", "pack_decisions",
     ],
     "repro.core": [
-        "CPU", "GPU", "HLPSolution", "RULES", "Schedule", "TaskGraph",
+        "AllocationProblem", "CPU", "GPU", "HLPSolution", "RULES", "Schedule",
+        "TaskGraph",
         "amdahl_speedup", "brute_force_opt", "brute_force_schedule",
         "canonical_round_moldable", "decide_eft", "decide_erls",
         "efficient_width", "er_ls", "eft_online",
-        "erls_decide", "erls_decide_moldable", "greedy_online", "heft",
+        "erls_decide", "erls_decide_moldable", "frac_objective",
+        "greedy_online", "heft",
         "hlp_est", "hlp_ols", "list_schedule", "lp_lower_bound",
         "makespan_lower_bound", "mhlp_choices", "ols_rank", "powerlaw_speedup",
         "random_online", "solve_hlp", "solve_mhlp", "solve_qhlp",
@@ -34,7 +36,8 @@ API = {
         "simulate", "to_estee",
     ],
     "repro.streams": [
-        "AdapterPolicy", "ClosedLoopSource", "DEFAULT_JOB_PARAMS", "Job",
+        "AdapterPolicy", "COMM_CANDIDATES", "ClosedLoopSource",
+        "DEFAULT_CANDIDATES", "DEFAULT_JOB_PARAMS", "Job",
         "JobFactory", "JobRecord", "MMPPProcess", "OpenLoopSource",
         "PoissonProcess", "SimInTheLoop", "StreamPolicy", "StreamResult",
         "TaskRecord", "TenantLedger", "bounded_slowdown", "chameleon_stream",
@@ -58,6 +61,11 @@ def test_public_api_surface(module):
 def test_adapter_registry_covers_the_moldable_planner():
     from repro.sim import ADAPTERS
     assert "mhlp_ols" in ADAPTERS
+
+
+def test_adapter_registry_covers_the_comm_aware_allocators():
+    from repro.sim import ADAPTERS
+    assert "cahlp_ols" in ADAPTERS and "camhlp_ols" in ADAPTERS
 
 
 def test_scenario_registry_covers_the_moldable_family():

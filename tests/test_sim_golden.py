@@ -113,8 +113,11 @@ def _w1_suite():
 def test_width1_fixture_covers_every_adapter():
     from repro.sim import ADAPTERS
     covered = {alg for cells in GOLDEN_W1.values() for alg in cells}
-    missing = set(ADAPTERS) - covered - {"mhlp_ols"}   # mhlp_ols is new in
-    # this redesign: its width-1 parity is pinned against the hlp_ols cells
+    # mhlp_ols (PR 4) and the comm-aware allocators cahlp_ols/camhlp_ols
+    # (PR 5) have no golden cells of their own: their zero-comm width-1
+    # parity is pinned against the hlp_ols cells below.
+    missing = set(ADAPTERS) - covered \
+        - {"mhlp_ols", "cahlp_ols", "camhlp_ols"}
     assert not missing, f"adapters without a width-1 golden: {missing}"
 
 
@@ -143,6 +146,22 @@ def test_mhlp_routes_to_exact_hlp_at_width1():
         r = simulate(g, sc.machine, make_scheduler("mhlp_ols"), seed=sc.seed)
         assert _sched_hash(r.schedule) == \
             GOLDEN_W1[sc.name]["hlp_ols"]["hash_clean"], sc.name
+
+
+def test_comm_aware_allocators_route_to_hlp_at_zero_comm():
+    """The ccr=0 bit-parity contract of the comm-aware allocation phase:
+    with no edge costs the priced LP assembles the byte-identical matrix,
+    so cahlp_ols / camhlp_ols reproduce the hlp_ols schedule hashes exactly
+    (clean and under noise)."""
+    for sc in _w1_suite():
+        for alg in ("cahlp_ols", "camhlp_ols"):
+            r0 = simulate(sc.graph, sc.machine, make_scheduler(alg),
+                          seed=sc.seed)
+            r1 = simulate(sc.graph, sc.machine, make_scheduler(alg),
+                          noise=NoiseModel("lognormal", 0.2), seed=sc.seed)
+            exp = GOLDEN_W1[sc.name]["hlp_ols"]
+            assert _sched_hash(r0.schedule) == exp["hash_clean"], (sc.name, alg)
+            assert _sched_hash(r1.schedule) == exp["hash_noisy"], (sc.name, alg)
 
 
 def regenerate():  # pragma: no cover - maintenance helper
