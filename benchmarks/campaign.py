@@ -185,6 +185,12 @@ def sim_sweep(full: bool = False, noise_scale: float = 0.2,
     on CCR-enabled instances, the comm-aware CAMHLP against the
     comm-oblivious MHLP (``camhlp_comm_gain``).
 
+    A *network-model* sub-grid on the ``netbound`` family replays the
+    oblivious and contention-aware allocations under each pluggable
+    ``repro.sim.network`` model (instant / fixed_latency / maxmin_fair) and
+    reports ``contention_gap`` — the oblivious-over-aware makespan ratio
+    under the contended model.
+
     ``base_seed`` shifts every scenario-generator seed (the
     ``benchmarks.run --seed`` knob), so one flag re-rolls the whole grid.
     """
@@ -247,6 +253,35 @@ def sim_sweep(full: bool = False, noise_scale: float = 0.2,
             m_grids.append(np.vstack([clean_row, noisy]))
             m_keys.append((sc.name, name))
     m_sweeps = bucketed_makespans(m_items, m_grids)
+
+    # Network-model sub-grid (netbound family): the comm-oblivious hlp_ols
+    # allocation and the contention-aware CAHLP variant, each replayed under
+    # all three pluggable network models — instant / fixed_latency /
+    # maxmin_fair — through the same bucketed path (contention enters as
+    # per-edge delay numbers at plan-DAG build time, never as new shapes).
+    from repro.sim.adapters import CommAwareHLPScheduler
+    from repro.sim.network import make_network
+    from repro.sim.scenarios import netbound_scenario
+
+    nets = {name: make_network(name)
+            for name in ("instant", "fixed_latency", "maxmin_fair")}
+    n_suite = [netbound_scenario(seed=base_seed + 300 + i)
+               for i in range(6 if full else 3)]
+    n_allocs = [("hlp_ols", lambda: make_scheduler("hlp_ols")),
+                ("cahlp_ctn", lambda: CommAwareHLPScheduler(contention=True))]
+    n_items, n_grids, n_keys, n_nets = [], [], [], []
+    for sc in n_suite:
+        lbs[sc.name] = ratio_denominator(sc.graph, sc.counts)
+        for name, mk in n_allocs:
+            plan = mk().allocate(sc.graph, sc.machine)
+            clean_row = sample_actual_batch(sc.graph, plan, NoiseModel(), [0])
+            noisy = sample_actual_batch(sc.graph, plan, noise, seeds)
+            for net_name, net in nets.items():
+                n_items.append((sc.graph, plan))
+                n_grids.append(np.vstack([clean_row, noisy]))
+                n_keys.append((sc.name, name, net_name))
+                n_nets.append(net)
+    n_sweeps = bucketed_makespans(n_items, n_grids, networks=n_nets)
     compiles = trace_count("bucket") - traces0
 
     rows, agg = [], defaultdict(list)
@@ -316,14 +351,36 @@ def sim_sweep(full: bool = False, noise_scale: float = 0.2,
                 / m_results[(sc.name, "camhlp_ols")][1].mean())
         if verbose:
             print(f"  sim_sweep {sc.name} done")
+
+    n_results = {k: (float(v[0]), v[1:]) for k, v in zip(n_keys, n_sweeps)}
+    for sc in n_suite:
+        lb = lbs[sc.name]
+        for name, _ in n_allocs:
+            for net_name in nets:
+                clean, ms = n_results[(sc.name, name, net_name)]
+                n_runs += len(seeds)
+                mean = float(ms.mean())
+                agg[f"net_{net_name}_{name}"].append(mean / lb)
+                rows.append([sc.name, sc.family, f"{name}@{net_name}", lb,
+                             clean, mean, float(ms.std()),
+                             float(np.percentile(ms, 95)), len(seeds)])
+        # the contention claim: on the network-bound family *under the
+        # contended model*, how much the contention-oblivious allocation
+        # pays over the one whose LP priced expected link load
+        agg["contention_gap"].append(
+            n_results[(sc.name, "hlp_ols", "maxmin_fair")][1].mean()
+            / n_results[(sc.name, "cahlp_ctn", "maxmin_fair")][1].mean())
+        if verbose:
+            print(f"  sim_sweep {sc.name} (network grid) done")
     _write_csv("sim_sweep.csv",
                ["scenario", "family", "scheduler", "lower_bound",
                 "makespan_clean", "makespan_noisy_mean", "makespan_noisy_std",
                 "makespan_noisy_p95", "seeds"], rows)
     return {"ratios": {k: float(np.mean(v)) for k, v in agg.items()},
             "schedulers": static + online, "runs": n_runs,
-            "scenarios": len(suite) + len(m_suite), "compiles": compiles,
-            "plans": len(items) + len(m_items)}
+            "scenarios": len(suite) + len(m_suite) + len(n_suite),
+            "compiles": compiles,
+            "plans": len(items) + len(m_items) + len(n_items)}
 
 
 # ------------------------------------------------------ open-system streams

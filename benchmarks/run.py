@@ -102,6 +102,11 @@ def bench_sim(full: bool, seed: int = 0) -> list[str]:
     lines.append(f"sim/mhlp_width_gain,{per:.0f},width1_penalty_pct={wgain:.2f}")
     cmgain = (r["ratios"]["camhlp_comm_gain"] - 1) * 100
     lines.append(f"sim/camhlp_comm_gain,{per:.0f},oblivious_penalty_pct={cmgain:.2f}")
+    ctgain = (r["ratios"]["contention_gap"] - 1) * 100
+    spread = (r["ratios"]["net_maxmin_fair_hlp_ols"]
+              / r["ratios"]["net_instant_hlp_ols"] - 1) * 100
+    lines.append(f"sim/contention_gap,{per:.0f},oblivious_penalty_pct={ctgain:.2f};"
+                 f"netmodel_spread_pct={spread:.2f}")
     print(f"# sim: {r['runs']} runs over {r['scenarios']} scenarios in "
           f"{dt:.1f}s | {r['plans']} static plans in {r['compiles']} XLA "
           f"compiles (bucketed) | LB ratios " +
@@ -117,6 +122,9 @@ def bench_sim(full: bool, seed: int = 0) -> list[str]:
     print(f"#   moldable: width-1 HLP pays {wgain:+.1f}% mean makespan vs "
           f"width-aware MHLP on the moldable_cholesky family; oblivious "
           f"MHLP pays {cmgain:+.1f}% vs CAMHLP under transfers")
+    print(f"#   network models (netbound): maxmin_fair costs hlp_ols "
+          f"{spread:+.1f}% over instant; under contention the oblivious "
+          f"allocation pays {ctgain:+.1f}% vs the load-priced LP")
     return lines
 
 

@@ -52,6 +52,30 @@ from repro.platform import as_platform
 from .dag import TaskGraph
 
 
+def expected_link_load(g: TaskGraph, counts) -> np.ndarray:
+    """(e,) expected number of transfers sharing each edge's link — the
+    contention prior the allocation phase can price before any placement
+    exists.
+
+    Heuristic: edges whose *source* tasks sit on the same topological level
+    tend to transfer in the same execution window (that is exactly the
+    netbound failure mode); under a uniform random-placement prior an edge
+    crosses the type boundary with probability ``1 - Σ_q (c_q/Σc)²``, and
+    crossing peers split evenly between the two link directions.  So an
+    edge with ``peers`` same-level companions expects
+    ``1 + p_cross · (peers - 1) / 2`` concurrent flows on its bottleneck
+    link.  Always ≥ 1, and exactly 1 when an edge has no level peers — a
+    contention-scaled problem on an uncontended graph prices the same comm.
+    """
+    if not g.num_edges:
+        return np.zeros(0)
+    total = float(sum(counts))
+    p_cross = 1.0 - sum((float(c) / total) ** 2 for c in counts)
+    src_level = g.level[g.edges[:, 0]]
+    peers = np.bincount(src_level)[src_level].astype(np.float64)
+    return 1.0 + p_cross * (peers - 1.0) * 0.5
+
+
 def mhlp_choices(g: TaskGraph, counts) -> list[tuple[int, int]]:
     """The (type, width) decision grid of the width-indexed LP: every pool
     crossed with widths 1..min(max curve width, pool size)."""
@@ -93,14 +117,19 @@ class AllocationProblem:
 
     @staticmethod
     def build(g: TaskGraph, machine, *, comm_aware: bool = False,
-              rigid: bool = False) -> "AllocationProblem":
+              rigid: bool = False,
+              contention: bool = False) -> "AllocationProblem":
         """Build the IR from a graph and a machine.
 
         ``rigid=True`` forces the width-1 grid (one choice per pool) — the
         HLP/QHLP view — regardless of the graph's speedup curves;
         ``comm_aware=True`` prices the graph's edge transfer costs into the
         allocation (zero-cost edges contribute nothing, so ``ccr=0`` builds
-        the identical problem either way).
+        the identical problem either way).  ``contention=True`` (implies
+        comm pricing is meaningful) scales each edge's price by its
+        :func:`expected_link_load` — the level-peer concurrency prior a
+        contended network model (``maxmin_fair``) will realize — so the LP
+        values type locality the way the fluid engine charges it.
         """
         platform = as_platform(machine, warn=False)
         counts = platform.to_counts()
@@ -112,6 +141,8 @@ class AllocationProblem:
         comm = (np.asarray(g.comm, dtype=np.float64)
                 if comm_aware and g.num_edges
                 else np.zeros(g.num_edges, dtype=np.float64))
+        if comm_aware and contention and g.num_edges:
+            comm = comm * expected_link_load(g, counts)
         return AllocationProblem(
             g=g, counts=tuple(int(c) for c in counts), choices=tuple(choices),
             p_choice=p_choice, finite=np.isfinite(p_choice), comm=comm)
@@ -179,7 +210,14 @@ def frac_objective(prob: AllocationProblem, x: np.ndarray) -> float:
     comm-free objective did.
     """
     g, counts, choices = prob.g, prob.counts, prob.choices
-    contrib = np.where(x > 0, prob.p_choice * x, 0.0)   # (n, C), inf·0 -> 0
+    # Mask the operands, not just the product: ``p_choice * x`` would
+    # evaluate ``inf · 0`` on infeasible zero-mass choices and raise a
+    # RuntimeWarning before the mask ever applied.  Finite entries see the
+    # identical float multiply; infeasible choices carrying mass still
+    # poison the objective with inf exactly as before.
+    safe_p = np.where(prob.finite, prob.p_choice, 0.0)
+    contrib = np.where(x > 0, safe_p * x, 0.0)          # (n, C)
+    contrib = np.where(~prob.finite & (x > 0), np.inf, contrib)
     times = contrib.sum(axis=1)
     if prob.comm_aware:
         cross = np.clip(prob.cross_probability(x), 0.0, 1.0)

@@ -104,6 +104,14 @@ class TaskGraph:
       topo:    (n,) int32     — a topological order.
       level:   (n,) int32     — topological level (longest #edges from a source).
       names:   optional task names (kernel class etc.).
+      size:    optional (e,) float64 — bytes of the *data object* each edge
+               ships (first-class data: what contended network models
+               meter).  ``None`` defaults every edge to ``comm × bandwidth``
+               so the two parameterizations describe the same traffic.
+      out_id:  optional (e,) int64 — id of the produced output each edge
+               ships.  Edges sharing an ``out_id`` reuse one object, so a
+               contended model sends it across a given type boundary once
+               (output caching).  ``None`` = every edge its own object.
     """
 
     proc: np.ndarray
@@ -119,13 +127,17 @@ class TaskGraph:
     level: np.ndarray
     names: tuple[str, ...] | None = None
     speedup: np.ndarray | None = None   # (n, W) moldable curve table
+    size: np.ndarray | None = None      # (e,) data-object bytes per edge
+    out_id: np.ndarray | None = None    # (e,) producing-output id per edge
 
     # ------------------------------------------------------------------ build
     @staticmethod
     def build(proc: np.ndarray, edges: Iterable[tuple[int, int]],
               names: Sequence[str] | None = None,
               comm: np.ndarray | None = None,
-              speedup: np.ndarray | None = None) -> "TaskGraph":
+              speedup: np.ndarray | None = None,
+              size: np.ndarray | None = None,
+              out_id: np.ndarray | None = None) -> "TaskGraph":
         proc = np.asarray(proc, dtype=np.float64)
         if proc.ndim != 2:
             raise ValueError(f"proc must be (n, Q), got {proc.shape}")
@@ -143,6 +155,17 @@ class TaskGraph:
                 raise ValueError(f"comm must be ({e.shape[0]},), got {comm.shape}")
             if (comm < 0).any():
                 raise ValueError("negative transfer cost")
+        if size is not None:
+            size = np.asarray(size, dtype=np.float64)
+            if size.shape != (e.shape[0],):
+                raise ValueError(f"size must be ({e.shape[0]},), got {size.shape}")
+            if (size < 0).any():
+                raise ValueError("negative data-object size")
+        if out_id is not None:
+            out_id = np.asarray(out_id, dtype=np.int64)
+            if out_id.shape != (e.shape[0],):
+                raise ValueError(f"out_id must be ({e.shape[0]},), "
+                                 f"got {out_id.shape}")
 
         def csr(targets: np.ndarray, keys: np.ndarray):
             order = np.argsort(keys, kind="stable")
@@ -188,7 +211,7 @@ class TaskGraph:
                          succ_ptr=succ_ptr, succ_idx=succ_idx, succ_eid=succ_eid,
                          topo=topo, level=level,
                          names=tuple(names) if names is not None else None,
-                         speedup=speedup)
+                         speedup=speedup, size=size, out_id=out_id)
 
     # ------------------------------------------------------------- properties
     @property
@@ -228,12 +251,32 @@ class TaskGraph:
         return self.succ_eid[self.succ_ptr[j]:self.succ_ptr[j + 1]]
 
     def with_comm(self, comm: np.ndarray | float) -> "TaskGraph":
-        """Copy of this graph with new per-edge transfer costs."""
+        """Copy of this graph with new per-edge transfer costs.
+
+        Explicit data-object sizes are dropped (reset to the
+        ``comm × bandwidth`` default): they were consistent with the *old*
+        costs, and keeping them would silently desynchronize the fixed-
+        latency and contended views of the same traffic."""
         c = np.broadcast_to(np.asarray(comm, dtype=np.float64),
                             (self.num_edges,)).copy()
         if (c < 0).any():
             raise ValueError("negative transfer cost")
-        return dataclasses.replace(self, comm=c)
+        return dataclasses.replace(self, comm=c, size=None)
+
+    def data_sizes(self, bandwidth: float = 1.0) -> np.ndarray:
+        """(e,) bytes of each edge's data object — the explicit ``size``
+        column when present, else the ``comm × bandwidth`` default under
+        which a lone transfer takes exactly its fixed-latency time."""
+        if self.size is not None:
+            return self.size
+        return self.comm * float(bandwidth)
+
+    def edge_out_ids(self) -> np.ndarray:
+        """(e,) producing-output id of each edge (``out_id`` when present,
+        else each edge ships its own object)."""
+        if self.out_id is not None:
+            return self.out_id
+        return np.arange(self.num_edges, dtype=np.int64)
 
     def with_speedup(self, speedup: np.ndarray) -> "TaskGraph":
         """Copy of this graph with a (n, W) moldable speedup table attached

@@ -148,19 +148,23 @@ def canonical_round(g: TaskGraph, m: int, k: int, x: np.ndarray, *,
 
 
 def solve_hlp(g: TaskGraph, m: int, k: int, *, canonical: bool = False,
-              comm_aware: bool = False) -> HLPSolution:
+              comm_aware: bool = False,
+              contention: bool = False) -> HLPSolution:
     """Exact LP relaxation of HLP for the hybrid (m CPUs, k GPUs) platform.
 
     ``comm_aware=True`` prices each edge's transfer cost into the LP (one
     crossing variable per edge, charged on the edge's precedence row); on a
     zero-``comm`` graph the assembled LP — and hence the solution — is
-    byte-identical to the oblivious one.
+    byte-identical to the oblivious one.  ``contention=True`` additionally
+    scales each edge's price by its expected link load (see
+    ``allocation.expected_link_load``) so the LP anticipates a contended
+    network model.
     """
     if g.num_types != 2:
         raise ValueError("solve_hlp is for Q=2; use solve_qhlp")
     n = g.n
     prob = AllocationProblem.build(g, (m, k), comm_aware=comm_aware,
-                                   rigid=True)
+                                   rigid=True, contention=contention)
     res = _linprog(hybrid_lp(prob))
     x = np.clip(res.x[:n], 0.0, 1.0)
     alloc = (canonical_round(g, m, k, x, prob=prob) if canonical
@@ -170,12 +174,14 @@ def solve_hlp(g: TaskGraph, m: int, k: int, *, canonical: bool = False,
 
 # ------------------------------------------------------------------- Q types
 def solve_qhlp(g: TaskGraph, counts, *,
-               comm_aware: bool = False) -> HLPSolution:
+               comm_aware: bool = False,
+               contention: bool = False) -> HLPSolution:
     """Exact LP relaxation of QHLP for Q >= 2 resource types (paper §5).
 
     ``comm_aware=True`` prices edge transfer costs with per-edge type
     couplings (see ``repro.core.allocation``); zero comm assembles the
-    byte-identical historical LP.
+    byte-identical historical LP.  ``contention=True`` scales edge prices
+    by the expected link load of a contended network.
     """
     counts = as_platform(counts, warn=False).to_counts()
     n, q = g.n, g.num_types
@@ -183,7 +189,7 @@ def solve_qhlp(g: TaskGraph, counts, *,
         raise ValueError(f"need {q} machine counts, got {len(counts)}")
     p = g.proc  # (n, Q)
     prob = AllocationProblem.build(g, counts, comm_aware=comm_aware,
-                                   rigid=True)
+                                   rigid=True, contention=contention)
     res = _linprog(grid_lp(prob))
     x = res.x[: n * q].reshape(n, q)
 
@@ -281,7 +287,8 @@ def canonical_round_moldable(g: TaskGraph, machine, x: np.ndarray, *,
 
 
 def solve_mhlp(g: TaskGraph, machine, *, canonical: bool = False,
-               comm_aware: bool = False) -> HLPSolution:
+               comm_aware: bool = False,
+               contention: bool = False) -> HLPSolution:
     """Exact LP relaxation of moldable HLP over (type, width) choices.
 
     Variables x_{j,q,w} ∈ [0,1] with Σ_{q,w} x_{j,q,w} = 1 per task;
@@ -300,7 +307,8 @@ def solve_mhlp(g: TaskGraph, machine, *, canonical: bool = False,
     if len(platform.counts) != g.num_types:
         raise ValueError(
             f"need {g.num_types} pool counts, got {len(platform.counts)}")
-    prob = AllocationProblem.build(g, platform, comm_aware=comm_aware)
+    prob = AllocationProblem.build(g, platform, comm_aware=comm_aware,
+                                   contention=contention)
     choices, p_choice = prob.choices, prob.p_choice
     C = prob.C
     res = _linprog(grid_lp(prob))

@@ -91,8 +91,15 @@ class Schedule:
                 seqs[(int(self.alloc[j]), pid)].append(int(j))
         return seqs
 
-    def validate(self, g: TaskGraph, machine, tol: float = 1e-9) -> None:
-        """Raise if the schedule is infeasible (used by tests, cheap to keep on)."""
+    def validate(self, g: TaskGraph, machine, tol: float = 1e-9,
+                 edge_delay: np.ndarray | None = None) -> None:
+        """Raise if the schedule is infeasible (used by tests, cheap to keep on).
+
+        ``edge_delay`` overrides the per-edge data-delay *lower bound* the
+        precedence check asserts — how network-model runs validate (instant
+        transfers bound at 0, contended ones at ``size/bandwidth``); the
+        default is the fixed-latency ``g.edge_delays`` array.
+        """
         p = as_platform(machine, warn=False)
         counts = p.counts
         t = g.moldable_times(self.alloc, self.width)
@@ -100,7 +107,7 @@ class Schedule:
             raise AssertionError("finish != start + processing time")
         if (self.start < -tol).any():
             raise AssertionError("negative start time")
-        delay = g.edge_delays(self.alloc)
+        delay = g.edge_delays(self.alloc) if edge_delay is None else edge_delay
         for e, (i, j) in enumerate(g.edges):
             if self.start[j] < self.finish[i] + delay[e] - tol:
                 raise AssertionError(f"precedence violated on edge ({i},{j})")

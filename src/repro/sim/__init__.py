@@ -29,6 +29,14 @@ Beyond the paper's static pipeline it adds:
     whenever a dependence crosses the CPU/GPU type boundary; scenario
     families expose this as a CCR knob and ``ccr=0`` reproduces the
     communication-free behavior bit-for-bit;
+  * **pluggable network models** — ``repro.sim.network`` makes *how*
+    transfers cost time swappable: ``instant`` (free), ``fixed_latency``
+    (today's per-edge delays, bit-for-bit), and ``maxmin_fair`` (fluid
+    contention: concurrent cross-type transfers of sized data objects
+    share per-type links under max-min fairness, reused outputs ship
+    once).  ``simulate(..., network=...)`` charges it in the engine,
+    ``run_stream(..., network=...)`` in the open system, and the bucketed
+    JAX path takes a vectorized sharing approximation;
   * **arrival streams** — tasks may carry release times, turning any offline
     instance into an online one;
   * **scenario families** — ``repro.sim.scenarios`` generates the paper's
@@ -61,6 +69,8 @@ from repro.platform import Decision, Platform
 from .adapters import ADAPTERS, FrozenPlanScheduler, make_scheduler, plan_for
 from .engine import (Machine, MachineState, NoiseModel, Plan, Scheduler,
                      SimResult, TraceEvent, plan_times, simulate)
+from .network import (NETWORKS, FixedLatencyNetwork, InstantNetwork,
+                      MaxMinFairNetwork, NetworkModel, make_network)
 from .scenarios import (SCENARIO_FAMILIES, Scenario, default_suite,
                         from_estee, make_scenario, moldable_suite, to_estee)
 
@@ -68,6 +78,8 @@ __all__ = [
     "ADAPTERS", "FrozenPlanScheduler", "make_scheduler", "plan_for",
     "Decision", "Platform", "Machine", "MachineState", "NoiseModel", "Plan",
     "Scheduler", "SimResult", "TraceEvent", "plan_times", "simulate",
+    "NETWORKS", "NetworkModel", "InstantNetwork", "FixedLatencyNetwork",
+    "MaxMinFairNetwork", "make_network",
     "SCENARIO_FAMILIES", "Scenario", "default_suite", "from_estee",
     "make_scenario", "moldable_suite", "to_estee",
 ]

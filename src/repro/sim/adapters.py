@@ -106,15 +106,25 @@ class CommAwareHLPScheduler(StaticScheduler):
 
     On a zero-``comm`` graph the priced LP is byte-identical to the
     oblivious one, so this adapter reproduces ``hlp_ols`` schedule-hash-
-    for-schedule-hash (golden-tested)."""
+    for-schedule-hash (golden-tested).
+
+    ``contention=True`` scales each edge's LP price by its expected link
+    load (``repro.core.allocation.expected_link_load``) — the allocation
+    then anticipates a *contended* network (``maxmin_fair``), not just a
+    fixed-latency one."""
 
     name = "cahlp_ols"
+
+    def __init__(self, contention: bool = False):
+        self.contention = contention
 
     def _allocate_lp(self, g: TaskGraph, machine: Machine) -> np.ndarray:
         counts = machine.counts
         if g.num_types == 2:
-            return solve_hlp(g, counts[0], counts[1], comm_aware=True).alloc
-        return solve_qhlp(g, machine, comm_aware=True).alloc
+            return solve_hlp(g, counts[0], counts[1], comm_aware=True,
+                             contention=self.contention).alloc
+        return solve_qhlp(g, machine, comm_aware=True,
+                          contention=self.contention).alloc
 
     def _solve(self, g, machine):
         return hlp_ols(g, machine, self._allocate_lp(g, machine),
@@ -125,14 +135,22 @@ class CommAwareMoldableScheduler(StaticScheduler):
     """CAMHLP-OLS: the width-indexed MHLP with per-edge comm terms hung on
     the (type, width) choice grid, then width-aware OLS with the comm
     tie-break.  Width-1 graphs route through the exact CAHLP path (so at
-    ``ccr=0`` this is ``hlp_ols`` bit-for-bit, like ``mhlp_ols``)."""
+    ``ccr=0`` this is ``hlp_ols`` bit-for-bit, like ``mhlp_ols``).
+
+    ``contention=True`` scales the LP's edge prices by expected link load
+    (forwarded to the width-1 CAHLP route too)."""
 
     name = "camhlp_ols"
 
+    def __init__(self, contention: bool = False):
+        self.contention = contention
+
     def _solve(self, g, machine):
         if g.max_width == 1:
-            return CommAwareHLPScheduler()._solve(g, machine)
-        sol = solve_mhlp(g, machine, comm_aware=True)
+            return CommAwareHLPScheduler(
+                contention=self.contention)._solve(g, machine)
+        sol = solve_mhlp(g, machine, comm_aware=True,
+                         contention=self.contention)
         return hlp_ols(g, machine, sol.alloc, sol.width, comm_tiebreak=True)
 
 

@@ -89,10 +89,32 @@ class PlanDag:
                              #        samplers) never re-derive it.
 
 
-def _plan_arrays(g: TaskGraph, plan: Plan):
+def _plan_delay_override(g: TaskGraph, plan: Plan, network):
+    """Per-edge delay vector a ``NetworkModel`` implies for this plan, or
+    ``None`` for the default fixed-latency charging.
+
+    Contended models (``maxmin_fair``) have no closed-form per-edge delay;
+    they get the vectorized bandwidth-sharing *approximation* of
+    ``repro.sim.network.contended_plan_delays`` — each transfer's duration
+    scaled by the time-averaged concurrency on its busiest link during the
+    noise-free replay.  The approximation is plain numpy at plan-DAG build
+    time, so array shapes (and hence XLA compiles) are unchanged.
+    """
+    if network is None:
+        return None
+    if getattr(network, "contended", False):
+        from .engine import plan_times
+        from .network import contended_plan_delays
+        return contended_plan_delays(g, plan, plan_times(g, plan, g.proc),
+                                     network)
+    return network.plan_delays(g, plan.alloc)
+
+
+def _plan_arrays(g: TaskGraph, plan: Plan, delay_e: np.ndarray | None = None):
     """Numpy (order, pred, delay) of the augmented DAG, minimally padded."""
     n = g.n
-    delay_e = g.edge_delays(plan.alloc)
+    if delay_e is None:
+        delay_e = g.edge_delays(plan.alloc)
     preds: list[list[int]] = [[] for _ in range(n)]
     delays: list[list[float]] = [[] for _ in range(n)]
     for j in range(n):
@@ -143,15 +165,20 @@ def _plan_width(g: TaskGraph, plan: Plan) -> np.ndarray:
 
 
 def build_plan_dag(g: TaskGraph, plan: Plan,
-                   floor: np.ndarray | None = None) -> PlanDag:
+                   floor: np.ndarray | None = None,
+                   network=None) -> PlanDag:
     """Fuse DAG predecessors (with their transfer delays under the plan's
     allocation) with each task's processor-sequence predecessors (one chain
     pred per unit a width-w task occupies).
 
     ``floor`` optionally gives each task an earliest-start time (release
     times, or per-processor busy horizons when a rollout conditions on a
-    non-idle machine — see ``rollout_floors``)."""
-    order, pred, delay = _plan_arrays(g, plan)
+    non-idle machine — see ``rollout_floors``).  ``network`` optionally
+    replaces the fixed-latency edge delays with a ``NetworkModel``'s
+    (contended models use the vectorized sharing approximation — see
+    ``_plan_delay_override``)."""
+    order, pred, delay = _plan_arrays(
+        g, plan, delay_e=_plan_delay_override(g, plan, network))
     f = np.zeros(g.n) if floor is None else np.asarray(floor, dtype=np.float64)
     return PlanDag(order=jnp.asarray(order), pred=jnp.asarray(pred),
                    pred_mask=jnp.asarray(pred >= 0),
@@ -258,7 +285,8 @@ class BatchedPlanDag:
     @staticmethod
     def from_plans(items: list[tuple[TaskGraph, Plan]],
                    floors: list[np.ndarray] | None = None,
-                   pad_to: tuple[int, int] | None = None) -> "BatchedPlanDag":
+                   pad_to: tuple[int, int] | None = None,
+                   networks: list | None = None) -> "BatchedPlanDag":
         """Stack heterogeneous (graph, plan) pairs, padded to shared maxima.
 
         Items shorter than the bucket get phantom tasks: zero fan-in, zero
@@ -270,8 +298,14 @@ class BatchedPlanDag:
 
         ``floors`` optionally carries per-item (n_i,) start floors (release
         times / busy-machine conditioning); phantom tasks floor at 0.
+        ``networks`` optionally carries a per-item ``NetworkModel`` (or
+        ``None``) replacing the fixed-latency edge delays — contention
+        enters as numbers in ``pred_delay``, never as new array shapes.
         """
-        arrays = [_plan_arrays(g, plan) for g, plan in items]
+        arrays = [
+            _plan_arrays(g, plan, delay_e=_plan_delay_override(
+                g, plan, networks[i] if networks is not None else None))
+            for i, (g, plan) in enumerate(items)]
         n_pad = max(a[0].shape[0] for a in arrays)
         P_pad = max(a[1].shape[1] for a in arrays)
         if pad_to is not None:
@@ -366,7 +400,8 @@ def _bucket_makespans_sharded(bd: BatchedPlanDag,
 def bucketed_makespans(items: list[tuple[TaskGraph, Plan]],
                        times: list[np.ndarray],
                        floors: list[np.ndarray] | None = None,
-                       envelope: bool = False) -> list[np.ndarray]:
+                       envelope: bool = False,
+                       networks: list | None = None) -> list[np.ndarray]:
     """Replay many different plans under per-plan times matrices.
 
     Args:
@@ -379,6 +414,10 @@ def bucketed_makespans(items: list[tuple[TaskGraph, Plan]],
              envelope instead of the per-call maxima, so *repeated* calls
              with same-bucket items (the simulation-in-the-loop rollout
              pattern) reuse one compiled shape instead of retracing.
+      networks: optional matching per-item ``NetworkModel`` (or ``None``)
+             entries — edge delays are replaced at plan-DAG build time
+             (contended models via the vectorized sharing approximation),
+             so the bucketed path stays at <= 1 XLA compile per bucket.
 
     Returns a list of (S,) makespan arrays, one per item, in input order.
     Cost: one jitted vmapped scan per *bucket* (power-of-two envelope of
@@ -388,6 +427,8 @@ def bucketed_makespans(items: list[tuple[TaskGraph, Plan]],
         raise ValueError("items and times must align")
     if floors is not None and len(floors) != len(items):
         raise ValueError("floors and items must align")
+    if networks is not None and len(networks) != len(items):
+        raise ValueError("networks and items must align")
     if not items:
         return []
     S = {t.shape[0] for t in times}
@@ -402,7 +443,9 @@ def bucketed_makespans(items: list[tuple[TaskGraph, Plan]],
         bd = BatchedPlanDag.from_plans(
             [items[i] for i in idxs],
             floors=[floors[i] for i in idxs] if floors is not None else None,
-            pad_to=key if envelope else None)
+            pad_to=key if envelope else None,
+            networks=([networks[i] for i in idxs]
+                      if networks is not None else None))
         tt = np.stack([_pad_times(np.asarray(times[i], dtype=np.float64),
                                   bd.n_pad) for i in idxs])
         ms = np.asarray(_bucket_makespans_sharded(bd, jnp.asarray(tt)))
@@ -412,7 +455,8 @@ def bucketed_makespans(items: list[tuple[TaskGraph, Plan]],
 
 
 def sweep_suite_makespans(entries, *, noise: NoiseModel, seeds,
-                          floor_fn=None, envelope: bool = False) -> list[np.ndarray]:
+                          floor_fn=None, envelope: bool = False,
+                          network=None) -> list[np.ndarray]:
     """One-jit-per-bucket campaign sweep over heterogeneous (g, machine,
     scheduler) entries: allocate each plan once, sample its noise grid with
     the engine-identical streams, and evaluate every (entry × seed) makespan
@@ -422,7 +466,8 @@ def sweep_suite_makespans(entries, *, noise: NoiseModel, seeds,
     per-task start floors (busy machine / release times); ``envelope=True``
     pads to the full bucket envelope so repeated small sweeps — the
     simulation-in-the-loop rollout pattern of ``repro.streams.policy`` —
-    stay at one XLA compile per shape bucket across calls.
+    stay at one XLA compile per shape bucket across calls.  ``network``
+    applies one ``NetworkModel`` to every entry's replay.
 
     Returns a list of (S,) arrays aligned with ``entries``.
     """
@@ -438,4 +483,6 @@ def sweep_suite_makespans(entries, *, noise: NoiseModel, seeds,
             floors.append(np.asarray(floor_fn(g, plan), dtype=np.float64))
     return bucketed_makespans(items, rows,
                               floors=floors if floor_fn is not None else None,
-                              envelope=envelope)
+                              envelope=envelope,
+                              networks=([network] * len(items)
+                                        if network is not None else None))

@@ -77,6 +77,19 @@ class NoiseModel:
     kind: str = "none"
     scale: float = 0.0
 
+    def __post_init__(self):
+        """Reject bad configurations at construction — not mid-simulation
+        (a negative lognormal scale or a typo'd kind used to travel until
+        numpy failed deep inside ``sample``)."""
+        if self.kind not in ("none", "lognormal", "uniform"):
+            raise ValueError(f"unknown noise kind {self.kind!r}; "
+                             "have 'none', 'lognormal', 'uniform'")
+        if not self.scale >= 0.0:
+            raise ValueError(f"noise scale must be >= 0, got {self.scale}")
+        if self.kind == "uniform" and not self.scale < 1.0:
+            raise ValueError("uniform noise needs 0 <= scale < 1, "
+                             f"got {self.scale}")
+
     def sample(self, proc: np.ndarray, rng: np.random.Generator) -> np.ndarray:
         if self.kind == "none" or self.scale == 0.0:
             return proc
@@ -198,19 +211,24 @@ class SimResult:
 
 # ------------------------------------------------------------------- engine
 def _execute_plan(g: TaskGraph, plan: Plan, times: np.ndarray,
-                  release: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+                  release: np.ndarray,
+                  delay: np.ndarray | None = None
+                  ) -> tuple[np.ndarray, np.ndarray]:
     """Dynamic replay of a static plan under realized task ``times``.
 
     Data-ready times are delayed by ``g.comm`` on cross-type DAG edges
     (processor-sequence chain edges transfer nothing).  A width-w task
     appears in w per-unit sequences, so it carries one chain dependency per
     claimed unit (width-1 plans have exactly the historical single-chain
-    structure).
+    structure).  ``delay`` overrides the per-edge delays (how non-contended
+    network models plug in); the default is the historical fixed-latency
+    array, byte-for-byte.
     """
     n = g.n
     start = np.zeros(n)
     finish = np.zeros(n)
-    delay = g.edge_delays(plan.alloc)
+    if delay is None:
+        delay = g.edge_delays(plan.alloc)
     chain_prev: list[list[int]] = [[] for _ in range(n)]
     chain_next: list[list[int]] = [[] for _ in range(n)]
     for seq in plan.sequences.values():
@@ -245,6 +263,137 @@ def _execute_plan(g: TaskGraph, plan: Plan, times: np.ndarray,
                 heapq.heappush(heap, (ready, v))
     if done != n:
         raise RuntimeError("plan execution deadlocked (bad plan sequences?)")
+    return start, finish
+
+
+def _execute_plan_network(g: TaskGraph, plan: Plan, times: np.ndarray,
+                          release: np.ndarray, network
+                          ) -> tuple[np.ndarray, np.ndarray]:
+    """Fluid replay of a static plan under a *contended* network model.
+
+    Transfers are first-class in-flight objects: when a task finishes, one
+    transfer per distinct ``(source, out_id, destination type)`` crossing
+    starts (output caching — a reused output crosses a boundary once, not
+    per consumer edge), and all in-flight rates are re-solved with
+    :func:`repro.sim.network.maxmin_rates` at every start/finish event.  A
+    task starts once its release has passed, its chain predecessors have
+    finished, its same-type data has arrived, and every transfer it waits
+    on has completed.  With no overlapping transfers every object moves at
+    full bandwidth and the schedule coincides with the fixed-latency
+    replay (under the default ``size = comm × bandwidth`` objects).
+    """
+    from .network import maxmin_rates
+
+    n = g.n
+    start = np.zeros(n)
+    finish = np.zeros(n)
+    alloc = np.asarray(plan.alloc, dtype=np.int64)
+    bw = float(network.bandwidth)
+    sizes = g.data_sizes(bw)
+    oids = g.edge_out_ids()
+    chain_prev: list[list[int]] = [[] for _ in range(n)]
+    chain_next: list[list[int]] = [[] for _ in range(n)]
+    for seq in plan.sequences.values():
+        for a, b in zip(seq[:-1], seq[1:]):
+            chain_prev[b].append(a)
+            chain_next[a].append(b)
+
+    # Dependency accounting: +1 release, +1 per chain pred, +1 per same-type
+    # DAG pred, +1 per *distinct transfer key* among cross preds (dedup =
+    # the caching: several edges shipping one object wait on one transfer).
+    need = np.asarray([1 + len(c) for c in chain_prev], dtype=np.int64)
+    key_waiters: dict[tuple[int, int, int], list[int]] = {}
+    out_keys: dict[int, list[tuple[int, int, int]]] = {}  # src -> its keys
+    for j in range(n):
+        p0, p1 = g.pred_ptr[j], g.pred_ptr[j + 1]
+        mine = set()
+        for i, eid in zip(g.pred_idx[p0:p1], g.pred_eid[p0:p1]):
+            i, eid = int(i), int(eid)
+            if alloc[i] == alloc[j]:
+                need[j] += 1
+            else:
+                key = (i, int(oids[eid]), int(alloc[j]))
+                if key not in mine:
+                    mine.add(key)
+                    need[j] += 1
+                    key_waiters.setdefault(key, []).append(j)
+                    if key not in out_keys.setdefault(i, []):
+                        out_keys[i].append(key)
+
+    seq_id = 0
+    heap: list[tuple[float, int, int, int]] = []   # (time, seq, kind, task)
+    for j in range(n):                             # kind 0 = release passed
+        heapq.heappush(heap, (float(release[j]), seq_id, 0, j))
+        seq_id += 1
+    # in-flight transfers: key -> [remaining bytes, links]
+    active: dict[tuple[int, int, int], list] = {}
+    # bytes each key ships = the (shared) object size; take it from any edge
+    size_of: dict[tuple[int, int, int], float] = {}
+    for j in range(n):
+        p0, p1 = g.pred_ptr[j], g.pred_ptr[j + 1]
+        for i, eid in zip(g.pred_idx[p0:p1], g.pred_eid[p0:p1]):
+            i, eid = int(i), int(eid)
+            if alloc[i] != alloc[j]:
+                size_of[(i, int(oids[eid]), int(alloc[j]))] = float(sizes[eid])
+
+    started = 0
+    t = 0.0
+
+    def resolve(j: int, now: float):
+        nonlocal started, seq_id
+        need[j] -= 1
+        if need[j] == 0:
+            start[j] = now
+            finish[j] = now + times[j]
+            started += 1
+            heapq.heappush(heap, (float(finish[j]), seq_id, 1, j))
+            seq_id += 1
+
+    def complete_key(key, now: float):
+        active.pop(key, None)
+        for w in key_waiters.get(key, ()):
+            resolve(w, now)
+
+    def on_finish(j: int, now: float):
+        for v in list(map(int, g.succs(j))):
+            if alloc[v] == alloc[j]:
+                resolve(v, now)
+        for v in chain_next[j]:
+            resolve(v, now)
+        for key in out_keys.get(j, ()):
+            if size_of[key] <= 0.0:
+                complete_key(key, now)
+            else:
+                active[key] = [size_of[key],
+                               network.links_of(int(alloc[j]), key[2])]
+
+    while heap or active:
+        rates = None
+        t_tr = np.inf
+        if active:
+            keys = list(active)
+            rates = maxmin_rates([active[k][1] for k in keys], bw)
+            t_tr = min(t + active[k][0] / r for k, r in zip(keys, rates))
+        t_ev = heap[0][0] if heap else np.inf
+        t_next = min(t_tr, t_ev)
+        if not np.isfinite(t_next):   # pragma: no cover - deadlock guard
+            break
+        if active:
+            dt = t_next - t
+            for k, r in zip(keys, rates):
+                active[k][0] -= r * dt
+        t = t_next
+        for k in [k for k in list(active) if active[k][0] <= 1e-9 * bw]:
+            complete_key(k, t)
+        while heap and heap[0][0] <= t + 1e-15:
+            _, _, kind, j = heapq.heappop(heap)
+            if kind == 0:
+                resolve(j, max(t, float(release[j])))
+            else:
+                on_finish(j, t)
+    if started != n:
+        raise RuntimeError("contended plan replay deadlocked "
+                           "(bad plan sequences?)")
     return start, finish
 
 
@@ -369,6 +518,7 @@ def simulate(g: TaskGraph, machine: Machine, scheduler: Scheduler, *,
              order: np.ndarray | None = None,
              arrival: str = "order",
              job_of: np.ndarray | None = None,
+             network=None,
              validate: bool = True, trace: bool = False) -> SimResult:
     """Run one scheduler over one instance under seeded stochastic runtimes.
 
@@ -392,6 +542,16 @@ def simulate(g: TaskGraph, machine: Machine, scheduler: Scheduler, *,
                 (a disjoint union of whole-DAG jobs released over time):
                 the result then carries per-job completion spans and, with
                 ``trace=True``, job_release/job_finish events.
+      network:  optional ``repro.sim.network.NetworkModel`` governing how
+                cross-type transfers cost time.  ``None`` (the default) and
+                ``FixedLatencyNetwork`` are the historical fixed per-edge
+                delays, byte-identical; ``InstantNetwork`` executes
+                transfers for free (the paper's ccr=0 model at execution
+                time); contended models (``maxmin_fair``) replay static
+                plans through the fluid event loop where concurrent
+                transfers share link bandwidth.  Contended models need a
+                static plan — arrival-driven schedulers under contention
+                live in ``repro.streams`` (causal tracker semantics).
       validate: check the two feasibility invariants on the result.
       trace:    record start/finish ``TraceEvent``s (off by default: cheap
                 campaigns don't pay for them).
@@ -411,25 +571,45 @@ def simulate(g: TaskGraph, machine: Machine, scheduler: Scheduler, *,
     plan = scheduler.allocate(g, machine)
     if plan is not None:
         times = plan_times(g, plan, actual)
-        start, finish = _execute_plan(g, plan, times, release)
+        if network is None:
+            start, finish = _execute_plan(g, plan, times, release)
+        elif network.contended:
+            start, finish = _execute_plan_network(g, plan, times, release,
+                                                  network)
+        else:
+            start, finish = _execute_plan(
+                g, plan, times, release,
+                delay=network.plan_delays(g, plan.alloc))
         sched = Schedule(alloc=np.asarray(plan.alloc, dtype=np.int32),
                          proc=np.asarray(plan.proc, dtype=np.int32),
                          start=start, finish=finish,
                          width=plan.width, procs=plan.procs)
     else:
+        if network is not None and network.contended:
+            raise ValueError(
+                f"contended network model {network.name!r} needs a static "
+                "plan in simulate(); arrival-driven contention runs through "
+                "repro.streams.run_stream(network=...)")
+        g_run = g
+        if network is not None:
+            # execution-accurate readiness: the arrival loops charge the
+            # model's per-edge costs instead of the graph's fixed ones
+            g_run = dataclasses.replace(g, comm=network.effective_comm(g))
         if arrival == "ready":
             alloc, proc, start, finish, width, procs = run_arrivals_ready(
-                g, machine, scheduler, actual, release)
+                g_run, machine, scheduler, actual, release)
         else:
             alloc, proc, start, finish, width, procs = _run_arrivals(
-                g, machine, scheduler, actual, release,
+                g_run, machine, scheduler, actual, release,
                 g.topo if order is None else order)
         sched = Schedule(alloc=alloc, proc=proc, start=start, finish=finish,
                          width=width, procs=procs)
 
     if validate:
         g_actual = dataclasses.replace(g, proc=actual)
-        sched.validate(g_actual, machine)
+        edge_delay = None if network is None \
+            else network.validation_delays(g, sched.alloc)
+        sched.validate(g_actual, machine, edge_delay=edge_delay)
         if (sched.start < release - 1e-9).any():
             raise AssertionError("task starts before its release time")
 

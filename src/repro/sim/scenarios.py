@@ -291,7 +291,10 @@ def from_estee(path, *, counts=(8, 2), num_types: int = 2,
     ``durations`` (explicit per-type times, as ``to_estee`` writes), and
     ``outputs: [{"size": bytes, "consumers": [task ids]}]`` — each
     (task, consumer) pair becomes a DAG edge whose transfer cost is
-    ``size / bandwidth``, landing on ``TaskGraph.comm``.
+    ``size / bandwidth``, landing on ``TaskGraph.comm``.  The raw object
+    sizes survive as ``TaskGraph.size``, and every consumer of one output
+    dict shares one ``TaskGraph.out_id`` — contended network models ship a
+    shared output across a type boundary once, not once per edge.
 
     Tasks without explicit ``durations`` get the missing types synthesized
     with the paper's §6.1 speedup recipe from a generator seeded by
@@ -320,15 +323,22 @@ def from_estee(path, *, counts=(8, 2), num_types: int = 2,
         proc[synth] = heterogeneous_times(
             len(synth), num_types, rng, slow_frac=slow_frac, speedup=speedup,
             cpu=[float(tasks[i]["duration"]) for i in synth])
-    edges, comm = [], []
+    edges, comm, sizes, out_ids = [], [], [], []
+    next_oid = 0
     for i, t in enumerate(tasks):
         for out in t.get("outputs", ()):
+            raw = float(out.get("size", 0.0))
+            oid, next_oid = next_oid, next_oid + 1
             for c in out["consumers"]:
                 edges.append((i, ids[c]))
-                comm.append(float(out.get("size", 0.0)) / bandwidth)
+                comm.append(raw / bandwidth)
+                sizes.append(raw)
+                out_ids.append(oid)
     names = [str(t.get("name", f"t{i}")) for i, t in enumerate(tasks)]
     g = TaskGraph.build(proc, edges, names=names,
-                        comm=np.asarray(comm, dtype=np.float64))
+                        comm=np.asarray(comm, dtype=np.float64),
+                        size=np.asarray(sizes, dtype=np.float64),
+                        out_id=np.asarray(out_ids, dtype=np.int64))
     tag = os.path.splitext(os.path.basename(str(path)))[0]
     return Scenario(f"estee_{tag}_s{seed}", "estee", g,
                     _machine(counts, rng), seed)
@@ -338,16 +348,23 @@ def to_estee(g: TaskGraph, path, *, bandwidth: float = 1.0) -> None:
     """Export a ``TaskGraph`` as ESTEE-format JSON (``from_estee``'s dual).
 
     Writes explicit per-type ``durations`` (plus the scalar ``duration`` =
-    type-0 time for ESTEE compatibility) and one output per edge with
-    ``size = comm * bandwidth``, so ``from_estee(to_estee(g))`` round-trips
-    ``proc``, the edge set, and ``comm`` exactly.
+    type-0 time for ESTEE compatibility) and one output per *data object*
+    (edges sharing an ``out_id`` collapse into one output dict with all
+    their consumers; sizeless graphs default to ``size = comm * bandwidth``,
+    one object per edge), so ``from_estee(to_estee(g))`` round-trips
+    ``proc``, the edge set, ``comm``, and the output-sharing structure.
     """
     import json
+    sizes = g.data_sizes(bandwidth)
+    oids = g.edge_out_ids()
     tasks = []
     for i in range(g.n):
-        outputs = [{"size": float(g.comm[e] * bandwidth),
-                    "consumers": [int(j)]}
-                   for j, e in zip(g.succs(i), g.succ_edges(i))]
+        by_oid: dict[int, dict] = {}
+        for j, e in zip(g.succs(i), g.succ_edges(i)):
+            out = by_oid.setdefault(int(oids[e]),
+                                    {"size": float(sizes[e]), "consumers": []})
+            out["consumers"].append(int(j))
+        outputs = [by_oid[k] for k in sorted(by_oid)]
         tasks.append({
             "id": i,
             "name": g.names[i] if g.names else f"t{i}",

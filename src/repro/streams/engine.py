@@ -41,12 +41,13 @@ from .tenants import JobRecord, TaskRecord, TenantLedger
 class _JobState:
     """Mutable per-job bookkeeping while the job is in flight."""
 
-    __slots__ = ("job", "actual", "alloc", "width", "units", "proc", "start",
-                 "finish", "remaining", "committed", "wide")
+    __slots__ = ("job", "g", "actual", "alloc", "width", "units", "proc",
+                 "start", "finish", "remaining", "committed", "wide")
 
-    def __init__(self, job: Job, actual: np.ndarray):
+    def __init__(self, job: Job, actual: np.ndarray, graph=None):
         n = job.graph.n
         self.job = job
+        self.g = job.graph if graph is None else graph  # readiness view
         self.actual = actual                      # (n, Q) realized times
         self.alloc = np.zeros(n, dtype=np.int32)
         self.width = np.ones(n, dtype=np.int32)
@@ -86,19 +87,23 @@ class StreamResult:
         return float(sd.mean()) if sd.size else 1.0
 
     def utilization(self) -> np.ndarray:
-        return utilization(self.tasks, self.machine, self.horizon)
+        # active-span default (see ``metrics.utilization``): a late-starting
+        # timed replay reports the same busy fractions as its t=0 shift
+        return utilization(self.tasks, self.machine)
 
     def mean_queue_length(self) -> float:
         return mean_queue_length(self.tasks)
 
 
 def _validate_stream(states: dict[int, _JobState], tasks: list[TaskRecord],
-                     counts: list[int]) -> None:
+                     counts: list[int], network=None) -> None:
     """Feasibility across the whole stream: per-job precedence + release via
     ``Schedule.validate``, plus no overlap on any shared processor."""
     for js in states.values():
         g = dataclasses.replace(js.job.graph, proc=js.actual)
-        js.schedule().validate(g, counts)
+        edge_delay = (None if network is None
+                      else network.validation_delays(g, js.alloc))
+        js.schedule().validate(g, counts, edge_delay=edge_delay)
         if (js.start < js.job.arrival - 1e-9).any():
             raise AssertionError(
                 f"job {js.job.jid}: task starts before the job's release")
@@ -117,9 +122,42 @@ def _validate_stream(states: dict[int, _JobState], tasks: list[TaskRecord],
                     f"jobs {a.jid}/{b.jid}")
 
 
+def _contended_ready(js: _JobState, i: int, t: float, num_types: int,
+                     tracker, cache: dict, network) -> np.ndarray:
+    """(Q,) per-type data-ready times under a contended network.
+
+    Candidate type q's readiness is the max over predecessor edges of:
+    the pred's finish (same type, or the edge's object already cached at
+    q), else the *estimated* finish of shipping the object — priced on a
+    clone of the causal tracker, so multi-input candidates see their own
+    transfers contend with each other and with everything in flight.
+    """
+    g = js.g
+    sizes = g.data_sizes(network.bandwidth)
+    oids = g.edge_out_ids()
+    p0, p1 = g.pred_ptr[i], g.pred_ptr[i + 1]
+    ready = np.full(num_types, float(t))
+    for q in range(num_types):
+        trk = tracker.clone()
+        arr = float(t)
+        for p, eid in zip(g.pred_idx[p0:p1], g.pred_eid[p0:p1]):
+            p = int(p)
+            if int(js.alloc[p]) == q:
+                a = float(js.finish[p])
+            else:
+                key = (js.job.jid, p, int(oids[eid]), q)
+                a = cache.get(key)
+                if a is None:
+                    a = trk.register(float(js.finish[p]), float(sizes[eid]),
+                                     network.links_of(int(js.alloc[p]), q))
+            arr = max(arr, a)
+        ready[q] = arr
+    return ready
+
+
 def run_stream(source, machine: Machine, policy, *,
                noise: NoiseModel | None = None, seed: int = 0,
-               validate: bool = True) -> StreamResult:
+               validate: bool = True, network=None) -> StreamResult:
     """Run one policy over one job stream to completion.
 
     Args:
@@ -134,8 +172,21 @@ def run_stream(source, machine: Machine, policy, *,
       noise:   multiplicative runtime misprediction, seeded per job.
       seed:    stream-level seed; job jid draws ``default_rng([seed, jid])``.
       validate: check per-job precedence/release and cross-job non-overlap.
+      network: optional ``repro.sim.network.NetworkModel``.  Non-contended
+               models substitute their effective per-edge costs into each
+               job's readiness view (``None`` keeps today's fixed-latency
+               charging bit-for-bit).  Contended models route every
+               cross-type object through one shared causal
+               ``TransferTracker`` — concurrent jobs' transfers share link
+               bandwidth, and a reused output crossing the same boundary
+               is shipped once (output caching).
     """
     noise = noise or NoiseModel()
+    tracker = None
+    xfer_cache: dict = {}
+    if network is not None and network.contended:
+        from repro.sim.network import TransferTracker
+        tracker = TransferTracker(network)
     ledger = TenantLedger()
     state = MachineState(machine.counts)
     counts = list(machine.counts)
@@ -155,16 +206,24 @@ def run_stream(source, machine: Machine, policy, *,
                 raise ValueError(f"duplicate job id {job.jid}")
             actual = noise.sample(job.graph.proc,
                                   np.random.default_rng([seed, job.jid]))
-            js = states[job.jid] = _JobState(job, actual)
+            g_eff = None
+            if network is not None and not network.contended:
+                g_eff = dataclasses.replace(
+                    job.graph, comm=network.effective_comm(job.graph))
+            js = states[job.jid] = _JobState(job, actual, graph=g_eff)
             policy.on_job_arrival(job, t, state, machine)
             for i in np.flatnonzero(js.remaining == 0):
                 heapq.heappush(heap, (t, 1, next(seq), (js, int(i))))
             continue
 
         js, i = payload                                 # type: ignore[misc]
-        g = js.job.graph
-        ready = ready_per_type(g, i, js.finish, js.alloc, machine.num_types,
-                               floor=t)
+        g = js.g
+        if tracker is not None:
+            ready = _contended_ready(js, i, t, machine.num_types,
+                                     tracker, xfer_cache, network)
+        else:
+            ready = ready_per_type(g, i, js.finish, js.alloc,
+                                   machine.num_types, floor=t)
         d = as_decision(policy.assign(js.job, i, ready, state))
         q, w = d.rtype, d.width
         if not 0 <= q < machine.num_types:
@@ -175,6 +234,21 @@ def run_stream(source, machine: Machine, policy, *,
                 raise ValueError(f"policy {policy.name} returned width {w} "
                                  f"on a graph of max width {g.max_width}")
             actual_t /= float(g.speedup[i, w - 1])
+        if tracker is not None:
+            # commit the chosen type's transfers for real: register each
+            # uncached crossing object on the shared tracker (freezing its
+            # finish) and cache it so later consumers reuse the one send
+            p0, p1 = g.pred_ptr[i], g.pred_ptr[i + 1]
+            sizes = g.data_sizes(network.bandwidth)
+            oids = g.edge_out_ids()
+            for p, eid in zip(g.pred_idx[p0:p1], g.pred_eid[p0:p1]):
+                p = int(p)
+                if int(js.alloc[p]) != q:
+                    key = (js.job.jid, p, int(oids[eid]), q)
+                    if key not in xfer_cache:
+                        xfer_cache[key] = tracker.register(
+                            float(js.finish[p]), float(sizes[eid]),
+                            network.links_of(int(js.alloc[p]), q))
         js.alloc[i], js.width[i] = q, w
         js.wide = js.wide or w > 1
         pids, s, f = state.commit_wide(q, float(ready[q]), actual_t, w)
@@ -211,7 +285,7 @@ def run_stream(source, machine: Machine, policy, *,
                 heapq.heappush(heap, (float(nxt.arrival), 0, next(seq), nxt))
 
     if validate:
-        _validate_stream(states, ledger.tasks, counts)
+        _validate_stream(states, ledger.tasks, counts, network=network)
     return StreamResult(policy=getattr(policy, "name", type(policy).__name__),
                         machine=machine, jobs=ledger.jobs,
                         tasks=ledger.tasks, horizon=ledger.horizon)

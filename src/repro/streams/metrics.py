@@ -55,9 +55,19 @@ def tenant_summary(jobs: list[JobRecord], tau: float = BSLD_TAU
 
 def utilization(tasks: list[TaskRecord], machine: Machine,
                 horizon: float | None = None) -> np.ndarray:
-    """(Q,) realized busy fraction per resource type over the run horizon."""
+    """(Q,) realized busy fraction per resource type over the *active span*.
+
+    The default denominator is ``max(finish) - min(arrival)`` — the window
+    the stream was actually live — not ``max(finish)`` from t=0: a timed
+    replay whose first job arrives at t=1000 is just as busy as the same
+    replay shifted to t=0, and used to report a near-zero fraction.  Pass
+    ``horizon`` to override the span with an explicit *duration* (e.g. a
+    fixed observation window).
+    """
     if horizon is None:
-        horizon = max((t.finish for t in tasks), default=0.0)
+        finish = max((t.finish for t in tasks), default=0.0)
+        start = min((t.arrival for t in tasks), default=0.0)
+        horizon = finish - start
     busy = np.zeros(machine.num_types)
     for t in tasks:
         busy[t.rtype] += (t.finish - t.start) * t.width  # w units occupied

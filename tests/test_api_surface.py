@@ -28,12 +28,13 @@ API = {
         "validate_speedup",
     ],
     "repro.sim": [
-        "ADAPTERS", "Decision", "FrozenPlanScheduler", "Machine",
-        "MachineState", "NoiseModel", "Plan", "Platform",
+        "ADAPTERS", "Decision", "FixedLatencyNetwork", "FrozenPlanScheduler",
+        "InstantNetwork", "Machine", "MachineState", "MaxMinFairNetwork",
+        "NETWORKS", "NetworkModel", "NoiseModel", "Plan", "Platform",
         "SCENARIO_FAMILIES", "Scenario", "Scheduler", "SimResult",
-        "TraceEvent", "default_suite", "from_estee", "make_scenario",
-        "make_scheduler", "moldable_suite", "plan_for", "plan_times",
-        "simulate", "to_estee",
+        "TraceEvent", "default_suite", "from_estee", "make_network",
+        "make_scenario", "make_scheduler", "moldable_suite", "plan_for",
+        "plan_times", "simulate", "to_estee",
     ],
     "repro.streams": [
         "AdapterPolicy", "COMM_CANDIDATES", "ClosedLoopSource",

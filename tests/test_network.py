@@ -1,0 +1,267 @@
+"""The pluggable network layer: registry, bit parity, contention semantics.
+
+The contract under test (see ``repro.sim.network``):
+
+  * ``fixed_latency`` reproduces the historical engine bit-for-bit — equal
+    makespans AND equal SHA-256 schedule hashes against the frozen goldens;
+  * ``instant`` at execution time ≡ the paper's ``ccr=0`` model;
+  * ``maxmin_fair`` is a pure pessimization (instant ≤ fixed ≤ maxmin) that
+    collapses to ``fixed_latency`` whenever transfers never overlap;
+  * a reused output crossing the same type boundary is shipped once
+    (output caching), not once per consumer edge;
+  * the bucketed batch path's vectorized sharing approximation agrees with
+    the exact fluid engine within rtol and costs no extra XLA compiles;
+  * the contention-priced allocation LP is byte-identical to the plain
+    comm-aware one on zero-comm graphs.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.dag import TaskGraph
+from repro.sim import (FixedLatencyNetwork, InstantNetwork, Machine,
+                       MaxMinFairNetwork, NoiseModel, Plan, make_network,
+                       make_scheduler, simulate)
+from repro.sim.adapters import FrozenPlanScheduler
+from repro.sim.batch import bucketed_makespans, sample_actual_batch, trace_count
+from repro.sim.network import TransferTracker, maxmin_rates
+from repro.sim.scenarios import chain_scenario, netbound_scenario
+
+from test_sim_golden import GOLDEN_W1, _sched_hash, _w1_suite
+
+
+# ------------------------------------------------------------- registry layer
+def test_make_network_registry():
+    assert isinstance(make_network("instant"), InstantNetwork)
+    assert isinstance(make_network("fixed_latency"), FixedLatencyNetwork)
+    net = make_network("maxmin_fair", bandwidth=2.0)
+    assert isinstance(net, MaxMinFairNetwork) and net.bandwidth == 2.0
+    with pytest.raises(ValueError, match="unknown network model"):
+        make_network("carrier_pigeon")
+    with pytest.raises(ValueError, match="bandwidth"):
+        make_network("maxmin_fair", bandwidth=0.0)
+
+
+def test_noise_model_rejects_bad_parameters_at_construction():
+    """Satellite: ``NoiseModel`` validates in ``__post_init__`` — a bad model
+    fails where it is built, not at first ``sample`` deep in a sweep."""
+    with pytest.raises(ValueError, match="noise scale"):
+        NoiseModel("lognormal", -0.5)
+    with pytest.raises(ValueError, match="unknown noise kind"):
+        NoiseModel("weibull", 0.1)
+    with pytest.raises(ValueError, match="uniform"):
+        NoiseModel("uniform", 1.5)
+
+
+def test_maxmin_rates_shares_the_contended_direction_only():
+    up0, down1 = ("up", 0), ("down", 1)
+    up1, down0 = ("up", 1), ("down", 0)
+    # two 0->1 transfers split their shared links; the reverse flow is free
+    rates = maxmin_rates([(up0, down1), (up0, down1), (up1, down0)])
+    np.testing.assert_allclose(rates, [0.5, 0.5, 1.0])
+    assert maxmin_rates([]).shape == (0,)
+
+
+# -------------------------------------------------------------- bit parity
+def test_fixed_latency_reproduces_the_goldens_bit_for_bit():
+    """``network=FixedLatencyNetwork()`` replays every frozen golden cell to
+    the exact recorded makespan and SHA-256 schedule hash."""
+    net = FixedLatencyNetwork()
+    noise = NoiseModel("lognormal", 0.2)
+    for sc in _w1_suite():
+        for alg, exp in GOLDEN_W1[sc.name].items():
+            r0 = simulate(sc.graph, sc.machine, make_scheduler(alg),
+                          seed=sc.seed, network=net)
+            r1 = simulate(sc.graph, sc.machine, make_scheduler(alg),
+                          noise=noise, seed=sc.seed, network=net)
+            assert r0.makespan == exp["clean"], (sc.name, alg)
+            assert _sched_hash(r0.schedule) == exp["hash_clean"], (sc.name, alg)
+            assert r1.makespan == exp["noisy"], (sc.name, alg)
+            assert _sched_hash(r1.schedule) == exp["hash_noisy"], (sc.name, alg)
+
+
+def test_instant_equals_the_ccr0_model():
+    """Executing a comm-carrying plan under ``instant`` == executing the
+    same plan on the comm-stripped graph under the default engine."""
+    sc = netbound_scenario(seed=11)
+    g = sc.graph
+    plan = make_scheduler("hlp_ols").allocate(g, sc.machine)
+    r_net = simulate(g, sc.machine, FrozenPlanScheduler(plan),
+                     network=InstantNetwork())
+    g0 = g.with_comm(np.zeros(g.num_edges))
+    r_ccr0 = simulate(g0, sc.machine, FrozenPlanScheduler(plan))
+    assert r_net.makespan == r_ccr0.makespan
+    np.testing.assert_array_equal(r_net.schedule.start, r_ccr0.schedule.start)
+
+
+def test_network_models_are_ordered_on_netbound():
+    """instant ≤ fixed_latency ≤ maxmin_fair, with real separation on the
+    network-bound family (the contended model must *measurably* hurt)."""
+    sc = netbound_scenario(seed=2)
+    ms = {}
+    for name in ("instant", "fixed_latency", "maxmin_fair"):
+        ms[name] = simulate(sc.graph, sc.machine, make_scheduler("hlp_ols"),
+                            network=make_network(name)).makespan
+    assert ms["instant"] < ms["fixed_latency"] < ms["maxmin_fair"]
+
+
+def test_maxmin_collapses_to_fixed_latency_without_overlap():
+    """On a chain no two transfers are ever in flight together, so the
+    contended replay equals the fixed-latency one exactly."""
+    sc = chain_scenario(n=16, seed=0, ccr=1.0)
+    r_fix = simulate(sc.graph, sc.machine, make_scheduler("hlp_ols"),
+                     network=FixedLatencyNetwork())
+    r_mm = simulate(sc.graph, sc.machine, make_scheduler("hlp_ols"),
+                    network=MaxMinFairNetwork())
+    assert r_mm.makespan == r_fix.makespan
+
+
+# ------------------------------------------------------------ output caching
+def _fanout_plan():
+    """Task 0 (type 0) feeds tasks 1 and 2 (type 1); both edges carry one
+    unit of data.  Returns (graph builder, plan)."""
+    proc = np.array([[1.0, 5.0], [5.0, 1.0], [5.0, 1.0]])
+    plan = Plan(alloc=np.array([0, 1, 1], dtype=np.int32),
+                proc=np.array([0, 0, 1], dtype=np.int32),
+                sequences={(0, 0): [0], (1, 0): [1], (1, 1): [2]})
+    return proc, plan
+
+
+def test_shared_output_is_sent_once_under_contention():
+    proc, plan = _fanout_plan()
+    machine = Machine.hybrid(1, 2)
+    edges = [(0, 1), (0, 2)]
+    comm = np.array([1.0, 1.0])
+    # distinct objects: two concurrent transfers halve each other's rate
+    g_two = TaskGraph.build(proc, edges, comm=comm)
+    # one shared object: both consumers read the same transfer
+    g_one = TaskGraph.build(proc, edges, comm=comm,
+                            size=np.array([1.0, 1.0]),
+                            out_id=np.array([0, 0]))
+    net = MaxMinFairNetwork()
+    ms_two = simulate(g_two, machine, FrozenPlanScheduler(plan),
+                      network=net).makespan
+    ms_one = simulate(g_one, machine, FrozenPlanScheduler(plan),
+                      network=net).makespan
+    # shared: transfer done at 1+1=2, task finishes at 3
+    # distinct: both transfers share the uplink, done at 1+2=3, finish at 4
+    assert ms_one == pytest.approx(3.0)
+    assert ms_two == pytest.approx(4.0)
+
+
+def test_transfer_tracker_is_causal_and_exact_when_disjoint():
+    net = MaxMinFairNetwork()
+    trk = TransferTracker(net)
+    links = net.links_of(0, 1)
+    # lone transfer: exact fixed-latency duration
+    assert trk.register(0.0, 2.0, links) == pytest.approx(2.0)
+    # second transfer on the same links while the first is in flight:
+    # rate 1/2 until t=2, then full rate — 1 unit done by t=2, 1 left
+    assert trk.estimate(0.0, 2.0, links) == pytest.approx(3.0)
+    # estimates must not mutate state
+    assert trk.estimate(0.0, 2.0, links) == pytest.approx(3.0)
+    # disjoint links: unaffected
+    assert trk.register(0.0, 2.0, net.links_of(1, 0)) == pytest.approx(2.0)
+
+
+# ----------------------------------------------------------------- batch path
+def test_batch_contention_tracks_the_engine_within_rtol():
+    """The vectorized sharing approximation vs the exact fluid engine, and
+    no extra XLA compiles for the contended replay."""
+    net = MaxMinFairNetwork()
+    for seed in (0, 1, 4):
+        sc = netbound_scenario(seed=seed)
+        plan = make_scheduler("hlp_ols").allocate(sc.graph, sc.machine)
+        grid = sample_actual_batch(sc.graph, plan, NoiseModel(), [0])
+        t0 = trace_count("bucket")
+        approx = bucketed_makespans([(sc.graph, plan)], [grid],
+                                    networks=[net])[0][0]
+        assert trace_count("bucket") - t0 <= 1
+        exact = simulate(sc.graph, sc.machine, FrozenPlanScheduler(plan),
+                         network=net).makespan
+        assert approx == pytest.approx(exact, rel=0.15), seed
+
+
+def test_batch_fixed_latency_is_byte_identical_to_no_network():
+    sc = netbound_scenario(seed=6)
+    plan = make_scheduler("hlp_ols").allocate(sc.graph, sc.machine)
+    grid = sample_actual_batch(sc.graph, plan, NoiseModel("lognormal", 0.2),
+                               [0, 1, 2])
+    base = bucketed_makespans([(sc.graph, plan)], [grid])[0]
+    fixed = bucketed_makespans([(sc.graph, plan)], [grid],
+                               networks=[FixedLatencyNetwork()])[0]
+    np.testing.assert_array_equal(base, fixed)
+
+
+# ----------------------------------------------------- contended allocation
+def test_contention_pricing_is_identity_on_zero_comm():
+    """``contention=True`` must not move the LP when there is nothing to
+    price: zero-comm graphs allocate identically."""
+    from conftest import random_dag
+    from repro.core.hlp import solve_hlp
+
+    g = random_dag(3, n=14)
+    a = solve_hlp(g, 4, 2, comm_aware=True)
+    b = solve_hlp(g, 4, 2, comm_aware=True, contention=True)
+    assert a.lp_value == b.lp_value
+    np.testing.assert_array_equal(a.alloc, b.alloc)
+
+
+def test_contention_aware_allocation_helps_under_contention():
+    """On the netbound family, the contention-priced CAHLP allocation beats
+    the comm-oblivious hlp_ols under the maxmin model on average."""
+    from repro.sim.adapters import CommAwareHLPScheduler
+
+    net = MaxMinFairNetwork()
+    ratios = []
+    for seed in range(4):
+        sc = netbound_scenario(seed=seed)
+        obl = simulate(sc.graph, sc.machine, make_scheduler("hlp_ols"),
+                       network=net).makespan
+        ctn = simulate(sc.graph, sc.machine,
+                       CommAwareHLPScheduler(contention=True),
+                       network=net).makespan
+        ratios.append(obl / ctn)
+    assert float(np.mean(ratios)) > 1.0
+
+
+def test_expected_link_load_shape_and_floor():
+    from repro.core.allocation import expected_link_load
+    from conftest import random_dag
+
+    g = random_dag(5, n=20, p_edge=0.3)
+    load = expected_link_load(g, (4, 2))
+    assert load.shape == (g.num_edges,)
+    assert (load >= 1.0).all()
+    # homogeneous machine (one pool) can never cross: p_cross = 0
+    np.testing.assert_allclose(expected_link_load(g, (6,)), 1.0)
+
+
+# ----------------------------------------------------------- engine guards
+def test_contended_arrival_driven_simulate_is_rejected():
+    sc = netbound_scenario(seed=0)
+    with pytest.raises(ValueError, match="needs a static plan"):
+        simulate(sc.graph, sc.machine, make_scheduler("er_ls"),
+                 network=MaxMinFairNetwork())
+
+
+def test_taskgraph_rejects_malformed_data_objects():
+    proc = np.ones((3, 2))
+    edges = [(0, 1), (1, 2)]
+    with pytest.raises(ValueError):
+        TaskGraph.build(proc, edges, size=np.array([1.0]))      # wrong shape
+    with pytest.raises(ValueError):
+        TaskGraph.build(proc, edges, size=np.array([-1.0, 2.0]))  # negative
+    with pytest.raises(ValueError):
+        TaskGraph.build(proc, edges, out_id=np.array([0]))      # wrong shape
+
+
+def test_data_sizes_and_out_ids_default_consistently():
+    proc = np.ones((3, 2))
+    g = TaskGraph.build(proc, [(0, 1), (0, 2)], comm=np.array([2.0, 3.0]))
+    np.testing.assert_allclose(g.data_sizes(4.0), [8.0, 12.0])
+    np.testing.assert_array_equal(g.edge_out_ids(), [0, 1])
+    # with_comm drops stale sizes so comm and size can never disagree
+    g2 = dataclasses.replace(g, size=np.array([5.0, 5.0]))
+    assert g2.with_comm(np.zeros(2)).size is None
