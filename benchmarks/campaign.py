@@ -213,8 +213,12 @@ def sim_sweep(full: bool = False, noise_scale: float = 0.2,
 
     # Phase 1: allocate every static plan, queue its whole seed grid.  The
     # first row of each grid is the noise-free replay, so clean + noisy
-    # makespans come out of one bucketed evaluation.
+    # makespans come out of one bucketed evaluation.  Each sub-campaign's
+    # bucketed evaluation is wall-clocked separately (``phase_seconds``) so
+    # the BENCH_sim.json trajectory can localize speed regressions.
     traces0 = trace_count("bucket")
+    tr_contended0 = trace_count("contended")
+    phase_seconds: dict[str, float] = {}
     items, grids, keys = [], [], []
     lbs = {}
     for sc in suite:
@@ -229,7 +233,9 @@ def sim_sweep(full: bool = False, noise_scale: float = 0.2,
             items.append((sc.graph, plan))
             grids.append(np.vstack([clean_row, noisy]))
             keys.append((sc.name, name))
+    t0 = time.perf_counter()
     sweeps = bucketed_makespans(items, grids)
+    phase_seconds["static"] = time.perf_counter() - t0
 
     # Moldable sub-campaigns: width-aware MHLP vs its width-1 restriction,
     # and comm-aware CAMHLP vs oblivious MHLP on CCR-enabled instances —
@@ -252,7 +258,9 @@ def sim_sweep(full: bool = False, noise_scale: float = 0.2,
             m_items.append((sc.graph, plan))
             m_grids.append(np.vstack([clean_row, noisy]))
             m_keys.append((sc.name, name))
+    t0 = time.perf_counter()
     m_sweeps = bucketed_makespans(m_items, m_grids)
+    phase_seconds["moldable"] = time.perf_counter() - t0
 
     # Network-model sub-grid (netbound family): the comm-oblivious hlp_ols
     # allocation and the contention-aware CAHLP variant, each replayed under
@@ -281,8 +289,11 @@ def sim_sweep(full: bool = False, noise_scale: float = 0.2,
                 n_grids.append(np.vstack([clean_row, noisy]))
                 n_keys.append((sc.name, name, net_name))
                 n_nets.append(net)
+    t0 = time.perf_counter()
     n_sweeps = bucketed_makespans(n_items, n_grids, networks=n_nets)
+    phase_seconds["network"] = time.perf_counter() - t0
     compiles = trace_count("bucket") - traces0
+    tr_contended1 = trace_count("contended")
 
     rows, agg = [], defaultdict(list)
     results = {k: (float(v[0]), v[1:]) for k, v in zip(keys, sweeps)}
@@ -376,11 +387,16 @@ def sim_sweep(full: bool = False, noise_scale: float = 0.2,
                ["scenario", "family", "scheduler", "lower_bound",
                 "makespan_clean", "makespan_noisy_mean", "makespan_noisy_std",
                 "makespan_noisy_p95", "seeds"], rows)
+    plans = len(items) + len(m_items) + len(n_items)
     return {"ratios": {k: float(np.mean(v)) for k, v in agg.items()},
             "schedulers": static + online, "runs": n_runs,
             "scenarios": len(suite) + len(m_suite) + len(n_suite),
             "compiles": compiles,
-            "plans": len(items) + len(m_items) + len(n_items)}
+            "plans": plans,
+            "phase_seconds": phase_seconds,
+            # every bucketed plan evaluates 1 clean + num_seeds noisy rows
+            "evals": plans * (num_seeds + 1),
+            "contended_compiles": tr_contended1 - tr_contended0}
 
 
 # ------------------------------------------------------ open-system streams

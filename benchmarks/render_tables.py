@@ -15,12 +15,24 @@ Sections:
     (``python -m benchmarks.run --only streams``): per (arrival process,
     tenant), the p50/p95 bounded slowdown every stream policy delivers —
     the open-system companion of the ratio table.
+
+Perf-trajectory CLI (the ``repro.bench.v1`` files ``benchmarks.run``
+writes):
+
+  * ``--diff-bench OLD NEW`` — side-by-side wall-clock / compile-count /
+    throughput / metric deltas of two ``BENCH_sim.json`` trajectories
+    (how a PR moved the campaign's speed).
+  * ``--check-bench NEW PINNED [--rtol R]`` — exit 1 when the diffable
+    makespan metrics of ``NEW`` drift from the pinned values (the CI
+    regression gate; ``benchmarks/BENCH_pinned.json``).
 """
 from __future__ import annotations
 
+import argparse
 import csv
 import json
 import os
+import sys
 from collections import defaultdict
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
@@ -191,7 +203,119 @@ def render_streams(path: str = None) -> str:
     return "\n".join(out)
 
 
-if __name__ == "__main__":
+# ----------------------------------------------------- perf trajectory diff
+def load_bench(path: str) -> dict:
+    """Load and schema-check one ``repro.bench.v1`` trajectory file."""
+    with open(path) as f:
+        doc = json.load(f)
+    schema = doc.get("schema")
+    if schema != "repro.bench.v1":
+        raise ValueError(f"{path}: expected schema repro.bench.v1, "
+                         f"got {schema!r}")
+    return doc
+
+
+def _fmt_delta(old: float, new: float) -> str:
+    if old == 0:
+        return f"{old:.4g} -> {new:.4g}"
+    return f"{old:.4g} -> {new:.4g} ({(new / old - 1) * 100:+.1f}%)"
+
+
+def render_bench_diff(old_path: str, new_path: str) -> str:
+    """Human-readable delta of two perf trajectories (old -> new)."""
+    old, new = load_bench(old_path), load_bench(new_path)
+    out = [f"# BENCH diff: {old_path} -> {new_path}"]
+    ho, hn = old.get("host", {}), new.get("host", {})
+    for k in sorted(set(ho) | set(hn)):
+        if ho.get(k) != hn.get(k):
+            out.append(f"  host.{k}: {ho.get(k)} -> {hn.get(k)}  "
+                       "(!! trajectories measured on different substrates)")
+    ro, rn = old.get("run", {}), new.get("run", {})
+    for k in ("seed", "full"):
+        if ro.get(k) != rn.get(k):
+            out.append(f"  run.{k}: {ro.get(k)} -> {rn.get(k)}  "
+                       "(!! different campaign grids)")
+    bo, bn = old.get("benches", {}), new.get("benches", {})
+    for name in sorted(set(bo) | set(bn)):
+        if name not in bo or name not in bn:
+            out.append(f"  {name}: only in "
+                       f"{'new' if name not in bo else 'old'}")
+            continue
+        o, n = bo[name], bn[name]
+        out.append(f"  {name}:")
+        out.append(f"    wall_s: {_fmt_delta(o['wall_s'], n['wall_s'])}")
+        for k in ("compiles", "contended_compiles", "plans", "evals",
+                  "throughput_plans_per_sec",
+                  "throughput_plans_per_sec_per_device"):
+            if k in o or k in n:
+                out.append(f"    {k}: "
+                           f"{_fmt_delta(o.get(k, 0), n.get(k, 0))}")
+        po, pn = o.get("phase_seconds", {}), n.get("phase_seconds", {})
+        for k in sorted(set(po) | set(pn)):
+            out.append(f"    phase_seconds.{k}: "
+                       f"{_fmt_delta(po.get(k, 0), pn.get(k, 0))}")
+        mo, mn = o.get("metrics", {}), n.get("metrics", {})
+        moved = [(k, mo[k], mn[k]) for k in sorted(set(mo) & set(mn))
+                 if abs(mn[k] - mo[k]) > 1e-12]
+        for k, a, b in moved:
+            out.append(f"    metrics.{k}: {_fmt_delta(a, b)}")
+        if (mo or mn) and not moved:
+            out.append(f"    metrics: {len(mo)} values, all identical")
+    return "\n".join(out)
+
+
+def check_bench(new_path: str, pinned_path: str, rtol: float = 0.05) -> int:
+    """Fail (return 1) when diffable makespan metrics drift from pins.
+
+    Compares ``benches.sim.metrics`` of ``new_path`` against every metric
+    the pinned file carries: a pin is violated when
+    ``|new - pinned| > rtol * |pinned|``.  Metrics absent from the new
+    trajectory also fail (a silently dropped metric is a regression).
+    Timings/throughput are intentionally *not* checked — they belong to the
+    machine; the makespan metrics belong to the algorithms.
+    """
+    new = load_bench(new_path)
+    pinned = load_bench(pinned_path)
+    new_m = new.get("benches", {}).get("sim", {}).get("metrics", {})
+    pin_m = pinned.get("benches", {}).get("sim", {}).get("metrics", {})
+    if not pin_m:
+        print(f"# check-bench: {pinned_path} pins no sim metrics — nothing "
+              "to check", file=sys.stderr)
+        return 1
+    bad = []
+    for k, want in sorted(pin_m.items()):
+        got = new_m.get(k)
+        if got is None:
+            bad.append(f"  {k}: pinned {want:.6g} but missing from new run")
+        elif abs(got - want) > rtol * abs(want):
+            bad.append(f"  {k}: {got:.6g} drifted from pinned {want:.6g} "
+                       f"({(got / want - 1) * 100:+.2f}% > ±{rtol * 100:.0f}%)")
+    if bad:
+        print(f"# check-bench FAILED ({len(bad)}/{len(pin_m)} metrics "
+              f"drifted beyond rtol={rtol}):")
+        print("\n".join(bad))
+        return 1
+    print(f"# check-bench OK: {len(pin_m)} pinned sim metrics within "
+          f"rtol={rtol}")
+    return 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--diff-bench", nargs=2, metavar=("OLD", "NEW"),
+                    help="diff two repro.bench.v1 trajectory files")
+    ap.add_argument("--check-bench", nargs=2, metavar=("NEW", "PINNED"),
+                    help="fail (exit 1) when NEW's sim metrics drift from "
+                         "PINNED beyond --rtol")
+    ap.add_argument("--rtol", type=float, default=0.05,
+                    help="relative tolerance for --check-bench (default 0.05)")
+    args = ap.parse_args(argv)
+    if args.diff_bench:
+        print(render_bench_diff(*args.diff_bench))
+        return 0
+    if args.check_bench:
+        return check_bench(*args.check_bench, rtol=args.rtol)
     try:
         print(render())
     except FileNotFoundError:
@@ -200,3 +324,8 @@ if __name__ == "__main__":
     print(render_sim())
     print(render_comm_alloc())
     print(render_streams())
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

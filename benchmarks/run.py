@@ -4,7 +4,11 @@ Usage:  PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME[,NAME]]
 
 Prints ``name,us_per_call,derived`` CSV lines (one per algorithm/campaign)
 followed by a summary that checks the paper's §6 experimental claims.
-Detailed per-instance CSVs land in artifacts/.
+Detailed per-instance CSVs land in artifacts/, and every run writes a
+``BENCH_sim.json`` perf trajectory (schema ``repro.bench.v1``: wall-clock
+per sub-campaign, XLA compile counts, plans-evaluated/sec per device, mesh
+shape, seed) — diff two of them across PRs with
+``python -m benchmarks.render_tables --diff-bench OLD NEW``.
 """
 from __future__ import annotations
 
@@ -13,6 +17,11 @@ import json
 import os
 import sys
 import time
+
+#: structured per-bench extras for the BENCH_sim.json trajectory — bench
+#: functions stash metrics here (keyed by bench name) as they run, and
+#: ``main`` merges them with its own wall-clock/line accounting.
+BENCH_EXTRAS: dict[str, dict] = {}
 
 
 def bench_offline2(full: bool, seed: int = 0) -> list[str]:
@@ -107,9 +116,30 @@ def bench_sim(full: bool, seed: int = 0) -> list[str]:
               / r["ratios"]["net_instant_hlp_ols"] - 1) * 100
     lines.append(f"sim/contention_gap,{per:.0f},oblivious_penalty_pct={ctgain:.2f};"
                  f"netmodel_spread_pct={spread:.2f}")
+    import jax
+    bucket_s = sum(r["phase_seconds"].values())
+    throughput = r["evals"] / max(bucket_s, 1e-9)
+    per_device = throughput / max(jax.device_count(), 1)
+    lines.append(f"sim/throughput_plans_per_sec,{per:.0f},"
+                 f"plans_per_sec={throughput:.1f};"
+                 f"per_device={per_device:.1f}")
+    BENCH_EXTRAS["sim"] = {
+        "phase_seconds": r["phase_seconds"],
+        "compiles": r["compiles"],
+        "contended_compiles": r["contended_compiles"],
+        "plans": r["plans"],
+        "evals": r["evals"],
+        "runs": r["runs"],
+        "scenarios": r["scenarios"],
+        "throughput_plans_per_sec": throughput,
+        "throughput_plans_per_sec_per_device": per_device,
+        "metrics": r["ratios"],
+    }
     print(f"# sim: {r['runs']} runs over {r['scenarios']} scenarios in "
           f"{dt:.1f}s | {r['plans']} static plans in {r['compiles']} XLA "
-          f"compiles (bucketed) | LB ratios " +
+          f"compiles (bucketed, +{r['contended_compiles']} contended) | "
+          f"{throughput:.0f} plan-evals/s over the bucketed phases | "
+          f"LB ratios " +
           " ".join(f"{a}={r['ratios'][a]:.3f}" for a in r["schedulers"]))
     print("#   noise degradation (noisy/clean): " +
           " ".join(f"{a}={r['ratios']['degrade_' + a]:.3f}"
@@ -204,7 +234,19 @@ def bench_solver(full: bool, seed: int = 0) -> list[str]:
 
 def bench_kernels(full: bool, seed: int = 0) -> list[str]:
     from . import kernel_bench
-    return kernel_bench.run(full)
+    lines = kernel_bench.run(full)
+    # land the kernel timings in the BENCH_sim.json trajectory: parse the
+    # ``name,us_per_call,derived`` lines back into structured numbers
+    timings = {}
+    for line in lines:
+        parts = line.split(",")
+        if len(parts) >= 2:
+            try:
+                timings[parts[0]] = float(parts[1])
+            except ValueError:
+                pass
+    BENCH_EXTRAS["kernels"] = {"us_per_call": timings}
+    return lines
 
 
 BENCHES = {
@@ -241,6 +283,56 @@ def list_registry() -> None:
         print(f"  {name}")
 
 
+def _host_info() -> dict:
+    """The execution substrate a trajectory was measured on — what makes
+    two BENCH_sim.json files comparable (or explains why they aren't)."""
+    import platform as _platform
+
+    import jax
+
+    from repro.sim import campaign_mesh, contention_kernel, shard_backend
+
+    return {
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "mesh_shape": {k: int(v) for k, v in campaign_mesh().shape.items()},
+        "shard_backend": shard_backend(),
+        "contention_kernel": contention_kernel(),
+        "jax": jax.__version__,
+        "python": _platform.python_version(),
+    }
+
+
+def write_bench_json(path: str, args, names: list[str],
+                     benches: dict[str, dict]) -> None:
+    """Write the ``repro.bench.v1`` perf trajectory.
+
+    Schema (stable — ``render_tables --diff-bench`` and the CI pinned-value
+    check parse it):
+
+    * ``schema``: the literal ``"repro.bench.v1"``.
+    * ``run``: {seed, full, targets} — the harness invocation.
+    * ``host``: backend / device_count / mesh_shape / shard_backend /
+      contention_kernel / jax / python.
+    * ``benches.<name>``: {wall_s, lines, ...extras} — every target gets
+      its wall-clock and raw CSV lines; ``sim`` adds phase_seconds,
+      compile counts, plans/evals, throughput_plans_per_sec(_per_device)
+      and the ``metrics`` ratio dict (the diffable makespan metrics);
+      ``kernels`` adds its us_per_call timings.
+    """
+    doc = {
+        "schema": "repro.bench.v1",
+        "run": {"seed": args.seed, "full": bool(args.full), "targets": names},
+        "host": _host_info(),
+        "benches": benches,
+    }
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {path}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
@@ -253,6 +345,11 @@ def main() -> None:
     ap.add_argument("--list", action="store_true",
                     help="print the (scheduler × scenario × platform) "
                          "registry and exit")
+    ap.add_argument("--bench-json", type=str,
+                    default=os.path.join(os.path.dirname(__file__), "..",
+                                         "artifacts", "BENCH_sim.json"),
+                    help="where to write the repro.bench.v1 perf trajectory "
+                         "(empty string disables)")
     args = ap.parse_args()
     if args.list:
         list_registry()
@@ -267,15 +364,24 @@ def main() -> None:
           f"base_seed={args.seed}", flush=True)
     all_lines = ["name,us_per_call,derived"]
     failed: list[str] = []
+    benches: dict[str, dict] = {}
     for name in names:
         print(f"== {name} ==", flush=True)
+        t0 = time.perf_counter()
         try:
-            all_lines += BENCHES[name](args.full, args.seed)
+            lines = BENCHES[name](args.full, args.seed)
+            all_lines += lines
+            benches[name] = {"wall_s": time.perf_counter() - t0,
+                             "lines": lines, **BENCH_EXTRAS.get(name, {})}
         except Exception as e:  # finish the harness, but don't hide the loss
             print(f"# {name} FAILED: {type(e).__name__}: {e}")
             all_lines.append(f"{name},0,FAILED")
             failed.append(name)
+            benches[name] = {"wall_s": time.perf_counter() - t0,
+                             "lines": [], "failed": True}
     print("\n".join(all_lines))
+    if args.bench_json:
+        write_bench_json(args.bench_json, args, names, benches)
     if failed:   # CI must see a red exit when any sub-campaign raised
         print(f"# FAILED sub-campaigns: {','.join(failed)}", file=sys.stderr)
         sys.exit(1)

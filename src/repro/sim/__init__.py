@@ -48,9 +48,15 @@ Beyond the paper's static pipeline it adds:
     heterogeneous campaign of static plans: plans are grouped by the
     power-of-two envelope of (tasks, fan-in), padded to per-bucket maxima,
     and each bucket runs as one jitted vmapped scan (≤ 1 XLA compile per
-    bucket, ``pmap``-sharded across devices when several are visible).
-    Plan tensors carry the full (type, width) decision — the width column
-    rides along and realized times are curve-shrunk before the scan.
+    bucket), its plan axis sharded with ``shard_map`` over the explicit
+    1-D ``campaign_mesh()`` when several devices are visible
+    (``set_campaign_mesh`` installs a custom mesh, ``REPRO_SHARD_BACKEND``
+    selects the legacy ``pmap`` path or disables sharding).  Contended
+    networks are priced by a jitted whole-bucket fluid fixpoint
+    (``contention_kernel``/``set_contention_kernel`` switch to the numpy
+    oracle).  Plan tensors carry the full (type, width) decision — the
+    width column rides along and realized times are curve-shrunk before
+    the scan.
 
 Entry points::
 
@@ -67,10 +73,12 @@ Entry points::
 from repro.platform import Decision, Platform
 
 from .adapters import ADAPTERS, FrozenPlanScheduler, make_scheduler, plan_for
+from .batch import campaign_mesh, set_campaign_mesh, shard_backend
 from .engine import (Machine, MachineState, NoiseModel, Plan, Scheduler,
                      SimResult, TraceEvent, plan_times, simulate)
 from .network import (NETWORKS, FixedLatencyNetwork, InstantNetwork,
-                      MaxMinFairNetwork, NetworkModel, make_network)
+                      MaxMinFairNetwork, NetworkModel, contention_kernel,
+                      make_network, set_contention_kernel)
 from .scenarios import (SCENARIO_FAMILIES, Scenario, default_suite,
                         from_estee, make_scenario, moldable_suite, to_estee)
 
@@ -79,7 +87,9 @@ __all__ = [
     "Decision", "Platform", "Machine", "MachineState", "NoiseModel", "Plan",
     "Scheduler", "SimResult", "TraceEvent", "plan_times", "simulate",
     "NETWORKS", "NetworkModel", "InstantNetwork", "FixedLatencyNetwork",
-    "MaxMinFairNetwork", "make_network",
+    "MaxMinFairNetwork", "contention_kernel", "make_network",
+    "set_contention_kernel",
+    "campaign_mesh", "set_campaign_mesh", "shard_backend",
     "SCENARIO_FAMILIES", "Scenario", "default_suite", "from_estee",
     "make_scenario", "moldable_suite", "to_estee",
 ]

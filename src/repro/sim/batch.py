@@ -21,8 +21,18 @@ Two granularities:
     campaign — the (scenario × scheduler × seed) grid of
     ``benchmarks.campaign.sim_sweep`` — costs at most one XLA compile per
     bucket (``trace_count()`` exposes the actual number for tests).  When
-    more than one device is visible the bucket's plan axis is sharded
-    ``jax.pmap``-style across devices.
+    more than one device is visible the bucket's plan axis is sharded with
+    ``shard_map`` over the explicit 1-D ``campaign_mesh()``; the plan axis
+    is padded to a mesh-divisible count first (no divides-evenly
+    assumption) and sliced back.  ``REPRO_SHARD_BACKEND`` selects the
+    legacy ``pmap`` path or disables sharding for exact-parity checks.
+
+Contended networks (``maxmin_fair``) are priced at plan-DAG *build* time:
+by default a whole bucket of plans solves its replay/fluid fixpoint inside
+one jitted program (``contended_bucket_delays`` below, built on
+``network.fluid_finishes_jax``); ``set_contention_kernel("numpy")`` routes
+through the per-plan numpy oracle instead.  Either way contention enters
+``pred_delay`` as numbers, never as new array shapes.
 
 Padding scheme: a plan with n tasks and max fan-in P lands in bucket
 ``(next_pow2(n), next_pow2(P))`` and is padded to that bucket's maxima —
@@ -44,6 +54,7 @@ property tests assert rtol <= 1e-5.
 from __future__ import annotations
 
 import dataclasses
+import os
 from collections import defaultdict
 from functools import partial
 
@@ -58,7 +69,7 @@ from .engine import Machine, NoiseModel, Plan
 #: number of XLA traces of the bucket evaluator since process start —
 #: incremented inside the jitted function, so it advances once per compile
 #: (shape bucket), not once per call.  Tests assert <= 1 per bucket.
-_TRACES = {"bucket": 0, "single": 0}
+_TRACES = {"bucket": 0, "single": 0, "contended": 0}
 
 
 def trace_count(kind: str = "bucket") -> int:
@@ -91,41 +102,73 @@ class PlanDag:
 
 def _plan_delay_override(g: TaskGraph, plan: Plan, network):
     """Per-edge delay vector a ``NetworkModel`` implies for this plan, or
-    ``None`` for the default fixed-latency charging.
+    ``None`` for the default fixed-latency charging."""
+    return _delay_overrides([(g, plan)], [network])[0]
 
-    Contended models (``maxmin_fair``) have no closed-form per-edge delay;
-    they get the vectorized bandwidth-sharing *approximation* of
-    ``repro.sim.network.contended_plan_delays`` — each transfer's duration
-    scaled by the time-averaged concurrency on its busiest link during the
-    noise-free replay.  The approximation is plain numpy at plan-DAG build
-    time, so array shapes (and hence XLA compiles) are unchanged.
+
+def _delay_overrides(items, networks) -> list:
+    """Per-item per-edge delay vectors (or ``None``) the models imply.
+
+    Non-contended models reduce to closed-form delay arrays.  Contended
+    models (``maxmin_fair``) price each plan through the fixed-start
+    max-min fluid fixpoint; by default all contended items of the list are
+    solved *together* by the jitted whole-bucket kernel
+    (:func:`contended_bucket_delays` — one compile per padded-shape
+    envelope), while ``set_contention_kernel("numpy")`` routes each through
+    the per-plan numpy oracle ``contended_plan_delays`` instead.  Either
+    way contention enters the plan DAG as delay *numbers*, never as new
+    array shapes.
     """
-    if network is None:
-        return None
-    if getattr(network, "contended", False):
-        from .engine import plan_times
-        from .network import contended_plan_delays
-        return contended_plan_delays(g, plan, plan_times(g, plan, g.proc),
-                                     network)
-    return network.plan_delays(g, plan.alloc)
+    if networks is None:
+        return [None] * len(items)
+    out: list = [None] * len(items)
+    contended = []
+    for i, ((g, plan), net) in enumerate(zip(items, networks)):
+        if net is None:
+            continue
+        if getattr(net, "contended", False):
+            contended.append(i)
+        else:
+            out[i] = net.plan_delays(g, plan.alloc)
+    if contended:
+        from .network import contention_kernel
+        if contention_kernel() == "numpy":
+            from .engine import plan_times
+            from .network import contended_plan_delays
+            for i in contended:
+                g, plan = items[i]
+                out[i] = contended_plan_delays(
+                    g, plan, plan_times(g, plan, g.proc), networks[i])
+        else:
+            delays = contended_bucket_delays([items[i] for i in contended],
+                                             [networks[i] for i in contended])
+            for i, d in zip(contended, delays):
+                out[i] = d
+    return out
 
 
 def _plan_arrays(g: TaskGraph, plan: Plan, delay_e: np.ndarray | None = None):
-    """Numpy (order, pred, delay) of the augmented DAG, minimally padded."""
+    """Numpy (order, pred, delay, pred_eid) of the augmented DAG, minimally
+    padded.  ``pred_eid[j, k]`` is the graph edge behind pred slot ``(j, k)``
+    (−1 on chain/padding slots) — what maps pred slots to transfers when the
+    contended kernel re-prices delays inside the compiled program."""
     n = g.n
     if delay_e is None:
         delay_e = g.edge_delays(plan.alloc)
     preds: list[list[int]] = [[] for _ in range(n)]
     delays: list[list[float]] = [[] for _ in range(n)]
+    eids: list[list[int]] = [[] for _ in range(n)]
     for j in range(n):
         p0, p1 = g.pred_ptr[j], g.pred_ptr[j + 1]
         for i, eid in zip(g.pred_idx[p0:p1], g.pred_eid[p0:p1]):
             preds[j].append(int(i))
             delays[j].append(float(delay_e[eid]))
+            eids[j].append(int(eid))
     for seq in plan.sequences.values():
         for a, b in zip(seq[:-1], seq[1:]):
             preds[b].append(a)
             delays[b].append(0.0)
+            eids[b].append(-1)
 
     # Kahn over the augmented graph (it is acyclic by plan feasibility).
     succs: list[list[int]] = [[] for _ in range(n)]
@@ -151,10 +194,12 @@ def _plan_arrays(g: TaskGraph, plan: Plan, delay_e: np.ndarray | None = None):
     P = max(1, max((len(p) for p in preds), default=1))
     pred = np.full((n, P), -1, dtype=np.int32)
     delay = np.zeros((n, P), dtype=np.float64)
+    pred_eid = np.full((n, P), -1, dtype=np.int64)
     for j, pj in enumerate(preds):
         pred[j, : len(pj)] = pj
         delay[j, : len(pj)] = delays[j]
-    return order, pred, delay
+        pred_eid[j, : len(pj)] = eids[j]
+    return order, pred, delay, pred_eid
 
 
 def _plan_width(g: TaskGraph, plan: Plan) -> np.ndarray:
@@ -175,9 +220,9 @@ def build_plan_dag(g: TaskGraph, plan: Plan,
     times, or per-processor busy horizons when a rollout conditions on a
     non-idle machine — see ``rollout_floors``).  ``network`` optionally
     replaces the fixed-latency edge delays with a ``NetworkModel``'s
-    (contended models use the vectorized sharing approximation — see
-    ``_plan_delay_override``)."""
-    order, pred, delay = _plan_arrays(
+    (contended models solve the max-min fluid fixpoint — see
+    ``_delay_overrides``)."""
+    order, pred, delay, _ = _plan_arrays(
         g, plan, delay_e=_plan_delay_override(g, plan, network))
     f = np.zeros(g.n) if floor is None else np.asarray(floor, dtype=np.float64)
     return PlanDag(order=jnp.asarray(order), pred=jnp.asarray(pred),
@@ -302,10 +347,9 @@ class BatchedPlanDag:
         ``None``) replacing the fixed-latency edge delays — contention
         enters as numbers in ``pred_delay``, never as new array shapes.
         """
-        arrays = [
-            _plan_arrays(g, plan, delay_e=_plan_delay_override(
-                g, plan, networks[i] if networks is not None else None))
-            for i, (g, plan) in enumerate(items)]
+        delay_es = _delay_overrides(items, networks)
+        arrays = [_plan_arrays(g, plan, delay_e=delay_es[i])
+                  for i, (g, plan) in enumerate(items)]
         n_pad = max(a[0].shape[0] for a in arrays)
         P_pad = max(a[1].shape[1] for a in arrays)
         if pad_to is not None:
@@ -316,7 +360,7 @@ class BatchedPlanDag:
         delay = np.zeros((B, n_pad, P_pad), dtype=np.float64)
         floor = np.zeros((B, n_pad), dtype=np.float64)
         width = np.ones((B, n_pad), dtype=np.int32)
-        for b, (o, p, d) in enumerate(arrays):
+        for b, (o, p, d, _) in enumerate(arrays):
             n, Pi = p.shape
             order[b, :n] = o
             order[b, n:] = n  # empty slice for the bucket's largest item
@@ -379,29 +423,293 @@ def _bucket_makespans(bd: BatchedPlanDag, times: jnp.ndarray) -> jnp.ndarray:
                               bd.pred_delay, bd.floor, bd.width, times)
 
 
-def _bucket_makespans_sharded(bd: BatchedPlanDag,
-                              times: jnp.ndarray) -> jnp.ndarray:
-    """Shard the plan axis across local devices (pmap of the vmapped scan)."""
-    D = jax.local_device_count()
+# -------------------------------------------------- contended bucket kernel
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ContendedBucket:
+    """A bucket of B padded plans plus their transfer sets, stacked for the
+    jitted whole-bucket contention fixpoint (``_contended_durations``)."""
+
+    order: jnp.ndarray      # (B, n_pad) int32 topological order
+    pred: jnp.ndarray       # (B, n_pad, P_pad) int32, -1 = none
+    pred_mask: jnp.ndarray  # (B, n_pad, P_pad) bool
+    pred_tid: jnp.ndarray   # (B, n_pad, P_pad) int32 transfer behind each
+                            #      pred slot, -1 = chain/non-cross/padding
+    times: jnp.ndarray      # (B, n_pad) float nominal (noise-free) durations
+    src: jnp.ndarray        # (B, T_pad) int32 producer task per transfer
+    size: jnp.ndarray       # (B, T_pad) float data-object sizes
+    up: jnp.ndarray         # (B, T_pad) int32 dense uplink ids
+    dn: jnp.ndarray         # (B, T_pad) int32 dense downlink ids
+    t_mask: jnp.ndarray     # (B, T_pad) bool real-transfer lanes
+    capacity: jnp.ndarray   # (B,) float link bandwidth per plan
+
+
+@partial(jax.jit, static_argnums=(1, 2))
+def _contended_durations(cb: ContendedBucket, num_links: int,
+                         iters: int) -> jnp.ndarray:
+    """(B, T_pad) fluid transfer durations at the replay/fluid fixpoint.
+
+    The traceable mirror of :func:`repro.sim.network.contended_plan_delays`
+    for a whole bucket at once: each round replays every plan's augmented
+    DAG under the current durations (the same ``lax.scan`` recurrence the
+    makespan path runs — transfer starts are the producers' finishes), then
+    re-solves the fixed-start max-min fluid sub-problem with the masked
+    event kernel :func:`repro.sim.network.fluid_finishes_jax`.  Plans whose
+    durations stop moving (the oracle's ``allclose(rtol=1e-3, atol=1e-9)``
+    break criterion, applied per lane) freeze, so the fixed ``iters``-round
+    ``fori_loop`` reproduces the oracle's early-exit schedule exactly.  One
+    XLA trace per padded shape (``trace_count("contended")``).
+    """
+    from .network import fluid_finishes_jax
+
+    _TRACES["contended"] += 1  # trace-time side effect: counts compiles
+
+    def per_plan(order, pred, mask, tid, times, src, size, up, dn,
+                 t_mask, cap):
+        fdt = times.dtype
+        zero = jnp.zeros((), fdt)
+        dur0 = jnp.where(t_mask, size / cap, zero)
+
+        def replay(dur):
+            pd = jnp.where(tid >= 0, dur[jnp.maximum(tid, 0)], zero)
+
+            def step(finish, j):
+                pf = jnp.where(mask[j], finish[pred[j]] + pd[j], zero)
+                start = jnp.max(pf, initial=0.0)
+                return finish.at[j].set(start + times[j]), ()
+
+            finish, _ = jax.lax.scan(step, jnp.zeros(times.shape[0], fdt),
+                                     order)
+            return finish
+
+        def round_fn(_, carry):
+            dur, done = carry
+            starts = replay(dur)[src]
+            fin = fluid_finishes_jax(starts, size, up, dn, t_mask, cap,
+                                     num_links)
+            new = jnp.where(t_mask, fin - starts, zero)
+            close = jnp.all((jnp.abs(new - dur)
+                             <= 1e-9 + 1e-3 * jnp.abs(dur)) | ~t_mask)
+            return jnp.where(done, dur, new), done | close
+
+        dur, _ = jax.lax.fori_loop(0, iters, round_fn,
+                                   (dur0, jnp.array(False)))
+        return dur
+
+    return jax.vmap(per_plan)(cb.order, cb.pred, cb.pred_mask, cb.pred_tid,
+                              cb.times, cb.src, cb.size, cb.up, cb.dn,
+                              cb.t_mask, cb.capacity)
+
+
+def _pow2(x: int) -> int:
+    return 1 << max(0, int(np.ceil(np.log2(max(int(x), 1)))))
+
+
+def contended_bucket_delays(items: list, networks: list) -> list[np.ndarray]:
+    """Per-item (E_i,) per-edge delay vectors from the jitted whole-bucket
+    contention fixpoint — the batched front door ``_delay_overrides`` calls.
+
+    Items are grouped by ``(bucket_key, num_links)`` — the same
+    power-of-two (n, fan-in) envelope the makespan path buckets by — and
+    each group's transfer axis is padded to the power-of-two envelope of
+    its largest transfer set, so a campaign's contended grid costs at most
+    one ``_contended_durations`` compile per bucket; plans with no
+    crossing transfers short-circuit to zeros.  The kernel runs under
+    ``jax.experimental.enable_x64()`` so the fixpoint matches the float64
+    numpy oracle to rtol 1e-6; the resulting durations scatter back to the
+    (deduplicated, output-cached) edges via ``PlanTransfers.key_of``.
+    """
+    from jax.experimental import enable_x64
+
+    from .engine import plan_times
+    from .network import CONTENTION_ITERS, plan_transfers
+
+    out: list[np.ndarray | None] = [None] * len(items)
+    groups: dict[tuple, list[int]] = defaultdict(list)
+    prep: list[tuple | None] = [None] * len(items)
+    for i, ((g, plan), net) in enumerate(zip(items, networks)):
+        tr = plan_transfers(g, plan, net)
+        if not tr.count:
+            out[i] = np.zeros(g.num_edges)
+            continue
+        arrays = _plan_arrays(g, plan, delay_e=np.zeros(g.num_edges))
+        prep[i] = (tr, arrays, plan_times(g, plan, g.proc))
+        n_pad, P_pad = _bucket_key(g, plan)
+        groups[(n_pad, P_pad, tr.num_links)].append(i)
+
+    for (n_pad, P_pad, L), idxs in groups.items():
+        B = len(idxs)
+        T_pad = _pow2(max(prep[i][0].count for i in idxs))
+        order = np.zeros((B, n_pad), dtype=np.int32)
+        pred = np.full((B, n_pad, P_pad), -1, dtype=np.int32)
+        tid = np.full((B, n_pad, P_pad), -1, dtype=np.int32)
+        times = np.zeros((B, n_pad), dtype=np.float64)
+        src = np.zeros((B, T_pad), dtype=np.int32)
+        size = np.zeros((B, T_pad), dtype=np.float64)
+        up = np.zeros((B, T_pad), dtype=np.int32)
+        dn = np.zeros((B, T_pad), dtype=np.int32)
+        t_mask = np.zeros((B, T_pad), dtype=bool)
+        cap = np.zeros(B, dtype=np.float64)
+        for b, i in enumerate(idxs):
+            tr, (o, p, _, pe), base = prep[i]
+            n, Pi = p.shape
+            order[b, :n] = o
+            order[b, n:] = n  # spare slots visit the first phantom task
+            pred[b, :n, :Pi] = p
+            m = pe >= 0
+            ti = np.full((n, Pi), -1, dtype=np.int32)
+            ti[m] = tr.key_of[pe[m]]
+            tid[b, :n, :Pi] = ti
+            times[b, :n] = base
+            T = tr.count
+            src[b, :T] = tr.src
+            size[b, :T] = tr.size
+            up[b, :T] = tr.up
+            dn[b, :T] = tr.dn
+            t_mask[b, :T] = True
+            cap[b] = tr.capacity
+        with enable_x64():
+            cb = ContendedBucket(
+                order=jnp.asarray(order), pred=jnp.asarray(pred),
+                pred_mask=jnp.asarray(pred >= 0), pred_tid=jnp.asarray(tid),
+                times=jnp.asarray(times), src=jnp.asarray(src),
+                size=jnp.asarray(size), up=jnp.asarray(up),
+                dn=jnp.asarray(dn), t_mask=jnp.asarray(t_mask),
+                capacity=jnp.asarray(cap))
+            durs = np.asarray(_contended_durations(cb, L, CONTENTION_ITERS))
+        for b, i in enumerate(idxs):
+            tr = prep[i][0]
+            g = items[i][0]
+            delay = np.zeros(g.num_edges)
+            hit = tr.key_of >= 0
+            delay[hit] = durs[b, tr.key_of[hit]]
+            out[i] = delay
+    return out  # type: ignore[return-value]
+
+
+# ------------------------------------------------------- mesh execution layer
+_PLAN_AXIS = "plans"
+_SHARD_BACKENDS = ("shard_map", "pmap", "none")
+_MESH = None
+_SHARD_FNS: dict = {}
+
+
+def campaign_mesh():
+    """The explicit 1-D device mesh (axis ``"plans"``) the bucketed
+    evaluator shards each bucket's plan axis over — lazily built across all
+    of ``jax.devices()``.  On a single-device host the mesh is trivial and
+    every bucket takes the single-program path, so CPU CI is unchanged."""
+    global _MESH
+    if _MESH is None:
+        from jax.sharding import Mesh
+        _MESH = Mesh(np.asarray(jax.devices()), (_PLAN_AXIS,))
+    return _MESH
+
+
+def set_campaign_mesh(mesh) -> None:
+    """Install a custom campaign mesh (``None`` resets to the all-device
+    default).  The mesh must be 1-D with axis name ``"plans"``."""
+    global _MESH
+    if mesh is not None and tuple(mesh.axis_names) != (_PLAN_AXIS,):
+        raise ValueError(f"campaign mesh must have the single axis "
+                         f"{_PLAN_AXIS!r}, got {mesh.axis_names}")
+    _MESH = mesh
+
+
+def shard_backend() -> str:
+    """Which execution backend shards the plan axis: ``shard_map`` (the
+    mesh path, default), ``pmap`` (the legacy per-device path), or ``none``
+    (always single-program).  Env ``REPRO_SHARD_BACKEND`` selects."""
+    backend = os.environ.get("REPRO_SHARD_BACKEND", "shard_map")
+    if backend not in _SHARD_BACKENDS:
+        raise ValueError(f"unknown REPRO_SHARD_BACKEND={backend!r}; "
+                         f"have {_SHARD_BACKENDS}")
+    return backend
+
+
+def _pad_plan_axis(bd: BatchedPlanDag, times: jnp.ndarray, multiple: int):
+    """Pad the plan axis to a multiple of the shard count by repeating item
+    0 (a real plan, so padded lanes trace the same program), returning
+    ``(bd, times, B)`` with the original plan count for the round-trip
+    slice.  This is what lifts the divides-evenly assumption: any plan
+    count — prime counts included — shards after padding."""
     B = times.shape[0]
-    if D <= 1 or B < 2:
-        return _bucket_makespans(bd, times)
-    pad = (-B) % D
-    if pad:
-        take = np.r_[np.arange(B), np.zeros(pad, dtype=np.int64)]
-        bd = jax.tree_util.tree_map(lambda a: a[take], bd)
-        times = jnp.concatenate([times, jnp.repeat(times[:1], pad, 0)], axis=0)
+    pad = (-B) % multiple
+    if not pad:
+        return bd, times, B
+    take = np.r_[np.arange(B), np.zeros(pad, dtype=np.int64)]
+    bd = jax.tree_util.tree_map(lambda a: a[take], bd)
+    times = jnp.concatenate([times, jnp.repeat(times[:1], pad, 0)], axis=0)
+    return bd, times, B
+
+
+def _shard_fn(mesh):
+    """One jitted shard_map wrapper per mesh (cached, so repeated buckets
+    reuse the compiled program — ``trace_count('bucket')`` still counts one
+    trace per bucket shape because the wrapped body is the counter)."""
+    fn = _SHARD_FNS.get(mesh)
+    if fn is None:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec
+        spec = PartitionSpec(_PLAN_AXIS)
+        fn = jax.jit(shard_map(_bucket_makespans.__wrapped__, mesh=mesh,
+                               in_specs=(spec, spec), out_specs=spec))
+        _SHARD_FNS[mesh] = fn
+    return fn
+
+
+def _bucket_makespans_pmap(bd: BatchedPlanDag, times: jnp.ndarray,
+                           D: int) -> jnp.ndarray:
+    """Legacy pmap sharding, kept as a comparison backend.  The plan axis
+    is padded to a device-divisible count first (historically this path
+    silently required ``B % local_device_count() == 0`` whenever the padded
+    gather was skipped) and the result is sliced back."""
+    bd, times, B = _pad_plan_axis(bd, times, D)
     shard = jax.tree_util.tree_map(
         lambda a: a.reshape(D, -1, *a.shape[1:]), (bd, times))
     out = jax.pmap(_bucket_makespans.__wrapped__)(*shard)
     return out.reshape(-1, out.shape[-1])[:B]
 
 
+def _bucket_makespans_sharded(bd: BatchedPlanDag, times: jnp.ndarray,
+                              mesh=None) -> jnp.ndarray:
+    """Shard the plan axis of one bucket across the campaign mesh.
+
+    The default backend wraps the jitted vmapped scan in ``shard_map`` over
+    the explicit 1-D ``campaign_mesh()`` (``jax.sharding`` path); the plan
+    axis is padded to a mesh-divisible count (``_pad_plan_axis``) and
+    sliced back, with the round-trip shape asserted.  Because the program
+    is purely per-plan (a vmap), the sharded result equals the
+    single-device result bit-for-bit.  Single-device meshes (CPU CI) and
+    tiny buckets fall back to the single program unchanged.
+    """
+    backend = shard_backend()
+    B, S = times.shape[0], times.shape[1]
+    if backend == "pmap":
+        D = jax.local_device_count()
+        if D <= 1 or B < 2:
+            return _bucket_makespans(bd, times)
+        out = _bucket_makespans_pmap(bd, times, D)
+    elif backend == "shard_map":
+        mesh = campaign_mesh() if mesh is None else mesh
+        D = int(mesh.devices.size)
+        if D <= 1 or B < 2:
+            return _bucket_makespans(bd, times)
+        bdp, tp, _ = _pad_plan_axis(bd, times, D)
+        out = _shard_fn(mesh)(bdp, tp)[:B]
+    else:   # "none": always the single program
+        return _bucket_makespans(bd, times)
+    assert out.shape == (B, S), \
+        f"plan-axis round trip broke: {out.shape} != {(B, S)}"
+    return out
+
+
 def bucketed_makespans(items: list[tuple[TaskGraph, Plan]],
                        times: list[np.ndarray],
                        floors: list[np.ndarray] | None = None,
                        envelope: bool = False,
-                       networks: list | None = None) -> list[np.ndarray]:
+                       networks: list | None = None,
+                       mesh=None) -> list[np.ndarray]:
     """Replay many different plans under per-plan times matrices.
 
     Args:
@@ -416,8 +724,11 @@ def bucketed_makespans(items: list[tuple[TaskGraph, Plan]],
              pattern) reuse one compiled shape instead of retracing.
       networks: optional matching per-item ``NetworkModel`` (or ``None``)
              entries — edge delays are replaced at plan-DAG build time
-             (contended models via the vectorized sharing approximation),
+             (contended models via the jitted whole-bucket fluid fixpoint),
              so the bucketed path stays at <= 1 XLA compile per bucket.
+      mesh: optional explicit device mesh to shard each bucket's plan axis
+             over (defaults to ``campaign_mesh()``; single-device meshes
+             run the plain single program).
 
     Returns a list of (S,) makespan arrays, one per item, in input order.
     Cost: one jitted vmapped scan per *bucket* (power-of-two envelope of
@@ -448,7 +759,8 @@ def bucketed_makespans(items: list[tuple[TaskGraph, Plan]],
                       if networks is not None else None))
         tt = np.stack([_pad_times(np.asarray(times[i], dtype=np.float64),
                                   bd.n_pad) for i in idxs])
-        ms = np.asarray(_bucket_makespans_sharded(bd, jnp.asarray(tt)))
+        ms = np.asarray(_bucket_makespans_sharded(bd, jnp.asarray(tt),
+                                                  mesh=mesh))
         for row, i in enumerate(idxs):
             out[i] = ms[row]
     return out  # type: ignore[return-value]
@@ -456,7 +768,7 @@ def bucketed_makespans(items: list[tuple[TaskGraph, Plan]],
 
 def sweep_suite_makespans(entries, *, noise: NoiseModel, seeds,
                           floor_fn=None, envelope: bool = False,
-                          network=None) -> list[np.ndarray]:
+                          network=None, mesh=None) -> list[np.ndarray]:
     """One-jit-per-bucket campaign sweep over heterogeneous (g, machine,
     scheduler) entries: allocate each plan once, sample its noise grid with
     the engine-identical streams, and evaluate every (entry × seed) makespan
@@ -467,7 +779,8 @@ def sweep_suite_makespans(entries, *, noise: NoiseModel, seeds,
     pads to the full bucket envelope so repeated small sweeps — the
     simulation-in-the-loop rollout pattern of ``repro.streams.policy`` —
     stay at one XLA compile per shape bucket across calls.  ``network``
-    applies one ``NetworkModel`` to every entry's replay.
+    applies one ``NetworkModel`` to every entry's replay; ``mesh``
+    overrides the campaign mesh the plan axis shards over.
 
     Returns a list of (S,) arrays aligned with ``entries``.
     """
@@ -485,4 +798,5 @@ def sweep_suite_makespans(entries, *, noise: NoiseModel, seeds,
                               floors=floors if floor_fn is not None else None,
                               envelope=envelope,
                               networks=([network] * len(items)
-                                        if network is not None else None))
+                                        if network is not None else None),
+                              mesh=mesh)

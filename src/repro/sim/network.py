@@ -40,14 +40,19 @@ Three consumers of a model:
     :class:`TransferTracker` — earlier transfers' finish times are frozen
     when a new one starts (first-come-frozen fluid approximation), which
     keeps decisions causal at the cost of slightly optimistic sharing;
-  * the bucketed JAX path uses :func:`contended_plan_delays` — a vectorized
-    one-shot approximation (per-transfer time-averaged link concurrency on
-    the noise-free replay timeline) that keeps plan-DAG shapes, and hence
-    XLA compile counts, identical to the uncontended path.
+  * the bucketed JAX path prices each plan through the same fixed-start
+    max-min fluid fixpoint, evaluated either by the plain-numpy reference
+    (:func:`contended_plan_delays`, the oracle) or — the default — by a
+    jitted, vmappable fixed-iteration kernel (:func:`fluid_finishes_jax`
+    plus the whole-bucket fixpoint in ``repro.sim.batch``) so a bucket of
+    plans solves its contention inside one compiled program instead of a
+    per-plan numpy loop.  :func:`set_contention_kernel` switches the two
+    (env ``REPRO_CONTENTION_KERNEL``); they agree to rtol 1e-6.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 
 import numpy as np
 
@@ -273,6 +278,77 @@ class TransferTracker:
 
 
 # -------------------------------------------- batched contention approximation
+@dataclasses.dataclass(frozen=True)
+class PlanTransfers:
+    """The distinct transfers a plan's allocation implies, in dense arrays.
+
+    One transfer per ``(src task, out_id, destination type)`` crossing —
+    output caching: a reused output crosses a given boundary once, not once
+    per consumer edge.  ``key_of[e]`` maps each graph edge to its transfer
+    (−1 = the edge does not cross).  Links are densely renumbered per plan
+    (``link_ids`` preserves the model's hashable link labels) so the jitted
+    kernel can index fixed-size load vectors; every transfer occupies
+    exactly two links (``NetworkModel.links_of``: source uplink +
+    destination downlink).
+    """
+
+    key_of: np.ndarray          # (E,) int64 edge -> transfer id, -1 = no cross
+    src: np.ndarray             # (T,) int64 producer task of each transfer
+    size: np.ndarray            # (T,) float  data-object size
+    up: np.ndarray              # (T,) int64 dense id of the uplink occupied
+    dn: np.ndarray              # (T,) int64 dense id of the downlink occupied
+    link_ids: tuple             # dense id -> the model's hashable link label
+    capacity: float             # the model's link bandwidth
+
+    @property
+    def count(self) -> int:
+        return len(self.src)
+
+    @property
+    def num_links(self) -> int:
+        return len(self.link_ids)
+
+    def links(self) -> list[tuple]:
+        """Per-transfer link-label tuples (the numpy solvers' format)."""
+        return [(self.link_ids[u], self.link_ids[d])
+                for u, d in zip(self.up, self.dn)]
+
+
+def plan_transfers(g: TaskGraph, plan, network: NetworkModel) -> PlanTransfers:
+    """Extract the deduplicated transfer set of a plan under a model."""
+    E = g.num_edges
+    alloc = np.asarray(plan.alloc, dtype=np.int64)
+    key_of = np.full(E, -1, dtype=np.int64)
+    t_src: list[int] = []
+    t_size: list[float] = []
+    t_up: list[int] = []
+    t_dn: list[int] = []
+    link_id: dict = {}
+    seen: dict[tuple[int, int, int], int] = {}
+    if E:
+        sizes = g.data_sizes(network.bandwidth)
+        oids = g.edge_out_ids()
+        cross = alloc[g.edges[:, 0]] != alloc[g.edges[:, 1]]
+        for e in np.flatnonzero(cross):
+            src, dst = int(g.edges[e, 0]), int(g.edges[e, 1])
+            key = (src, int(oids[e]), int(alloc[dst]))
+            if key not in seen:
+                seen[key] = len(t_src)
+                up, dn = network.links_of(int(alloc[src]), int(alloc[dst]))
+                t_src.append(src)
+                t_size.append(float(sizes[e]))
+                t_up.append(link_id.setdefault(up, len(link_id)))
+                t_dn.append(link_id.setdefault(dn, len(link_id)))
+            key_of[e] = seen[key]
+    return PlanTransfers(key_of=key_of,
+                         src=np.asarray(t_src, dtype=np.int64),
+                         size=np.asarray(t_size, dtype=np.float64),
+                         up=np.asarray(t_up, dtype=np.int64),
+                         dn=np.asarray(t_dn, dtype=np.int64),
+                         link_ids=tuple(link_id),
+                         capacity=float(network.bandwidth))
+
+
 def _fluid_finishes(starts: np.ndarray, sizes: np.ndarray,
                     links: list[tuple], capacity: float) -> np.ndarray:
     """(T,) exact max-min fluid finish times for transfers with *fixed*
@@ -338,41 +414,21 @@ def contended_plan_delays(g: TaskGraph, plan, times: np.ndarray,
     E = g.num_edges
     if not E:
         return np.zeros(0)
-    alloc = np.asarray(plan.alloc, dtype=np.int64)
-    cross = alloc[g.edges[:, 0]] != alloc[g.edges[:, 1]]
-    if not cross.any():
+    tr = plan_transfers(g, plan, network)
+    if not tr.count:
         return np.zeros(E)
     rel = np.zeros(g.n) if release is None else np.asarray(release, float)
-    bw = network.bandwidth
-    sizes = g.data_sizes(bw)
-    oids = g.edge_out_ids()
-
-    # one transfer per (src, out_id, dst_type) crossing — output caching
-    key_of = np.full(E, -1, dtype=np.int64)
-    t_src, t_size, t_links = [], [], []
-    seen: dict[tuple[int, int, int], int] = {}
-    for e in np.flatnonzero(cross):
-        src, dst = int(g.edges[e, 0]), int(g.edges[e, 1])
-        key = (src, int(oids[e]), int(alloc[dst]))
-        if key not in seen:
-            seen[key] = len(t_src)
-            t_src.append(src)
-            t_size.append(float(sizes[e]))
-            t_links.append(network.links_of(int(alloc[src]), int(alloc[dst])))
-        key_of[e] = seen[key]
-
-    t_src = np.asarray(t_src)
-    t_size = np.asarray(t_size)
-    hit = key_of >= 0
+    t_links = tr.links()
+    hit = tr.key_of >= 0
 
     delay = np.zeros(E)
-    delay[hit] = t_size[key_of[hit]] / bw     # round 0: fixed-latency
+    delay[hit] = tr.size[tr.key_of[hit]] / tr.capacity  # round 0: fixed-latency
     for _ in range(max(1, iters)):
         _, finish = _execute_plan(g, plan, times, rel, delay=delay)
-        starts = finish[t_src]
-        fin = _fluid_finishes(starts, t_size, t_links, bw)
+        starts = finish[tr.src]
+        fin = _fluid_finishes(starts, tr.size, t_links, tr.capacity)
         new_delay = np.zeros(E)
-        new_delay[hit] = (fin - starts)[key_of[hit]]
+        new_delay[hit] = (fin - starts)[tr.key_of[hit]]
         if np.allclose(new_delay, delay, rtol=1e-3, atol=1e-9):
             delay = new_delay
             break
@@ -380,8 +436,127 @@ def contended_plan_delays(g: TaskGraph, plan, times: np.ndarray,
     return delay
 
 
+# ------------------------------------------------- jitted contention kernel
+#: fixpoint rounds of the batched contention solve — one value shared by the
+#: numpy oracle (``contended_plan_delays(iters=)`` default) and the jitted
+#: kernel, so the two implementations run the same iteration schedule.
+CONTENTION_ITERS = 4
+
+_CONTENTION_KERNELS = ("jax", "numpy")
+_contention_kernel = os.environ.get("REPRO_CONTENTION_KERNEL", "jax")
+
+
+def contention_kernel() -> str:
+    """Which implementation prices contention on the bucketed batch path:
+    ``"jax"`` (the jitted whole-bucket fixpoint, default) or ``"numpy"``
+    (the per-plan reference oracle).  Env ``REPRO_CONTENTION_KERNEL``
+    overrides the default at import time."""
+    return _contention_kernel
+
+
+def set_contention_kernel(name: str) -> None:
+    global _contention_kernel
+    if name not in _CONTENTION_KERNELS:
+        raise ValueError(f"unknown contention kernel {name!r}; "
+                         f"have {_CONTENTION_KERNELS}")
+    _contention_kernel = name
+
+
+def _maxmin_rates_jax(active, up, dn, capacity, num_links: int):
+    """(T,) max-min fair rates by *masked* progressive filling (traceable).
+
+    The fixed-iteration mirror of :func:`maxmin_rates`: every round raises
+    all unfrozen rates by the tightest per-link headroom and freezes the
+    flows crossing the link(s) that saturated.  Each productive round
+    saturates at least one fresh link (the argmin link reaches capacity by
+    construction), so ``num_links`` rounds always suffice and the loop is a
+    compile-time-bounded ``fori_loop`` instead of numpy's data-dependent
+    ``while``; exhausted rounds see zero headroom and no-op.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    fdt = jnp.result_type(capacity, 1.0)
+
+    def fill(_, carry):
+        rate, unfrozen, used = carry
+        w = unfrozen.astype(fdt)
+        n_l = jnp.zeros(num_links, fdt).at[up].add(w).at[dn].add(w)
+        headroom = jnp.where(n_l > 0, (capacity - used)
+                             / jnp.where(n_l > 0, n_l, 1.0), jnp.inf)
+        inc = jnp.min(headroom, initial=jnp.inf)
+        inc = jnp.maximum(jnp.where(jnp.isfinite(inc), inc, 0.0), 0.0)
+        rate = rate + jnp.where(unfrozen, inc, jnp.zeros((), fdt))
+        used = used + inc * n_l
+        saturated = used >= capacity - _EPS
+        froze = unfrozen & (saturated[up] | saturated[dn])
+        # numpy's numerical guard ("no flow froze: freeze everything")
+        unfrozen = jnp.where(jnp.any(froze), unfrozen & ~froze,
+                             jnp.zeros_like(unfrozen))
+        return rate, unfrozen, used
+
+    rate, _, _ = jax.lax.fori_loop(
+        0, num_links, fill, (jnp.zeros(active.shape, fdt), active,
+                             jnp.zeros(num_links, fdt)))
+    return rate
+
+
+def fluid_finishes_jax(starts, sizes, up, dn, mask, capacity,
+                       num_links: int):
+    """(T,) fluid finish times — the traceable mirror of
+    :func:`_fluid_finishes` for transfers with *fixed* start times.
+
+    Event-driven like the oracle: a bounded ``lax.scan`` walks the event
+    timeline (a step either admits the next start or drains the fastest
+    active transfer; exhausted steps no-op), re-solving max-min rates with
+    the masked progressive filling of :func:`_maxmin_rates_jax` at every
+    event.  ``mask`` marks real transfers (padding lanes never activate),
+    so the kernel is shape-stable and ``vmap``s over a whole bucket of
+    plans.  Matches the numpy oracle to rtol 1e-6 in float64.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    T = int(starts.shape[0])
+    fdt = jnp.result_type(starts, capacity, 1.0)
+    starts = jnp.asarray(starts, fdt)
+    sizes = jnp.asarray(sizes, fdt)
+    tiny = jnp.finfo(fdt).tiny
+    thresh = _EPS * capacity + _EPS
+    live = mask & (sizes > _EPS)
+    # zero-size objects ship instantly at their start; padding finishes at 0
+    fin0 = jnp.where(mask, starts, jnp.zeros((), fdt))
+    t0 = jnp.min(jnp.where(mask, starts, jnp.inf), initial=jnp.inf)
+
+    def step(carry, _):
+        t, remaining, fin, finished = carry
+        active = live & ~finished & (starts <= t + _EPS)
+        rate = _maxmin_rates_jax(active, up, dn, capacity, num_links)
+        t_done = jnp.min(jnp.where(active, t + remaining
+                                   / jnp.maximum(rate, tiny), jnp.inf),
+                         initial=jnp.inf)
+        t_next = jnp.min(jnp.where(live & ~finished & (starts > t + _EPS),
+                                   starts, jnp.inf), initial=jnp.inf)
+        t_ev = jnp.minimum(t_done, t_next)
+        ok = jnp.isfinite(t_ev)           # nothing left to do: freeze time
+        t_new = jnp.where(ok, jnp.maximum(t_ev, t), t)
+        dt = jnp.where(ok, t_new - t, jnp.zeros((), fdt))
+        remaining = jnp.where(active, remaining - rate * dt, remaining)
+        done_now = active & ok & (remaining <= thresh)
+        fin = jnp.where(done_now, t_new, fin)
+        return (t_new, remaining, fin, finished | done_now), ()
+
+    # every productive event admits a start or drains a transfer; residual
+    # re-drains cost at most one extra event each — 3T + 4 bounds them all
+    carry = (t0, jnp.where(live, sizes, jnp.zeros((), fdt)), fin0, ~live)
+    (_, _, fin, _), _ = jax.lax.scan(step, carry, None, length=3 * T + 4)
+    return fin
+
+
 __all__ = [
-    "NETWORKS", "NetworkModel", "InstantNetwork", "FixedLatencyNetwork",
-    "MaxMinFairNetwork", "TransferTracker", "contended_plan_delays",
-    "make_network", "maxmin_rates",
+    "CONTENTION_ITERS", "NETWORKS", "NetworkModel", "InstantNetwork",
+    "FixedLatencyNetwork", "MaxMinFairNetwork", "PlanTransfers",
+    "TransferTracker", "contended_plan_delays", "contention_kernel",
+    "fluid_finishes_jax", "make_network", "maxmin_rates", "plan_transfers",
+    "set_contention_kernel",
 ]

@@ -24,8 +24,9 @@ greedy variants), conditions them on the *current* machine state via
 per-task start floors (``rollout_floors``), evaluates every
 (candidate × rollout-seed) makespan through the padded/bucketed one-jit
 evaluator (``sweep_suite_makespans(envelope=True)`` — one XLA compile per
-shape bucket across the whole stream), and commits the job to the argmin
-candidate's allocation.  When a latency budget is set and the observed
+shape bucket across the whole stream, the plan axis mesh-sharded across
+devices exactly like the offline campaigns), and commits the job to the
+argmin candidate's allocation.  When a latency budget is set and the observed
 rollout cost exceeds it, the policy degrades to plain ER-LS — the paper's
 online rule — so the allocator never stalls the dispatch path.
 """

@@ -32,9 +32,10 @@ API = {
         "InstantNetwork", "Machine", "MachineState", "MaxMinFairNetwork",
         "NETWORKS", "NetworkModel", "NoiseModel", "Plan", "Platform",
         "SCENARIO_FAMILIES", "Scenario", "Scheduler", "SimResult",
-        "TraceEvent", "default_suite", "from_estee", "make_network",
-        "make_scenario", "make_scheduler", "moldable_suite", "plan_for",
-        "plan_times", "simulate", "to_estee",
+        "TraceEvent", "campaign_mesh", "contention_kernel", "default_suite",
+        "from_estee", "make_network", "make_scenario", "make_scheduler",
+        "moldable_suite", "plan_for", "plan_times", "set_campaign_mesh",
+        "set_contention_kernel", "shard_backend", "simulate", "to_estee",
     ],
     "repro.streams": [
         "AdapterPolicy", "COMM_CANDIDATES", "ClosedLoopSource",

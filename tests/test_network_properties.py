@@ -82,3 +82,55 @@ def test_network_models_are_monotone(seed, name):
           for n in ("instant", "fixed_latency", "maxmin_fair")}
     assert ms["instant"] <= ms["fixed_latency"] + 1e-9
     assert ms["fixed_latency"] <= ms["maxmin_fair"] + 1e-9
+
+
+@st.composite
+def transfer_sets(draw):
+    """Random fixed-start transfer sets over the 3-type link pool."""
+    T = draw(st.integers(1, 12))
+    starts = [draw(st.floats(0.0, 6.0)) for _ in range(T)]
+    sizes = [draw(st.one_of(st.just(0.0), st.floats(0.01, 5.0)))
+             for _ in range(T)]
+    ups = [draw(st.sampled_from(range(0, 6, 2))) for _ in range(T)]
+    dns = [draw(st.sampled_from(range(1, 6, 2))) for _ in range(T)]
+    return starts, sizes, ups, dns
+
+
+@settings(max_examples=60, deadline=None)
+@given(transfer_sets(), st.floats(0.2, 5.0))
+def test_jitted_fluid_kernel_matches_numpy_oracle(ts, cap):
+    """The jitted event kernel and the numpy reference solve the same
+    fixed-start max-min fluid sub-problem to rtol 1e-6 (satellite of the
+    whole-bucket contention fixpoint — ``fluid_finishes_jax`` is what the
+    batched path runs per fixpoint round)."""
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    from repro.sim.network import _fluid_finishes, fluid_finishes_jax
+
+    starts, sizes, ups, dns = ts
+    starts, sizes = np.asarray(starts), np.asarray(sizes)
+    links = [(LINKS[u], LINKS[d]) for u, d in zip(ups, dns)]
+    want = _fluid_finishes(starts, sizes, links, cap)
+    with enable_x64():
+        got = np.asarray(fluid_finishes_jax(
+            jnp.asarray(starts), jnp.asarray(sizes), jnp.asarray(ups),
+            jnp.asarray(dns), jnp.ones(len(starts), bool), cap, len(LINKS)))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-9)
+
+
+def test_contended_netbound_bucket_traces_once():
+    """The whole contended netbound grid costs <= 1 contended-kernel
+    compile (the ≤-1-per-bucket invariant extends to the fixpoint)."""
+    from repro.sim.batch import _delay_overrides, trace_count
+    from repro.sim.scenarios import netbound_scenario
+
+    net = make_network("maxmin_fair")
+    items = []
+    for i in range(3):
+        sc = netbound_scenario(seed=700 + i)
+        plan = make_scheduler("hlp_ols").allocate(sc.graph, sc.machine)
+        items.append((sc.graph, plan))
+    t0 = trace_count("contended")
+    _delay_overrides(items, [net] * len(items))
+    assert trace_count("contended") - t0 <= 1
