@@ -28,6 +28,7 @@ from collections import defaultdict
 import numpy as np
 
 from repro.core.hlp import solve_hlp, solve_qhlp
+from repro.obs import registry as _obs
 from repro.core.listsched import heft, hlp_est, hlp_ols
 from repro.core.online import eft_online, er_ls, greedy_online, random_online
 from repro.core.workloads import (CHAMELEON_APPS, OFFLINE_CONFIGS_2,
@@ -233,9 +234,9 @@ def sim_sweep(full: bool = False, noise_scale: float = 0.2,
             items.append((sc.graph, plan))
             grids.append(np.vstack([clean_row, noisy]))
             keys.append((sc.name, name))
-    t0 = time.perf_counter()
-    sweeps = bucketed_makespans(items, grids)
-    phase_seconds["static"] = time.perf_counter() - t0
+    with _obs.timer("campaign.sim.static", algs=len(items)) as sp:
+        sweeps = bucketed_makespans(items, grids)
+    phase_seconds["static"] = sp.dur
 
     # Moldable sub-campaigns: width-aware MHLP vs its width-1 restriction,
     # and comm-aware CAMHLP vs oblivious MHLP on CCR-enabled instances —
@@ -258,9 +259,9 @@ def sim_sweep(full: bool = False, noise_scale: float = 0.2,
             m_items.append((sc.graph, plan))
             m_grids.append(np.vstack([clean_row, noisy]))
             m_keys.append((sc.name, name))
-    t0 = time.perf_counter()
-    m_sweeps = bucketed_makespans(m_items, m_grids)
-    phase_seconds["moldable"] = time.perf_counter() - t0
+    with _obs.timer("campaign.sim.moldable", algs=len(m_items)) as sp:
+        m_sweeps = bucketed_makespans(m_items, m_grids)
+    phase_seconds["moldable"] = sp.dur
 
     # Network-model sub-grid (netbound family): the comm-oblivious hlp_ols
     # allocation and the contention-aware CAHLP variant, each replayed under
@@ -289,9 +290,9 @@ def sim_sweep(full: bool = False, noise_scale: float = 0.2,
                 n_grids.append(np.vstack([clean_row, noisy]))
                 n_keys.append((sc.name, name, net_name))
                 n_nets.append(net)
-    t0 = time.perf_counter()
-    n_sweeps = bucketed_makespans(n_items, n_grids, networks=n_nets)
-    phase_seconds["network"] = time.perf_counter() - t0
+    with _obs.timer("campaign.sim.network", algs=len(n_items)) as sp:
+        n_sweeps = bucketed_makespans(n_items, n_grids, networks=n_nets)
+    phase_seconds["network"] = sp.dur
     compiles = trace_count("bucket") - traces0
     tr_contended1 = trace_count("contended")
 

@@ -243,7 +243,14 @@ def render_bench_diff(old_path: str, new_path: str) -> str:
             continue
         o, n = bo[name], bn[name]
         out.append(f"  {name}:")
-        out.append(f"    wall_s: {_fmt_delta(o['wall_s'], n['wall_s'])}")
+        wo, wn = o.get("wall_s"), n.get("wall_s")
+        if wo is None or wn is None:
+            # hand-edited or truncated trajectories may drop wall_s — the
+            # diff must keep going, not KeyError on the first bench
+            out.append(f"    wall_s: {'n/a' if wo is None else f'{wo:.4g}'} "
+                       f"-> {'n/a' if wn is None else f'{wn:.4g}'}")
+        else:
+            out.append(f"    wall_s: {_fmt_delta(wo, wn)}")
         for k in ("compiles", "contended_compiles", "plans", "evals",
                   "throughput_plans_per_sec",
                   "throughput_plans_per_sec_per_device"):
@@ -300,6 +307,51 @@ def check_bench(new_path: str, pinned_path: str, rtol: float = 0.05) -> int:
     return 0
 
 
+# ------------------------------------------------------------- trace summary
+def render_trace_summary(path: str, top: int = 5) -> str:
+    """Summarize chrome traces written by ``benchmarks.run --trace DIR``.
+
+    ``path`` is one ``trace_*.json`` file or a directory of them.  Per
+    trace: event count, per-lane (pid/tid thread_name) busy totals, and the
+    longest individual spans — a terminal-side look before opening the file
+    in Perfetto (https://ui.perfetto.dev).
+    """
+    from repro.obs import load_chrome_trace
+
+    if os.path.isdir(path):
+        files = sorted(os.path.join(path, f) for f in os.listdir(path)
+                       if f.startswith("trace_") and f.endswith(".json"))
+    else:
+        files = [path]
+    if not files:
+        return f"(no trace_*.json under {path})"
+    out = []
+    for fp in files:
+        events = load_chrome_trace(fp)
+        names: dict[tuple, str] = {}
+        for e in events:
+            if e["ph"] == "M" and e["name"] == "thread_name":
+                names[(e["pid"], e["tid"])] = e["args"]["name"]
+        spans = [e for e in events if e["ph"] == "X"]
+        out.append(f"# {fp}: {len(spans)} spans, "
+                   f"{len({(e['pid'], e['tid']) for e in spans})} lanes")
+        busy: dict[tuple, float] = defaultdict(float)
+        count: dict[tuple, int] = defaultdict(int)
+        for e in spans:
+            lane = (e["pid"], e["tid"])
+            busy[lane] += e.get("dur", 0)
+            count[lane] += 1
+        for lane in sorted(busy):
+            label = names.get(lane, f"pid{lane[0]}/tid{lane[1]}")
+            out.append(f"  lane {label}: {count[lane]} spans, "
+                       f"{busy[lane] / 1e6:.4f}s busy")
+        longest = sorted(spans, key=lambda e: -e.get("dur", 0))[:top]
+        for e in longest:
+            out.append(f"  top: {e['name']} {e.get('dur', 0) / 1e6:.4f}s "
+                       f"({names.get((e['pid'], e['tid']), '?')})")
+    return "\n".join(out)
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__,
                                  formatter_class=argparse.RawDescriptionHelpFormatter)
@@ -310,12 +362,18 @@ def main(argv: list[str] | None = None) -> int:
                          "PINNED beyond --rtol")
     ap.add_argument("--rtol", type=float, default=0.05,
                     help="relative tolerance for --check-bench (default 0.05)")
+    ap.add_argument("--trace-summary", metavar="PATH",
+                    help="summarize a trace_*.json chrome trace (or a "
+                         "directory of them) from benchmarks.run --trace")
     args = ap.parse_args(argv)
     if args.diff_bench:
         print(render_bench_diff(*args.diff_bench))
         return 0
     if args.check_bench:
         return check_bench(*args.check_bench, rtol=args.rtol)
+    if args.trace_summary:
+        print(render_trace_summary(args.trace_summary))
+        return 0
     try:
         print(render())
     except FileNotFoundError:

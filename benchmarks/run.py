@@ -16,7 +16,8 @@ import argparse
 import json
 import os
 import sys
-import time
+
+from repro import obs
 
 #: structured per-bench extras for the BENCH_sim.json trajectory — bench
 #: functions stash metrics here (keyed by bench name) as they run, and
@@ -26,9 +27,9 @@ BENCH_EXTRAS: dict[str, dict] = {}
 
 def bench_offline2(full: bool, seed: int = 0) -> list[str]:
     from . import campaign
-    t0 = time.perf_counter()
-    r = campaign.offline_2type(full=full)
-    dt = time.perf_counter() - t0
+    with obs.timer("bench.offline2") as sp:
+        r = campaign.offline_2type(full=full)
+    dt = sp.dur
     lines = []
     per = dt / max(r["runs"], 1) * 1e6
     for alg in ("hlp_est", "hlp_ols", "heft"):
@@ -49,9 +50,9 @@ def bench_offline2(full: bool, seed: int = 0) -> list[str]:
 
 def bench_offline3(full: bool, seed: int = 0) -> list[str]:
     from . import campaign
-    t0 = time.perf_counter()
-    r = campaign.offline_3type(full=full)
-    dt = time.perf_counter() - t0
+    with obs.timer("bench.offline3") as sp:
+        r = campaign.offline_3type(full=full)
+    dt = sp.dur
     per = dt / max(r["runs"], 1) * 1e6
     lines = [f"offline3/{alg},{per:.0f},mean_ratio_lp={r['ratios'][alg]:.4f}"
              for alg in ("qhlp_est", "qhlp_ols", "qheft")]
@@ -69,9 +70,9 @@ def bench_offline3(full: bool, seed: int = 0) -> list[str]:
 
 def bench_online(full: bool, seed: int = 0) -> list[str]:
     from . import campaign
-    t0 = time.perf_counter()
-    r = campaign.online_2type(full=full)
-    dt = time.perf_counter() - t0
+    with obs.timer("bench.online") as sp:
+        r = campaign.online_2type(full=full)
+    dt = sp.dur
     per = dt / max(r["runs"], 1) * 1e6
     lines = [f"online/{alg},{per:.0f},mean_ratio_lp={r['ratios'][alg]:.4f}"
              for alg in ("er_ls", "eft", "greedy", "random")]
@@ -92,9 +93,9 @@ def bench_online(full: bool, seed: int = 0) -> list[str]:
 def bench_sim(full: bool, seed: int = 0) -> list[str]:
     """Unified repro.sim sweep: all adapters × scenario families × noise."""
     from . import campaign
-    t0 = time.perf_counter()
-    r = campaign.sim_sweep(full=full, base_seed=seed)
-    dt = time.perf_counter() - t0
+    with obs.timer("bench.sim") as sp:
+        r = campaign.sim_sweep(full=full, base_seed=seed)
+    dt = sp.dur
     per = dt / max(r["runs"], 1) * 1e6
     lines = []
     for alg in r["schedulers"]:
@@ -162,9 +163,9 @@ def bench_streams(full: bool, seed: int = 0) -> list[str]:
     """Open-system streams: (arrival process × policy × seed) grid with
     per-tenant bounded slowdown, utilization, and rollout compile count."""
     from . import campaign
-    t0 = time.perf_counter()
-    r = campaign.streams_campaign(full=full, base_seed=seed)
-    dt = time.perf_counter() - t0
+    with obs.timer("bench.streams") as sp:
+        r = campaign.streams_campaign(full=full, base_seed=seed)
+    dt = sp.dur
     per = dt / max(r["runs"], 1) * 1e6
     lines = []
     for proc in r["processes"]:
@@ -213,7 +214,6 @@ def bench_roofline(full: bool, seed: int = 0) -> list[str]:
 def bench_solver(full: bool, seed: int = 0) -> list[str]:
     """Allocation-phase runtime: exact HiGHS LP vs the jitted JAX solver
     (the paper reports ~100 s GLPK solves on its largest instances)."""
-    import time
     from repro.core.hlp import solve_hlp
     from repro.core.hlp_jax import solve_hlp_jax
     from repro.core.workloads import chameleon
@@ -221,9 +221,11 @@ def bench_solver(full: bool, seed: int = 0) -> list[str]:
     insts = [("potrf", 10), ("getrf", 10)] + ([("potri", 20)] if full else [])
     for app, nb in insts:
         g = chameleon(app, nb, 512)
-        t0 = time.perf_counter(); exact = solve_hlp(g, 64, 8)
-        t1 = time.perf_counter(); approx = solve_hlp_jax(g, 64, 8, iters=300)
-        t2 = time.perf_counter()
+        with obs.timer(f"bench.solver.exact.{app}{nb}") as sp_e:
+            exact = solve_hlp(g, 64, 8)
+        with obs.timer(f"bench.solver.jax.{app}{nb}") as sp_j:
+            approx = solve_hlp_jax(g, 64, 8, iters=300)
+        t0, t1, t2 = 0.0, sp_e.dur, sp_e.dur + sp_j.dur
         gap = (approx.lp_value / exact.lp_value - 1) * 100
         lines.append(f"solver/{app}{nb}_exact,{(t1-t0)*1e6:.0f},lp={exact.lp_value:.4f}")
         lines.append(f"solver/{app}{nb}_jax,{(t2-t1)*1e6:.0f},gap_pct={gap:.3f}")
@@ -304,7 +306,8 @@ def _host_info() -> dict:
 
 
 def write_bench_json(path: str, args, names: list[str],
-                     benches: dict[str, dict]) -> None:
+                     benches: dict[str, dict],
+                     obs_section: dict | None = None) -> None:
     """Write the ``repro.bench.v1`` perf trajectory.
 
     Schema (stable — ``render_tables --diff-bench`` and the CI pinned-value
@@ -326,6 +329,8 @@ def write_bench_json(path: str, args, names: list[str],
         "host": _host_info(),
         "benches": benches,
     }
+    if obs_section is not None:
+        doc["obs"] = obs_section
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     with open(path, "w") as f:
         json.dump(doc, f, indent=2, sort_keys=True)
@@ -350,6 +355,11 @@ def main() -> None:
                                          "artifacts", "BENCH_sim.json"),
                     help="where to write the repro.bench.v1 perf trajectory "
                          "(empty string disables)")
+    ap.add_argument("--trace", type=str, default="",
+                    help="directory for Perfetto-loadable chrome traces: "
+                         "enables repro.obs and writes trace_<bench>.json "
+                         "(wall-clock spans) plus decisions_<bench>.json "
+                         "(per-task allocation provenance) per target")
     args = ap.parse_args()
     if args.list:
         list_registry()
@@ -362,26 +372,49 @@ def main() -> None:
         sys.exit(2)
     print(f"# benchmarks.run: targets={','.join(names)} full={args.full} "
           f"base_seed={args.seed}", flush=True)
+    if args.trace:
+        obs.enable()
+        os.makedirs(args.trace, exist_ok=True)
     all_lines = ["name,us_per_call,derived"]
     failed: list[str] = []
     benches: dict[str, dict] = {}
+    trace_files: dict[str, str] = {}
     for name in names:
         print(f"== {name} ==", flush=True)
-        t0 = time.perf_counter()
-        try:
-            lines = BENCHES[name](args.full, args.seed)
-            all_lines += lines
-            benches[name] = {"wall_s": time.perf_counter() - t0,
-                             "lines": lines, **BENCH_EXTRAS.get(name, {})}
-        except Exception as e:  # finish the harness, but don't hide the loss
-            print(f"# {name} FAILED: {type(e).__name__}: {e}")
-            all_lines.append(f"{name},0,FAILED")
-            failed.append(name)
-            benches[name] = {"wall_s": time.perf_counter() - t0,
-                             "lines": [], "failed": True}
+        if args.trace:
+            obs.reset()   # fresh span/decision buffers per target
+                          # (counters stay cumulative across the run)
+        with obs.timer(f"run.{name}") as sp:
+            try:
+                lines = BENCHES[name](args.full, args.seed)
+                all_lines += lines
+                benches[name] = {"wall_s": sp.elapsed(),
+                                 "lines": lines, **BENCH_EXTRAS.get(name, {})}
+            except Exception as e:  # finish the harness; don't hide the loss
+                print(f"# {name} FAILED: {type(e).__name__}: {e}")
+                all_lines.append(f"{name},0,FAILED")
+                failed.append(name)
+                benches[name] = {"wall_s": sp.elapsed(),
+                                 "lines": [], "failed": True}
+        if args.trace:
+            tpath = os.path.join(args.trace, f"trace_{name}.json")
+            obs.export_chrome_trace(tpath, obs.wall_trace_events())
+            trace_files[name] = tpath
+            print(f"# wrote {tpath}")
+            recs = obs.decision_records()
+            if recs:
+                dpath = os.path.join(args.trace, f"decisions_{name}.json")
+                obs.dump_decisions(dpath, recs)
+                print(f"# wrote {dpath}")
     print("\n".join(all_lines))
+    obs_section = None
+    if args.trace:
+        obs_section = {"counters": obs.counters(), "gauges": obs.gauges(),
+                       "traces": trace_files}
+        ctrs = " ".join(f"{k}={v}" for k, v in sorted(obs.counters().items()))
+        print(f"# obs: {ctrs}")
     if args.bench_json:
-        write_bench_json(args.bench_json, args, names, benches)
+        write_bench_json(args.bench_json, args, names, benches, obs_section)
     if failed:   # CI must see a red exit when any sub-campaign raised
         print(f"# FAILED sub-campaigns: {','.join(failed)}", file=sys.stderr)
         sys.exit(1)

@@ -21,7 +21,8 @@ import numpy as np
 from repro.core.theory import makespan_lower_bound
 from repro.sim import NoiseModel, make_scheduler, simulate
 from repro.sim.batch import (bucket_plans, bucketed_makespans,
-                             sample_actual_batch, trace_count)
+                             reset_trace_counts, sample_actual_batch,
+                             trace_count)
 from repro.sim.scenarios import comm_suite, default_suite
 
 NOISE = NoiseModel("lognormal", 0.2)
@@ -36,10 +37,10 @@ suite = default_suite(seed=0) + comm_suite(seed=50, ccr=0.5)
 plans = [(sc.graph, make_scheduler(name).allocate(sc.graph, sc.machine))
          for sc in suite for name in STATIC]
 grids = [sample_actual_batch(g, plan, NOISE, SEEDS) for g, plan in plans]
-t0 = trace_count("bucket")
+reset_trace_counts()
 sweeps = bucketed_makespans(plans, grids)
 print(f"{len(plans)} static plans -> {len(bucket_plans(plans))} shape "
-      f"buckets, {trace_count('bucket') - t0} XLA compiles\n")
+      f"buckets, {trace_count('bucket')} XLA compiles\n")
 
 print(f"{'scenario':<28} {'scheduler':<12} {'noisy μ':>8} "
       f"{'noisy σ':>8} {'vs LB':>6}")
@@ -73,3 +74,16 @@ b = simulate(sc.graph, sc.machine, make_scheduler("hlp_ols"), noise=NOISE,
              seed=7).makespan
 assert a == b
 print(f"identical ({a:.6f})")
+
+# Observability: capture one scheduled run with the repro.obs registry and
+# export a Perfetto-loadable chrome trace — per-unit task lanes in
+# simulated time plus the wall-clock LP/engine spans recorded above.
+from repro import obs  # noqa: E402
+
+with obs.capture():
+    res = simulate(sc.graph, sc.machine, make_scheduler("hlp_ols"))
+    events = obs.sim_trace_events(res, sc.machine) + obs.wall_trace_events()
+    n_decisions = len(obs.decision_records("hlp_ols"))
+path = obs.export_chrome_trace("artifacts/trace_example.json", events)
+print(f"\nobs: wrote {path} ({len(events)} events, {n_decisions} "
+      f"allocation decisions recorded) — open it at https://ui.perfetto.dev")

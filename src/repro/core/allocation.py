@@ -47,9 +47,39 @@ import dataclasses
 import numpy as np
 import scipy.sparse as sp
 
+from repro.obs import registry as _obs
 from repro.platform import as_platform
 
 from .dag import TaskGraph
+
+
+def task_comm_price(g: TaskGraph, alloc, comm=None,
+                    direction: str = "in") -> np.ndarray:
+    """(n,) transfer cost each task pays under ``alloc``: the sum of
+    ``comm[e]`` over its cross-type edges — incoming (``direction="in"``,
+    the cost charged into the task's readiness, what the engine's replay
+    delays it by), outgoing (``"out"``), or all incident (``"both"``, the
+    full price a task's placement puts on the network — what a provenance
+    record quotes, since flipping the task moves *every* incident edge).
+
+    ``comm=None`` prices the graph's own edge costs; pass an alternative
+    per-edge vector (e.g. the contention-scaled ``AllocationProblem.comm``)
+    to price what an LP objective saw instead.
+    """
+    if direction not in ("in", "out", "both"):
+        raise ValueError(f"direction must be 'in', 'out' or 'both', "
+                         f"got {direction!r}")
+    price = np.zeros(g.n)
+    if not g.num_edges:
+        return price
+    c = np.asarray(g.comm if comm is None else comm, dtype=np.float64)
+    a = np.asarray(alloc)
+    cross = a[g.edges[:, 0]] != a[g.edges[:, 1]]
+    if direction in ("in", "both"):
+        np.add.at(price, g.edges[cross, 1], c[cross])
+    if direction in ("out", "both"):
+        np.add.at(price, g.edges[cross, 0], c[cross])
+    return price
 
 
 def expected_link_load(g: TaskGraph, counts) -> np.ndarray:
@@ -131,21 +161,24 @@ class AllocationProblem:
         contended network model (``maxmin_fair``) will realize — so the LP
         values type locality the way the fluid engine charges it.
         """
-        platform = as_platform(machine, warn=False)
-        counts = platform.to_counts()
-        if rigid:
-            choices = [(q, 1) for q in range(g.num_types)]
-        else:
-            choices = mhlp_choices(g, counts)
-        p_choice = _choice_times(g, choices)
-        comm = (np.asarray(g.comm, dtype=np.float64)
-                if comm_aware and g.num_edges
-                else np.zeros(g.num_edges, dtype=np.float64))
-        if comm_aware and contention and g.num_edges:
-            comm = comm * expected_link_load(g, counts)
-        return AllocationProblem(
-            g=g, counts=tuple(int(c) for c in counts), choices=tuple(choices),
-            p_choice=p_choice, finite=np.isfinite(p_choice), comm=comm)
+        with _obs.span("lp.assemble", n=g.n, comm_aware=comm_aware,
+                       contention=contention):
+            platform = as_platform(machine, warn=False)
+            counts = platform.to_counts()
+            if rigid:
+                choices = [(q, 1) for q in range(g.num_types)]
+            else:
+                choices = mhlp_choices(g, counts)
+            p_choice = _choice_times(g, choices)
+            comm = (np.asarray(g.comm, dtype=np.float64)
+                    if comm_aware and g.num_edges
+                    else np.zeros(g.num_edges, dtype=np.float64))
+            if comm_aware and contention and g.num_edges:
+                comm = comm * expected_link_load(g, counts)
+            return AllocationProblem(
+                g=g, counts=tuple(int(c) for c in counts),
+                choices=tuple(choices), p_choice=p_choice,
+                finite=np.isfinite(p_choice), comm=comm)
 
     # ------------------------------------------------------------ properties
     @property

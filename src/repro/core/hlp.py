@@ -60,6 +60,7 @@ import dataclasses
 import numpy as np
 from scipy.optimize import linprog
 
+from repro.obs import registry as _obs
 from repro.platform import Decision, as_platform
 
 # mhlp_choices / _choice_times moved to the IR module; re-imported here so
@@ -89,8 +90,9 @@ class HLPSolution:
 def _linprog(lp):
     """Run one assembled LP through HiGHS, returning the ``OptimizeResult``
     (callers read ``res.x`` / ``res.fun``)."""
-    res = linprog(lp.c, A_ub=lp.A_ub, b_ub=lp.b_ub, A_eq=lp.A_eq,
-                  b_eq=lp.b_eq, bounds=lp.bounds, method="highs")
+    with _obs.span("lp.solve", variables=len(lp.c)):
+        res = linprog(lp.c, A_ub=lp.A_ub, b_ub=lp.b_ub, A_eq=lp.A_eq,
+                      b_eq=lp.b_eq, bounds=lp.bounds, method="highs")
     if not res.success:
         raise RuntimeError(f"allocation LP failed: {res.message}")
     return res
@@ -133,18 +135,19 @@ def canonical_round(g: TaskGraph, m: int, k: int, x: np.ndarray, *,
         budget = g.lp_objective([m, k], x) * (1.0 + slack)
         lam = lambda y: g.lp_objective([m, k], y)
 
-    pc, pg = g.proc[:, CPU], g.proc[:, GPU]
-    fast = (pc <= pg).astype(np.float64)        # 1 = CPU is the faster side
-    y = fast.copy()                             # context: undecided -> faster
-    for j in range(g.n):
-        lam_fast = lam(y)                       # y[j] already sits at fast[j]
-        if lam_fast > budget:
-            # over budget on the faster side: keep whichever side hurts the
-            # context λ less (the budget stays the shared reference point)
-            y[j] = 1.0 - fast[j]
-            if lam(y) > max(budget, lam_fast):
-                y[j] = fast[j]
-    return np.where(y >= 0.5, CPU, GPU).astype(np.int32)
+    with _obs.span("lp.canonical_round", n=g.n, slack=slack):
+        pc, pg = g.proc[:, CPU], g.proc[:, GPU]
+        fast = (pc <= pg).astype(np.float64)    # 1 = CPU is the faster side
+        y = fast.copy()                         # context: undecided -> faster
+        for j in range(g.n):
+            lam_fast = lam(y)                   # y[j] already sits at fast[j]
+            if lam_fast > budget:
+                # over budget on the faster side: keep whichever side hurts
+                # the context λ less (the budget stays the shared reference)
+                y[j] = 1.0 - fast[j]
+                if lam(y) > max(budget, lam_fast):
+                    y[j] = fast[j]
+        return np.where(y >= 0.5, CPU, GPU).astype(np.int32)
 
 
 def solve_hlp(g: TaskGraph, m: int, k: int, *, canonical: bool = False,
@@ -270,20 +273,21 @@ def canonical_round_moldable(g: TaskGraph, machine, x: np.ndarray, *,
         width = np.asarray([choices[c][1] for c in picked], dtype=np.int32)
         return g.graham_lower_bound(counts, alloc, width)
 
-    for j in range(g.n):
-        best_c, best_lam = pick[j], np.inf
-        for c in order[j]:
-            pick[j] = c
-            lam = lam_of(pick)
-            if lam <= budget:
-                best_c = c
-                break
-            if lam < best_lam:
-                best_c, best_lam = c, lam
-        pick[j] = best_c
-    alloc = np.asarray([choices[c][0] for c in pick], dtype=np.int32)
-    width = np.asarray([choices[c][1] for c in pick], dtype=np.int32)
-    return alloc, width
+    with _obs.span("lp.canonical_round", n=g.n, slack=slack, moldable=True):
+        for j in range(g.n):
+            best_c, best_lam = pick[j], np.inf
+            for c in order[j]:
+                pick[j] = c
+                lam = lam_of(pick)
+                if lam <= budget:
+                    best_c = c
+                    break
+                if lam < best_lam:
+                    best_c, best_lam = c, lam
+            pick[j] = best_c
+        alloc = np.asarray([choices[c][0] for c in pick], dtype=np.int32)
+        width = np.asarray([choices[c][1] for c in pick], dtype=np.int32)
+        return alloc, width
 
 
 def solve_mhlp(g: TaskGraph, machine, *, canonical: bool = False,

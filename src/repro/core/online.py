@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.obs import registry as _obs
 from repro.platform import Decision, PoolState, as_decision, as_platform
 
 from .dag import CPU, GPU, TaskGraph
@@ -111,12 +112,35 @@ def decide_erls(g: TaskGraph, j: int, m: int, k: int, ready: np.ndarray,
     if g.speedup is None:
         pc, pg = g.proc[j, CPU], g.proc[j, GPU]
         r_gpu = max(state.earliest_idle(GPU), float(ready[GPU]))
-        return erls_decide(pc, pg, m, k, r_gpu)
+        d = erls_decide(pc, pg, m, k, r_gpu)
+        if _obs.enabled():
+            _record_erls(j, d, 1, pc, pg, m, k, r_gpu, 1, 1)
+        return d
     wc = efficient_width(g, j, m)
     wg = efficient_width(g, j, k)
     r_gpu = max(state.earliest_idle(GPU, wg), float(ready[GPU]))
-    return erls_decide_moldable(g.proc_w(j, CPU, wc), g.proc_w(j, GPU, wg),
-                                m, k, r_gpu, wc, wg)
+    pc, pg = g.proc_w(j, CPU, wc), g.proc_w(j, GPU, wg)
+    d = erls_decide_moldable(pc, pg, m, k, r_gpu, wc, wg)
+    if _obs.enabled():
+        _record_erls(j, d.rtype, d.width, pc, pg, m, k, r_gpu, wc, wg)
+    return d
+
+
+def _record_erls(j: int, rtype: int, width: int, pc: float, pg: float,
+                 m: int, k: int, r_gpu: float, wc: int, wg: int) -> None:
+    """Provenance: which ER-LS rule fired for task ``j``.  Re-derives the
+    branch from the same comparisons the decision took — pure observation,
+    never consulted by the decision itself."""
+    from repro.obs import DecisionRecord
+    if pc >= r_gpu + pg:
+        rule = "step1:gpu"
+    elif wc * pc / np.sqrt(m) <= wg * pg / np.sqrt(k):
+        rule = "r2:cpu"
+    else:
+        rule = "r2:gpu"
+    _obs.record_decision(DecisionRecord(
+        scheduler="er_ls", task=j, rtype=int(rtype), width=int(width),
+        rule=rule))
 
 
 def decide_eft(g: TaskGraph, j: int, counts, ready: np.ndarray,

@@ -73,7 +73,8 @@ Entry points::
 from repro.platform import Decision, Platform
 
 from .adapters import ADAPTERS, FrozenPlanScheduler, make_scheduler, plan_for
-from .batch import campaign_mesh, set_campaign_mesh, shard_backend
+from .batch import (campaign_mesh, reset_trace_counts, set_campaign_mesh,
+                    shard_backend, trace_count)
 from .engine import (Machine, MachineState, NoiseModel, Plan, Scheduler,
                      SimResult, TraceEvent, plan_times, simulate)
 from .network import (NETWORKS, FixedLatencyNetwork, InstantNetwork,
@@ -90,6 +91,7 @@ __all__ = [
     "MaxMinFairNetwork", "contention_kernel", "make_network",
     "set_contention_kernel",
     "campaign_mesh", "set_campaign_mesh", "shard_backend",
+    "reset_trace_counts", "trace_count",
     "SCENARIO_FAMILIES", "Scenario", "default_suite", "from_estee",
     "make_scenario", "moldable_suite", "to_estee",
 ]

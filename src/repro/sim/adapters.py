@@ -40,8 +40,48 @@ from repro.core.hlp import solve_hlp, solve_mhlp, solve_qhlp
 from repro.core.hlp_jax import solve_hlp_jax
 from repro.core.listsched import heft, hlp_est, hlp_ols
 from repro.core.online import RULES, decide_eft, decide_erls
+from repro.obs import registry as _obs
 
 from .engine import Machine, MachineState, Plan
+
+
+def _record_lp_provenance(name: str, g: TaskGraph, machine, sol, *,
+                          comm_aware: bool = False,
+                          contention: bool = False) -> None:
+    """Provenance capture for LP-backed allocators: one
+    ``repro.obs.DecisionRecord`` per task — the fractional row, the
+    tie-break the rounding took, and the comm price paid (realized crossing
+    cost) vs priced (what the LP objective saw).  No-op unless the obs
+    registry is enabled; reads the solution only, never alters it."""
+    if not _obs.enabled():
+        return
+    from repro.core.allocation import expected_link_load, task_comm_price
+    from repro.obs import DecisionRecord
+
+    paid = task_comm_price(g, sol.alloc, direction="both")
+    if comm_aware and g.num_edges:
+        priced_comm = np.asarray(g.comm, dtype=np.float64)
+        if contention:
+            priced_comm = priced_comm * expected_link_load(g, machine.counts)
+        priced = task_comm_price(g, sol.alloc, comm=priced_comm,
+                                 direction="both")
+    else:
+        priced = np.zeros(g.n)
+    x = np.asarray(sol.x_frac)
+    for j in range(g.n):
+        if x.ndim == 1:   # hybrid LP: x[j] = CPU fraction
+            xj = (round(float(x[j]), 6),)
+            tb = "threshold:cpu" if x[j] >= 0.5 else "threshold:gpu"
+        else:             # choice-grid LP: argmax row, ties -> fastest
+            row = np.asarray(x[j]).ravel()
+            cand = np.flatnonzero(row >= row.max() - 1e-9)
+            xj = tuple(round(float(v), 6) for v in row)
+            tb = "argmax" if cand.size == 1 else "argmax_tie:min_time"
+        _obs.record_decision(DecisionRecord(
+            scheduler=name, task=j, rtype=int(sol.alloc[j]),
+            width=int(sol.width[j]) if sol.width is not None else 1,
+            x_frac=xj, tie_break=tb,
+            comm_price=float(paid[j]), priced_comm=float(priced[j])))
 
 
 class StaticScheduler:
@@ -66,9 +106,10 @@ class HLPESTScheduler(StaticScheduler):
 
     def _allocate_lp(self, g: TaskGraph, machine: Machine) -> np.ndarray:
         counts = machine.counts
-        if g.num_types == 2:
-            return solve_hlp(g, counts[0], counts[1]).alloc
-        return solve_qhlp(g, machine).alloc
+        sol = (solve_hlp(g, counts[0], counts[1]) if g.num_types == 2
+               else solve_qhlp(g, machine))
+        _record_lp_provenance(self.name, g, machine, sol)
+        return sol.alloc
 
     def _solve(self, g, machine):
         return hlp_est(g, machine, self._allocate_lp(g, machine))
@@ -94,8 +135,10 @@ class HLPJaxOLSScheduler(HLPOLSScheduler):
     def _allocate_lp(self, g, machine):
         if g.num_types != 2:
             raise ValueError("hlp_jax_ols requires Q=2")
-        return solve_hlp_jax(g, machine.counts[0], machine.counts[1],
-                             iters=self.iters, seed=self.seed).alloc
+        sol = solve_hlp_jax(g, machine.counts[0], machine.counts[1],
+                            iters=self.iters, seed=self.seed)
+        _record_lp_provenance(self.name, g, machine, sol)
+        return sol.alloc
 
 
 class CommAwareHLPScheduler(StaticScheduler):
@@ -120,11 +163,13 @@ class CommAwareHLPScheduler(StaticScheduler):
 
     def _allocate_lp(self, g: TaskGraph, machine: Machine) -> np.ndarray:
         counts = machine.counts
-        if g.num_types == 2:
-            return solve_hlp(g, counts[0], counts[1], comm_aware=True,
-                             contention=self.contention).alloc
-        return solve_qhlp(g, machine, comm_aware=True,
-                          contention=self.contention).alloc
+        sol = (solve_hlp(g, counts[0], counts[1], comm_aware=True,
+                         contention=self.contention) if g.num_types == 2
+               else solve_qhlp(g, machine, comm_aware=True,
+                               contention=self.contention))
+        _record_lp_provenance(self.name, g, machine, sol, comm_aware=True,
+                              contention=self.contention)
+        return sol.alloc
 
     def _solve(self, g, machine):
         return hlp_ols(g, machine, self._allocate_lp(g, machine),
@@ -151,6 +196,8 @@ class CommAwareMoldableScheduler(StaticScheduler):
                 contention=self.contention)._solve(g, machine)
         sol = solve_mhlp(g, machine, comm_aware=True,
                          contention=self.contention)
+        _record_lp_provenance(self.name, g, machine, sol, comm_aware=True,
+                              contention=self.contention)
         return hlp_ols(g, machine, sol.alloc, sol.width, comm_tiebreak=True)
 
 
@@ -171,6 +218,7 @@ class MoldableHLPScheduler(StaticScheduler):
         if g.max_width == 1:
             return HLPOLSScheduler()._solve(g, machine)
         sol = solve_mhlp(g, machine)
+        _record_lp_provenance(self.name, g, machine, sol)
         return hlp_ols(g, machine, sol.alloc, sol.width)
 
 

@@ -63,17 +63,58 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.dag import TaskGraph
+from repro.obs import registry as _obs
 
 from .engine import Machine, NoiseModel, Plan
 
-#: number of XLA traces of the bucket evaluator since process start —
-#: incremented inside the jitted function, so it advances once per compile
-#: (shape bucket), not once per call.  Tests assert <= 1 per bucket.
-_TRACES = {"bucket": 0, "single": 0, "contended": 0}
+#: Compile-count kinds tracked by the jitted evaluators.  The increments
+#: live *inside* the jitted function bodies, so each advances once per XLA
+#: trace (shape bucket), not once per call.  Tests assert <= 1 per bucket.
+#: The counts live in the ``repro.obs`` registry under
+#: ``sim.compile.<kind>``; ``_TRACES`` remains as a thin mapping shim for
+#: code that still reads/writes the old module global.
+TRACE_KINDS = ("bucket", "single", "contended")
+
+
+class _TraceShim:
+    """Mapping view over the obs-registry compile counters (legacy
+    ``_TRACES`` interface)."""
+
+    @staticmethod
+    def _key(kind: str) -> str:
+        if kind not in TRACE_KINDS:
+            raise ValueError(f"unknown trace kind {kind!r}; "
+                             f"valid kinds: {', '.join(TRACE_KINDS)}")
+        return f"sim.compile.{kind}"
+
+    def __getitem__(self, kind: str) -> int:
+        return _obs.counter_value(self._key(kind))
+
+    def __setitem__(self, kind: str, value: int) -> None:
+        _obs.set_counter(self._key(kind), value)
+
+    def __iter__(self):
+        return iter(TRACE_KINDS)
+
+    def items(self):
+        return [(k, self[k]) for k in TRACE_KINDS]
+
+
+_TRACES = _TraceShim()
 
 
 def trace_count(kind: str = "bucket") -> int:
+    """XLA traces of the ``kind`` evaluator since process start (or the
+    last :func:`reset_trace_counts`).  Raises ``ValueError`` on unknown
+    kinds, listing the valid ones."""
     return _TRACES[kind]
+
+
+def reset_trace_counts() -> None:
+    """Zero every compile counter — test setup, so assertions read absolute
+    counts instead of hand-rolled before/after deltas."""
+    for kind in TRACE_KINDS:
+        _TRACES[kind] = 0
 
 
 # ---------------------------------------------------------------- plan DAGs
@@ -265,7 +306,7 @@ def rollout_floors(g: TaskGraph, plan: Plan, busy: list[np.ndarray],
 
 @jax.jit
 def _batch_makespans(dag: PlanDag, times: jnp.ndarray) -> jnp.ndarray:
-    _TRACES["single"] += 1  # trace-time side effect: counts compiles
+    _obs.bump("sim.compile.single")  # trace-time side effect: counts compiles
     return jax.vmap(partial(_one_makespan, dag))(times)
 
 
@@ -412,7 +453,7 @@ def bucket_plans(items: list[tuple[TaskGraph, Plan]]
 
 @jax.jit
 def _bucket_makespans(bd: BatchedPlanDag, times: jnp.ndarray) -> jnp.ndarray:
-    _TRACES["bucket"] += 1  # trace-time side effect: counts compiles
+    _obs.bump("sim.compile.bucket")  # trace-time side effect: counts compiles
 
     def per_item(order, pred, mask, delay, floor, width, t):
         return jax.vmap(partial(_one_makespan,
@@ -462,7 +503,7 @@ def _contended_durations(cb: ContendedBucket, num_links: int,
     """
     from .network import fluid_finishes_jax
 
-    _TRACES["contended"] += 1  # trace-time side effect: counts compiles
+    _obs.bump("sim.compile.contended")  # trace-time side effect: compiles
 
     def per_plan(order, pred, mask, tid, times, src, size, up, dn,
                  t_mask, cap):
@@ -568,7 +609,8 @@ def contended_bucket_delays(items: list, networks: list) -> list[np.ndarray]:
             dn[b, :T] = tr.dn
             t_mask[b, :T] = True
             cap[b] = tr.capacity
-        with enable_x64():
+        with _obs.span("sim.contended.fixpoint", bucket=f"{n_pad}x{P_pad}",
+                       links=L, plans=B), enable_x64():
             cb = ContendedBucket(
                 order=jnp.asarray(order), pred=jnp.asarray(pred),
                 pred_mask=jnp.asarray(pred >= 0), pred_tid=jnp.asarray(tid),
@@ -696,7 +738,9 @@ def _bucket_makespans_sharded(bd: BatchedPlanDag, times: jnp.ndarray,
         if D <= 1 or B < 2:
             return _bucket_makespans(bd, times)
         bdp, tp, _ = _pad_plan_axis(bd, times, D)
-        out = _shard_fn(mesh)(bdp, tp)[:B]
+        with _obs.span("sim.shard.dispatch", backend="shard_map",
+                       devices=D, plans=B):
+            out = _shard_fn(mesh)(bdp, tp)[:B]
     else:   # "none": always the single program
         return _bucket_makespans(bd, times)
     assert out.shape == (B, S), \
@@ -751,16 +795,21 @@ def bucketed_makespans(items: list[tuple[TaskGraph, Plan]],
 
     out: list[np.ndarray | None] = [None] * len(items)
     for key, idxs in bucket_plans(items).items():
-        bd = BatchedPlanDag.from_plans(
-            [items[i] for i in idxs],
-            floors=[floors[i] for i in idxs] if floors is not None else None,
-            pad_to=key if envelope else None,
-            networks=([networks[i] for i in idxs]
-                      if networks is not None else None))
-        tt = np.stack([_pad_times(np.asarray(times[i], dtype=np.float64),
-                                  bd.n_pad) for i in idxs])
-        ms = np.asarray(_bucket_makespans_sharded(bd, jnp.asarray(tt),
-                                                  mesh=mesh))
+        with _obs.span("sim.bucket.build", bucket=f"{key[0]}x{key[1]}",
+                       plans=len(idxs)):
+            bd = BatchedPlanDag.from_plans(
+                [items[i] for i in idxs],
+                floors=([floors[i] for i in idxs]
+                        if floors is not None else None),
+                pad_to=key if envelope else None,
+                networks=([networks[i] for i in idxs]
+                          if networks is not None else None))
+            tt = np.stack([_pad_times(np.asarray(times[i], dtype=np.float64),
+                                      bd.n_pad) for i in idxs])
+        with _obs.span("sim.bucket.execute", bucket=f"{key[0]}x{key[1]}",
+                       plans=len(idxs)):
+            ms = np.asarray(_bucket_makespans_sharded(bd, jnp.asarray(tt),
+                                                      mesh=mesh))
         for row, i in enumerate(idxs):
             out[i] = ms[row]
     return out  # type: ignore[return-value]

@@ -43,6 +43,7 @@ import numpy as np
 
 from repro.core.dag import TaskGraph
 from repro.core.listsched import Schedule
+from repro.obs import registry as _obs
 from repro.platform import Platform, PoolState, as_decision
 
 
@@ -568,18 +569,21 @@ def simulate(g: TaskGraph, machine: Machine, scheduler: Scheduler, *,
         if job_of.shape != (g.n,):
             raise ValueError(f"job_of must be (n,), got {job_of.shape}")
 
-    plan = scheduler.allocate(g, machine)
+    sched_name = getattr(scheduler, "name", type(scheduler).__name__)
+    with _obs.span("sim.allocate", scheduler=sched_name, n=g.n):
+        plan = scheduler.allocate(g, machine)
     if plan is not None:
-        times = plan_times(g, plan, actual)
-        if network is None:
-            start, finish = _execute_plan(g, plan, times, release)
-        elif network.contended:
-            start, finish = _execute_plan_network(g, plan, times, release,
-                                                  network)
-        else:
-            start, finish = _execute_plan(
-                g, plan, times, release,
-                delay=network.plan_delays(g, plan.alloc))
+        with _obs.span("sim.execute", scheduler=sched_name, n=g.n):
+            times = plan_times(g, plan, actual)
+            if network is None:
+                start, finish = _execute_plan(g, plan, times, release)
+            elif network.contended:
+                start, finish = _execute_plan_network(g, plan, times, release,
+                                                      network)
+            else:
+                start, finish = _execute_plan(
+                    g, plan, times, release,
+                    delay=network.plan_delays(g, plan.alloc))
         sched = Schedule(alloc=np.asarray(plan.alloc, dtype=np.int32),
                          proc=np.asarray(plan.proc, dtype=np.int32),
                          start=start, finish=finish,
@@ -595,13 +599,15 @@ def simulate(g: TaskGraph, machine: Machine, scheduler: Scheduler, *,
             # execution-accurate readiness: the arrival loops charge the
             # model's per-edge costs instead of the graph's fixed ones
             g_run = dataclasses.replace(g, comm=network.effective_comm(g))
-        if arrival == "ready":
-            alloc, proc, start, finish, width, procs = run_arrivals_ready(
-                g_run, machine, scheduler, actual, release)
-        else:
-            alloc, proc, start, finish, width, procs = _run_arrivals(
-                g_run, machine, scheduler, actual, release,
-                g.topo if order is None else order)
+        with _obs.span("sim.arrivals", scheduler=sched_name, n=g.n,
+                       arrival=arrival):
+            if arrival == "ready":
+                alloc, proc, start, finish, width, procs = run_arrivals_ready(
+                    g_run, machine, scheduler, actual, release)
+            else:
+                alloc, proc, start, finish, width, procs = _run_arrivals(
+                    g_run, machine, scheduler, actual, release,
+                    g.topo if order is None else order)
         sched = Schedule(alloc=alloc, proc=proc, start=start, finish=finish,
                          width=width, procs=procs)
 
@@ -637,6 +643,4 @@ def simulate(g: TaskGraph, machine: Machine, scheduler: Scheduler, *,
         events = tuple(sorted(ev, key=lambda e: (e.time, rank[e.event],
                                                  e.task)))
     return SimResult(schedule=sched, actual=actual, trace=events,
-                     scheduler=getattr(scheduler, "name",
-                                       type(scheduler).__name__),
-                     job_of=job_of)
+                     scheduler=sched_name, job_of=job_of)

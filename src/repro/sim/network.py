@@ -57,6 +57,7 @@ import os
 import numpy as np
 
 from repro.core.dag import TaskGraph
+from repro.obs import registry as _obs
 
 _EPS = 1e-12
 
@@ -241,6 +242,11 @@ class TransferTracker:
     def __init__(self, network: NetworkModel):
         self.network = network
         self._active: list[tuple[float, float, tuple]] = []  # (start, fin, links)
+        #: (start, fin, links, size) per registered transfer while the obs
+        #: registry is enabled — the Perfetto link-lane source
+        #: (``repro.obs.trace.transfer_trace_events``).  Pure log: never
+        #: read back by the fluid model.
+        self.log: list[tuple[float, float, tuple, float]] = []
 
     def clone(self) -> "TransferTracker":
         t = TransferTracker(self.network)
@@ -274,6 +280,8 @@ class TransferTracker:
         fin = self._finish_time(now, size, links)
         if size > 0.0:
             self._active.append((now, fin, tuple(links)))
+            if _obs.enabled():
+                self.log.append((now, fin, tuple(links), float(size)))
         return fin
 
 

@@ -29,6 +29,7 @@ import numpy as np
 from repro.core.listsched import Schedule
 from repro.core.online import ready_per_type
 from repro.core.theory import makespan_lower_bound
+from repro.obs import registry as _obs
 from repro.platform import as_decision
 from repro.sim.engine import Machine, MachineState, NoiseModel
 
@@ -75,6 +76,10 @@ class StreamResult:
     jobs: list[JobRecord]
     tasks: list[TaskRecord]
     horizon: float
+    #: ``TransferTracker`` log — (start, finish, links, size) per registered
+    #: network transfer; populated only when a contended network ran with
+    #: the obs registry enabled (the Perfetto link-lane source).
+    transfers: tuple = ()
 
     def tenant_table(self, tau: float = BSLD_TAU) -> dict[int, dict[str, float]]:
         return tenant_summary(self.jobs, tau)
@@ -255,10 +260,13 @@ def run_stream(source, machine: Machine, policy, *,
         js.units[i] = pids
         js.proc[i], js.start[i], js.finish[i] = pids[0], s, f
         js.committed += 1
+        if _obs.enabled():
+            _obs.bump("stream.tasks_committed")
         ledger.add_task(TaskRecord(jid=js.job.jid, task=i,
                                    tenant=js.job.tenant, rtype=q,
                                    proc=pids[0], arrival=t, start=s,
-                                   finish=f, width=w))
+                                   finish=f, width=w,
+                                   units=tuple(int(p) for p in pids)))
         for v in map(int, g.succs(i)):
             js.remaining[v] -= 1
             if js.remaining[v] == 0:
@@ -288,4 +296,6 @@ def run_stream(source, machine: Machine, policy, *,
         _validate_stream(states, ledger.tasks, counts, network=network)
     return StreamResult(policy=getattr(policy, "name", type(policy).__name__),
                         machine=machine, jobs=ledger.jobs,
-                        tasks=ledger.tasks, horizon=ledger.horizon)
+                        tasks=ledger.tasks, horizon=ledger.horizon,
+                        transfers=(tuple(tracker.log)
+                                   if tracker is not None else ()))

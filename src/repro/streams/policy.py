@@ -38,6 +38,7 @@ import time
 import numpy as np
 
 from repro.core.listsched import Schedule
+from repro.obs import registry as _obs
 from repro.sim.adapters import FrozenPlanScheduler, make_scheduler
 from repro.sim.batch import rollout_floors, sweep_suite_makespans
 from repro.sim.engine import (Machine, MachineState, NoiseModel, Plan,
@@ -193,21 +194,27 @@ class SimInTheLoop(StreamPolicy):
             # spike (GC pause, new bucket compile) doesn't latch the
             # fallback for the rest of the stream
             self.decisions.append((job.jid, f"fallback:{self.fallback.name}"))
+            if _obs.enabled():
+                _obs.bump("stream.rollout_fallbacks")
             return
         t0 = time.perf_counter()
         cands = (COMM_CANDIDATES
                  if self._auto_candidates and job.graph.has_comm
                  else self.candidates)
-        busy = [state.busy_until(q) for q in range(machine.num_types)]
-        plans = [conditioned_plan(c, job.graph, machine, busy, t)
-                 for c in cands]
-        sweeps = sweep_suite_makespans(
-            [(job.graph, machine, FrozenPlanScheduler(p, name=c))
-             for c, p in zip(cands, plans)],
-            noise=self.rollout_noise, seeds=self.rollout_seeds,
-            floor_fn=lambda g, p: rollout_floors(g, p, busy, now=t),
-            envelope=True)
+        with _obs.span("stream.rollout", jid=job.jid,
+                       candidates=len(cands)):
+            busy = [state.busy_until(q) for q in range(machine.num_types)]
+            plans = [conditioned_plan(c, job.graph, machine, busy, t)
+                     for c in cands]
+            sweeps = sweep_suite_makespans(
+                [(job.graph, machine, FrozenPlanScheduler(p, name=c))
+                 for c, p in zip(cands, plans)],
+                noise=self.rollout_noise, seeds=self.rollout_seeds,
+                floor_fn=lambda g, p: rollout_floors(g, p, busy, now=t),
+                envelope=True)
         best = cands[int(np.argmin([float(s.mean()) for s in sweeps]))]
+        if _obs.enabled():
+            _obs.bump("stream.rollouts")
         # The winner is installed as the job's *allocator*, not a frozen
         # allocation: arrival-driven winners keep deciding per task against
         # the machine state as it actually evolves (freezing the arrival-time

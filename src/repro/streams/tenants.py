@@ -28,6 +28,11 @@ class TaskRecord:
     start: float
     finish: float
     width: int = 1     # units occupied (the ``Decision`` width)
+    units: tuple[int, ...] = ()   # the full unit set a width-w commit
+    #                               claimed (may be non-contiguous); empty =
+    #                               just ``proc`` (width-1).  Feeds the
+    #                               per-unit Perfetto lanes
+    #                               (``repro.obs.trace.stream_trace_events``).
 
     @property
     def wait(self) -> float:

@@ -1,6 +1,6 @@
 """Public-API snapshot — breaks surface in PRs, not in user code.
 
-``__all__`` of the four scheduling-facing packages is pinned; additions are
+``__all__`` of the scheduling-facing packages is pinned; additions are
 fine (extend the snapshot in the same PR, with the changelog naming them),
 but a *removal or rename* fails here first.  Every exported name must also
 resolve to a real attribute.
@@ -34,8 +34,19 @@ API = {
         "SCENARIO_FAMILIES", "Scenario", "Scheduler", "SimResult",
         "TraceEvent", "campaign_mesh", "contention_kernel", "default_suite",
         "from_estee", "make_network", "make_scenario", "make_scheduler",
-        "moldable_suite", "plan_for", "plan_times", "set_campaign_mesh",
-        "set_contention_kernel", "shard_backend", "simulate", "to_estee",
+        "moldable_suite", "plan_for", "plan_times", "reset_trace_counts",
+        "set_campaign_mesh", "set_contention_kernel", "shard_backend",
+        "simulate", "to_estee", "trace_count",
+    ],
+    "repro.obs": [
+        "CHROME_REQUIRED_KEYS", "DecisionRecord", "bump", "capture",
+        "counter_value", "counters", "decision_records", "disable",
+        "dump_decisions", "enable", "enabled", "explain_divergence",
+        "export_chrome_trace", "gauges", "load_chrome_trace",
+        "provenance_diff", "record_decision", "reset", "set_counter",
+        "set_gauge", "sim_trace_events", "snapshot", "span",
+        "stream_trace_events", "timer", "transfer_trace_events",
+        "wall_events", "wall_trace_events",
     ],
     "repro.streams": [
         "AdapterPolicy", "COMM_CANDIDATES", "ClosedLoopSource",

@@ -1,0 +1,122 @@
+"""Edge cases of the perf-trajectory CLI (``render_tables``).
+
+Covers ``--diff-bench`` / ``--check-bench`` against hand-built
+``repro.bench.v1`` documents: the zero-valued-old-metric formatting branch,
+benches present on only one side, the host-mismatch warning, trajectories
+missing ``wall_s`` (must print ``n/a``, not KeyError), the schema check,
+and the drift gate's pass/fail/missing-metric verdicts.
+"""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks.render_tables import (_fmt_delta, check_bench, load_bench,
+                                      render_bench_diff)  # noqa: E402
+
+
+def _doc(benches, host=None, seed=0, full=False):
+    return {"schema": "repro.bench.v1",
+            "run": {"seed": seed, "full": full, "targets": sorted(benches)},
+            "host": host or {"backend": "cpu", "device_count": 1},
+            "benches": benches}
+
+
+def _write(tmp_path, name, doc):
+    path = os.path.join(tmp_path, name)
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    return path
+
+
+def test_fmt_delta_zero_old_has_no_percentage():
+    assert "%" not in _fmt_delta(0, 3.5)
+    assert "+75.0%" in _fmt_delta(2.0, 3.5)
+
+
+def test_load_bench_rejects_wrong_schema(tmp_path):
+    path = _write(tmp_path, "bad.json", {"schema": "nope.v9", "benches": {}})
+    with pytest.raises(ValueError, match="repro.bench.v1"):
+        load_bench(path)
+
+
+def test_diff_handles_bench_on_one_side_only(tmp_path):
+    old = _write(tmp_path, "old.json",
+                 _doc({"sim": {"wall_s": 1.0, "lines": []}}))
+    new = _write(tmp_path, "new.json",
+                 _doc({"sim": {"wall_s": 2.0, "lines": []},
+                       "streams": {"wall_s": 3.0, "lines": []}}))
+    out = render_bench_diff(old, new)
+    assert "streams: only in new" in out
+    assert "wall_s: 1 -> 2 (+100.0%)" in out
+    out_rev = render_bench_diff(new, old)
+    assert "streams: only in old" in out_rev
+
+
+def test_diff_prints_na_for_missing_wall_s(tmp_path):
+    old = _write(tmp_path, "old.json", _doc({"sim": {"lines": []}}))
+    new = _write(tmp_path, "new.json",
+                 _doc({"sim": {"wall_s": 2.0, "lines": []}}))
+    out = render_bench_diff(old, new)          # must not KeyError
+    assert "wall_s: n/a -> 2" in out
+    assert "wall_s: 2 -> n/a" in render_bench_diff(new, old)
+
+
+def test_diff_warns_on_host_mismatch(tmp_path):
+    old = _write(tmp_path, "old.json",
+                 _doc({"sim": {"wall_s": 1.0, "lines": []}},
+                      host={"backend": "cpu", "device_count": 1}))
+    new = _write(tmp_path, "new.json",
+                 _doc({"sim": {"wall_s": 1.0, "lines": []}},
+                      host={"backend": "tpu", "device_count": 8}))
+    out = render_bench_diff(old, new)
+    assert "different substrates" in out
+    assert "host.backend: cpu -> tpu" in out
+    same = render_bench_diff(old, old)
+    assert "different substrates" not in same
+
+
+def test_diff_zero_valued_old_metric(tmp_path):
+    """A metric that was 0 in the old run must render without the
+    divide-by-zero percentage."""
+    old = _write(tmp_path, "old.json",
+                 _doc({"sim": {"wall_s": 1.0, "lines": [], "compiles": 0}}))
+    new = _write(tmp_path, "new.json",
+                 _doc({"sim": {"wall_s": 1.0, "lines": [], "compiles": 7}}))
+    out = render_bench_diff(old, new)
+    assert "compiles: 0 -> 7" in out
+    assert "compiles: 0 -> 7 (" not in out     # no percentage after it
+
+
+def test_check_bench_ok_and_drift(tmp_path, capsys):
+    pinned = _write(tmp_path, "pinned.json",
+                    _doc({"sim": {"metrics": {"ratio": 1.10}}}))
+    good = _write(tmp_path, "good.json",
+                  _doc({"sim": {"wall_s": 1.0, "lines": [],
+                                "metrics": {"ratio": 1.12}}}))
+    assert check_bench(good, pinned, rtol=0.05) == 0
+    bad = _write(tmp_path, "bad.json",
+                 _doc({"sim": {"wall_s": 1.0, "lines": [],
+                               "metrics": {"ratio": 1.30}}}))
+    assert check_bench(bad, pinned, rtol=0.05) == 1
+    assert "drifted" in capsys.readouterr().out
+
+
+def test_check_bench_fails_on_missing_metric(tmp_path, capsys):
+    pinned = _write(tmp_path, "pinned.json",
+                    _doc({"sim": {"metrics": {"ratio": 1.10, "gone": 2.0}}}))
+    new = _write(tmp_path, "new.json",
+                 _doc({"sim": {"wall_s": 1.0, "lines": [],
+                               "metrics": {"ratio": 1.10}}}))
+    assert check_bench(new, pinned) == 1
+    assert "missing from new run" in capsys.readouterr().out
+
+
+def test_check_bench_fails_when_nothing_pinned(tmp_path, capsys):
+    pinned = _write(tmp_path, "pinned.json", _doc({"sim": {}}))
+    new = _write(tmp_path, "new.json",
+                 _doc({"sim": {"metrics": {"ratio": 1.0}}}))
+    assert check_bench(new, pinned) == 1
+    assert "nothing" in capsys.readouterr().err

@@ -13,7 +13,8 @@ import pytest
 
 from repro.sim import (make_network, make_scheduler, plan_times,
                        set_contention_kernel)
-from repro.sim.batch import _delay_overrides, bucketed_makespans, trace_count
+from repro.sim.batch import (_delay_overrides, bucketed_makespans,
+                             reset_trace_counts, trace_count)
 from repro.sim.network import _fluid_finishes, fluid_finishes_jax
 from repro.sim.scenarios import netbound_scenario
 
@@ -93,13 +94,13 @@ def test_bucketed_makespans_agree_between_kernels():
 
 def test_contended_kernel_traces_once_per_envelope():
     items, nets = _netbound_items()
-    t0 = trace_count("contended")
+    reset_trace_counts()
     _delay_overrides(items, nets)
-    traced = trace_count("contended") - t0
+    traced = trace_count("contended")
     assert traced <= 1, f"one netbound envelope should cost <= 1 compile, " \
                         f"got {traced}"
     _delay_overrides(items, nets)     # same shapes: cache hit, no retrace
-    assert trace_count("contended") - t0 == traced
+    assert trace_count("contended") == traced
 
 
 def test_set_contention_kernel_validates():

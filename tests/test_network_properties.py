@@ -122,7 +122,8 @@ def test_jitted_fluid_kernel_matches_numpy_oracle(ts, cap):
 def test_contended_netbound_bucket_traces_once():
     """The whole contended netbound grid costs <= 1 contended-kernel
     compile (the ≤-1-per-bucket invariant extends to the fixpoint)."""
-    from repro.sim.batch import _delay_overrides, trace_count
+    from repro.sim.batch import (_delay_overrides, reset_trace_counts,
+                                 trace_count)
     from repro.sim.scenarios import netbound_scenario
 
     net = make_network("maxmin_fair")
@@ -131,6 +132,6 @@ def test_contended_netbound_bucket_traces_once():
         sc = netbound_scenario(seed=700 + i)
         plan = make_scheduler("hlp_ols").allocate(sc.graph, sc.machine)
         items.append((sc.graph, plan))
-    t0 = trace_count("contended")
+    reset_trace_counts()
     _delay_overrides(items, [net] * len(items))
-    assert trace_count("contended") - t0 <= 1
+    assert trace_count("contended") <= 1

@@ -199,15 +199,15 @@ def test_one_xla_compile_per_bucket():
     for g, machine, sched in entries:
         items.append((g, sched.allocate(g, machine)))
     n_buckets = len(batch.bucket_plans(items))
-    before = batch.trace_count("bucket")
+    batch.reset_trace_counts()
     out = batch.sweep_suite_makespans(entries, noise=noise, seeds=seeds)
-    compiles = batch.trace_count("bucket") - before
+    compiles = batch.trace_count("bucket")
     assert len(out) == len(entries)
     assert compiles <= n_buckets, (compiles, n_buckets)
     # the same shapes re-run for free: zero fresh traces
-    before = batch.trace_count("bucket")
+    batch.reset_trace_counts()
     batch.sweep_suite_makespans(entries, noise=noise, seeds=seeds)
-    assert batch.trace_count("bucket") == before
+    assert batch.trace_count("bucket") == 0
 
 
 def test_bucketed_rejects_misaligned_inputs():
