@@ -274,8 +274,9 @@ def render_bench_diff(old_path: str, new_path: str) -> str:
 def check_bench(new_path: str, pinned_path: str, rtol: float = 0.05) -> int:
     """Fail (return 1) when diffable makespan metrics drift from pins.
 
-    Compares ``benches.sim.metrics`` of ``new_path`` against every metric
-    the pinned file carries: a pin is violated when
+    Compares ``benches.<name>.metrics`` of ``new_path`` against every
+    metric the pinned file carries, for every bench that pins a ``metrics``
+    dict (``sim``, ``search``, ...): a pin is violated when
     ``|new - pinned| > rtol * |pinned|``.  Metrics absent from the new
     trajectory also fail (a silently dropped metric is a regression).
     Timings/throughput are intentionally *not* checked — they belong to the
@@ -283,27 +284,33 @@ def check_bench(new_path: str, pinned_path: str, rtol: float = 0.05) -> int:
     """
     new = load_bench(new_path)
     pinned = load_bench(pinned_path)
-    new_m = new.get("benches", {}).get("sim", {}).get("metrics", {})
-    pin_m = pinned.get("benches", {}).get("sim", {}).get("metrics", {})
-    if not pin_m:
+    pins = {bench: d["metrics"]
+            for bench, d in pinned.get("benches", {}).items()
+            if isinstance(d, dict) and d.get("metrics")}
+    if not pins:
         print(f"# check-bench: {pinned_path} pins no sim metrics — nothing "
               "to check", file=sys.stderr)
         return 1
-    bad = []
-    for k, want in sorted(pin_m.items()):
-        got = new_m.get(k)
-        if got is None:
-            bad.append(f"  {k}: pinned {want:.6g} but missing from new run")
-        elif abs(got - want) > rtol * abs(want):
-            bad.append(f"  {k}: {got:.6g} drifted from pinned {want:.6g} "
-                       f"({(got / want - 1) * 100:+.2f}% > ±{rtol * 100:.0f}%)")
+    bad, total = [], 0
+    for bench, pin_m in sorted(pins.items()):
+        new_m = new.get("benches", {}).get(bench, {}).get("metrics", {})
+        total += len(pin_m)
+        for k, want in sorted(pin_m.items()):
+            got = new_m.get(k)
+            if got is None:
+                bad.append(f"  {bench}.{k}: pinned {want:.6g} but missing "
+                           "from new run")
+            elif abs(got - want) > rtol * abs(want):
+                bad.append(f"  {bench}.{k}: {got:.6g} drifted from pinned "
+                           f"{want:.6g} ({(got / want - 1) * 100:+.2f}% > "
+                           f"±{rtol * 100:.0f}%)")
     if bad:
-        print(f"# check-bench FAILED ({len(bad)}/{len(pin_m)} metrics "
+        print(f"# check-bench FAILED ({len(bad)}/{total} metrics "
               f"drifted beyond rtol={rtol}):")
         print("\n".join(bad))
         return 1
-    print(f"# check-bench OK: {len(pin_m)} pinned sim metrics within "
-          f"rtol={rtol}")
+    print(f"# check-bench OK: {total} pinned sim metrics within "
+          f"rtol={rtol} across {len(pins)} benches")
     return 0
 
 

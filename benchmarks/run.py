@@ -159,6 +159,55 @@ def bench_sim(full: bool, seed: int = 0) -> list[str]:
     return lines
 
 
+def bench_search(full: bool, seed: int = 0) -> list[str]:
+    """Population-based plan search vs the LP+OLS pipeline (repro.search):
+    the ``sim/evo_gap`` headline is how much makespan the best heuristic
+    seed leaves on the table against the evolved plan at n ≈ 50–500."""
+    from . import campaign
+    with obs.timer("bench.search") as sp:
+        r = campaign.search_sweep(full=full, base_seed=seed)
+    dt = sp.dur
+    per = dt / max(r["cells"], 1) * 1e6
+    gap = (r["ratios"]["evo_gap"] - 1) * 100
+    lines = [f"sim/evo_gap,{per:.0f},seed_excess_pct={gap:.2f};"
+             f"mean_ratio={r['ratios']['evo_gap']:.4f}"]
+    lines.append(f"search/evo_vs_lb,{per:.0f},"
+                 f"mean_ratio_lb={r['ratios']['evo_vs_lb']:.4f}")
+    lines.append(f"search/lp_vs_evo,{per:.0f},"
+                 f"lp_excess_pct={(r['ratios']['lp_vs_evo'] - 1) * 100:.2f}")
+    lines.append(f"search/anytime_gain,{per:.0f},"
+                 f"beyond_gen0_pct={(r['ratios']['anytime_gain'] - 1) * 100:.2f}")
+    for meth in ("cem", "sa"):
+        lines.append(f"search/{meth}_vs_ga,{per:.0f},"
+                     f"ratio={r['ratios'][f'{meth}_vs_ga']:.4f}")
+    search_s = sum(r["phase_seconds"].values())
+    throughput = r["evals"] / max(search_s, 1e-9)
+    lines.append(f"search/throughput_evals_per_sec,{per:.0f},"
+                 f"evals_per_sec={throughput:.1f}")
+    BENCH_EXTRAS["search"] = {
+        "phase_seconds": r["phase_seconds"],
+        "compiles": r["compiles"],
+        "buckets": r["buckets"],
+        "cells": r["cells"],
+        "max_n": r["max_n"],
+        "evals": r["evals"],
+        "cache_hits": r["cache_hits"],
+        "throughput_evals_per_sec": throughput,
+        "metrics": r["ratios"],
+    }
+    print(f"# search: {r['cells']} (scenario × seed) cells up to "
+          f"n={r['max_n']} in {dt:.1f}s | {r['evals']} genome evals "
+          f"(+{r['cache_hits']} cache hits) in {r['compiles']} XLA compiles "
+          f"over {r['buckets']} shape buckets | {throughput:.0f} evals/s")
+    print(f"#   evo_gap: best heuristic seed pays {gap:+.2f}% mean makespan "
+          f"vs the evolved plan (anytime-no-worse by construction; "
+          f"LP+OLS leaves {(r['ratios']['lp_vs_evo'] - 1) * 100:+.2f}%)")
+    print(f"#   methods on {('full' if full else 'quick')} scenario 0: "
+          f"cem/ga={r['ratios']['cem_vs_ga']:.4f} "
+          f"sa/ga={r['ratios']['sa_vs_ga']:.4f} (<1 beats the GA)")
+    return lines
+
+
 def bench_streams(full: bool, seed: int = 0) -> list[str]:
     """Open-system streams: (arrival process × policy × seed) grid with
     per-tenant bounded slowdown, utilization, and rollout compile count."""
@@ -256,6 +305,7 @@ BENCHES = {
     "offline3": bench_offline3,
     "online": bench_online,
     "sim": bench_sim,
+    "search": bench_search,
     "streams": bench_streams,
     "solver": bench_solver,
     "kernels": bench_kernels,

@@ -1,0 +1,46 @@
+"""Plan search: evolve (allocation, priority) genomes past the heuristics.
+
+Builds a communication-bound layered DAG, seeds generation 0 with the
+canonical-rounded LP plan / HEFT / ER-LS, and lets the GA search the joint
+(mapping, ordering) space — every generation scored as one fixed-shape
+batch through the bucketed JAX evaluator, so the whole run costs a single
+XLA compile.  Prints the anytime best-fitness trajectory, the gap each
+heuristic leaves to the evolved plan, and a CEM comparison sharing the
+same compiled batch.
+
+  PYTHONPATH=src python examples/plan_search.py
+"""
+from repro.search import SearchConfig, evolve_plan
+from repro.sim.batch import reset_trace_counts, trace_count
+from repro.sim.scenarios import layered_scenario
+
+sc = layered_scenario(n=60, layers=6, seed=11, ccr=1.0)
+print(f"scenario: {sc.name} ({sc.graph.n} tasks, "
+      f"{sc.graph.num_edges} edges, counts={list(sc.counts)})")
+
+reset_trace_counts()
+res = evolve_plan(sc.graph, sc.machine,
+                  SearchConfig(method="ga", pop_size=32, generations=12,
+                               comm_aware=True), seed=0)
+
+print("\nseed heuristics (clean makespan):")
+for name, ms in sorted(res.seed_fitness.items(), key=lambda kv: kv[1]):
+    gap = (ms / res.fitness - 1) * 100
+    print(f"  {name:6s} {ms:8.3f}  (+{gap:.2f}% vs evolved)")
+
+print(f"\nevolved ({res.method}): {res.fitness:.3f} after "
+      f"{len(res.history) - 1} generations, {res.evals} genome evals "
+      f"(+{res.cache_hits} cache hits), "
+      f"{trace_count('bucket')} XLA compile(s)")
+print("anytime trajectory:",
+      " -> ".join(f"{h:.2f}" for h in res.history))
+
+# CEM rides the exact same compiled batch shape: still 1 compile total.
+cem = evolve_plan(sc.graph, sc.machine,
+                  SearchConfig(method="cem", pop_size=32, generations=12,
+                               comm_aware=True), seed=0)
+print(f"cem: {cem.fitness:.3f}  (ga/cem = {res.fitness / cem.fitness:.4f}, "
+      f"compiles still {trace_count('bucket')})")
+
+assert res.fitness <= min(res.seed_fitness.values()) + 1e-9, \
+    "anytime dominance must hold by construction"

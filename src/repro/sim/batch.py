@@ -815,6 +815,69 @@ def bucketed_makespans(items: list[tuple[TaskGraph, Plan]],
     return out  # type: ignore[return-value]
 
 
+def fixed_envelope_makespans(items: list[tuple[TaskGraph, Plan]],
+                             times: list[np.ndarray],
+                             pad_to: tuple[int, int],
+                             floors: list[np.ndarray] | None = None,
+                             mesh=None) -> list[np.ndarray]:
+    """Replay many plans as ONE bucket padded to a caller-fixed envelope.
+
+    :func:`bucketed_makespans` keys each plan by its own power-of-two
+    envelope, so a population whose widths straddle a power-of-two boundary
+    splits into several buckets whose composition shifts call to call — and
+    the per-call plan count B is part of the traced shape.  Iterative
+    searches (``repro.search.evolve_plan``) instead pin BOTH axes: every
+    call pads all plans to the same ``pad_to = (n_pad, P_pad)`` envelope
+    and the caller keeps ``len(items)`` constant (padding with repeats), so
+    an entire generation loop retraces nothing after its first batch.
+
+    Every item must FIT the envelope — a plan larger than ``pad_to`` would
+    silently grow the compiled shape, so it raises instead.
+
+    Returns a list of (S,) makespan arrays, one per item, in input order.
+    """
+    if len(items) != len(times):
+        raise ValueError("items and times must align")
+    if not items:
+        return []
+    S = {t.shape[0] for t in times}
+    if len(S) != 1:
+        raise ValueError(f"all items must share one seed grid, got S={sorted(S)}")
+    for (g, _), t in zip(items, times):
+        if t.ndim != 2 or t.shape[1] != g.n:
+            raise ValueError(f"times must be (S, n={g.n}), got {t.shape}")
+    with _obs.span("sim.bucket.build", bucket=f"{pad_to[0]}x{pad_to[1]}",
+                   plans=len(items)):
+        bd = BatchedPlanDag.from_plans(items, floors=floors, pad_to=pad_to)
+        if (bd.n_pad, bd.pred.shape[2]) != tuple(pad_to):
+            raise ValueError(
+                f"item exceeds the fixed envelope {tuple(pad_to)}: bucket "
+                f"padded to {(bd.n_pad, bd.pred.shape[2])}")
+        tt = np.stack([_pad_times(np.asarray(t, dtype=np.float64), bd.n_pad)
+                       for t in times])
+    with _obs.span("sim.bucket.execute", bucket=f"{pad_to[0]}x{pad_to[1]}",
+                   plans=len(items)):
+        ms = np.asarray(_bucket_makespans_sharded(bd, jnp.asarray(tt),
+                                                  mesh=mesh))
+    return [ms[i] for i in range(len(items))]
+
+
+def search_envelope(g: TaskGraph, machine) -> tuple[int, int]:
+    """The fixed power-of-two envelope covering EVERY legal plan of
+    ``(g, machine)`` — what :func:`fixed_envelope_makespans` pads to so a
+    whole search (any allocation, any legal widths) shares one compiled
+    shape.  Matches :func:`_bucket_key` at the graph's maximum legal width,
+    so rigid-graph searches land in the same bucket the campaign sweeps
+    already compiled."""
+    from repro.platform import as_platform
+
+    counts = as_platform(machine, warn=False).to_counts()
+    n = g.n
+    fan = int(np.diff(g.pred_ptr).max()) if g.n else 0
+    wcap = max(1, min(int(g.max_width), max(counts)))
+    return (_pow2(n + 1), _pow2(fan + wcap))
+
+
 def sweep_suite_makespans(entries, *, noise: NoiseModel, seeds,
                           floor_fn=None, envelope: bool = False,
                           network=None, mesh=None) -> list[np.ndarray]:

@@ -37,8 +37,8 @@ from .arrivals import (DEFAULT_JOB_PARAMS, ClosedLoopSource, Job, JobFactory,
 from .engine import StreamResult, run_stream
 from .metrics import (bounded_slowdown, job_slowdowns, mean_queue_length,
                       queue_length_series, tenant_summary, utilization)
-from .policy import (COMM_CANDIDATES, DEFAULT_CANDIDATES, AdapterPolicy,
-                     SimInTheLoop, StreamPolicy, make_policy)
+from .policy import (COMM_CANDIDATES, DEFAULT_CANDIDATES, SEARCH_CANDIDATES,
+                     AdapterPolicy, SimInTheLoop, StreamPolicy, make_policy)
 from .replay import chameleon_stream, replay_estee
 from .tenants import JobRecord, TaskRecord, TenantLedger
 
@@ -48,7 +48,7 @@ __all__ = [
     "StreamResult", "run_stream", "bounded_slowdown", "job_slowdowns",
     "mean_queue_length", "queue_length_series", "tenant_summary",
     "utilization", "AdapterPolicy", "SimInTheLoop", "StreamPolicy",
-    "DEFAULT_CANDIDATES", "COMM_CANDIDATES",
+    "DEFAULT_CANDIDATES", "COMM_CANDIDATES", "SEARCH_CANDIDATES",
     "make_policy", "chameleon_stream", "replay_estee", "JobRecord",
     "TaskRecord", "TenantLedger",
 ]

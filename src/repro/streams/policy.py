@@ -135,6 +135,11 @@ class AdapterPolicy(StreamPolicy):
 #: prices the transfers the stream engine will actually charge).
 DEFAULT_CANDIDATES = ("er_ls", "eft", "heft", "greedy_r2")
 COMM_CANDIDATES = DEFAULT_CANDIDATES + ("cahlp_ols",)
+#: Opt-in candidate set adding the population-based plan search
+#: (``repro.search`` via the ``evo`` adapter) to the rollout pool — the
+#: search re-plans per arrival, so reserve it for latency budgets that can
+#: afford a small evolve run: ``SimInTheLoop(candidates=SEARCH_CANDIDATES)``.
+SEARCH_CANDIDATES = DEFAULT_CANDIDATES + ("evo",)
 
 
 class SimInTheLoop(StreamPolicy):
@@ -147,7 +152,8 @@ class SimInTheLoop(StreamPolicy):
                      default) selects per job: ``DEFAULT_CANDIDATES``, plus
                      the comm-aware ``cahlp_ols`` allocator
                      (``COMM_CANDIDATES``) when the job's DAG carries edge
-                     transfer costs.
+                     transfer costs.  Pass ``SEARCH_CANDIDATES`` to let the
+                     ``evo`` plan search compete per arrival.
       rollout_seeds: noise seeds per rollout; with ``rollout_noise=None``
                      a single estimate-replay rollout per candidate.
       rollout_noise: optional misprediction model applied inside rollouts.

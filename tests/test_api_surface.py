@@ -52,11 +52,19 @@ API = {
         "AdapterPolicy", "COMM_CANDIDATES", "ClosedLoopSource",
         "DEFAULT_CANDIDATES", "DEFAULT_JOB_PARAMS", "Job",
         "JobFactory", "JobRecord", "MMPPProcess", "OpenLoopSource",
-        "PoissonProcess", "SimInTheLoop", "StreamPolicy", "StreamResult",
+        "PoissonProcess", "SEARCH_CANDIDATES", "SimInTheLoop", "StreamPolicy",
+        "StreamResult",
         "TaskRecord", "TenantLedger", "bounded_slowdown", "chameleon_stream",
         "job_slowdowns", "make_policy", "mean_queue_length", "open_stream",
         "queue_length_series", "replay_estee", "run_stream", "tenant_summary",
         "utilization",
+    ],
+    "repro.search": [
+        "METHODS", "Genome", "SearchConfig", "SearchResult", "alloc_crossover",
+        "brute_force_gap", "evolve_plan", "genome_to_plan", "is_topo_perm",
+        "lp_seed_plan", "mutate_alloc", "mutate_perm", "order_crossover",
+        "plan_to_genome", "random_genome", "seed_plans", "topo_perm",
+        "width_caps",
     ],
 }
 
@@ -79,6 +87,11 @@ def test_adapter_registry_covers_the_moldable_planner():
 def test_adapter_registry_covers_the_comm_aware_allocators():
     from repro.sim import ADAPTERS
     assert "cahlp_ols" in ADAPTERS and "camhlp_ols" in ADAPTERS
+
+
+def test_adapter_registry_covers_the_plan_search():
+    from repro.sim import ADAPTERS
+    assert "evo" in ADAPTERS and "evo_camhlp" in ADAPTERS
 
 
 def test_scenario_registry_covers_the_moldable_family():

@@ -120,3 +120,40 @@ def test_check_bench_fails_when_nothing_pinned(tmp_path, capsys):
                  _doc({"sim": {"metrics": {"ratio": 1.0}}}))
     assert check_bench(new, pinned) == 1
     assert "nothing" in capsys.readouterr().err
+
+
+def test_check_bench_gates_every_pinned_bench(tmp_path, capsys):
+    """Pins under any ``benches.<name>.metrics`` dict participate — the
+    search campaign's pins ride the same gate as sim's."""
+    pinned = _write(tmp_path, "pinned.json",
+                    _doc({"sim": {"metrics": {"ratio": 1.10}},
+                          "search": {"metrics": {"evo_gap": 1.01}}}))
+    good = _write(tmp_path, "good.json",
+                  _doc({"sim": {"metrics": {"ratio": 1.10}},
+                        "search": {"metrics": {"evo_gap": 1.012}}}))
+    assert check_bench(good, pinned, rtol=0.05) == 0
+    bad = _write(tmp_path, "bad.json",
+                 _doc({"sim": {"metrics": {"ratio": 1.10}},
+                       "search": {"metrics": {"evo_gap": 1.30}}}))
+    assert check_bench(bad, pinned, rtol=0.05) == 1
+    out = capsys.readouterr().out
+    assert "search.evo_gap" in out and "drifted" in out
+
+
+def test_run_registry_covers_search():
+    from benchmarks.run import BENCHES
+    assert "search" in BENCHES
+
+
+def test_run_unknown_only_target_exits_2(capsys, monkeypatch):
+    """``--only`` with an unknown name must exit 2 and list the valid
+    targets (including the search bench) on stderr."""
+    from benchmarks import run as bench_run
+    monkeypatch.setattr(sys, "argv",
+                        ["benchmarks.run", "--only", "nope,search"])
+    with pytest.raises(SystemExit) as ei:
+        bench_run.main()
+    assert ei.value.code == 2
+    err = capsys.readouterr().err
+    assert "unknown --only target(s): nope" in err
+    assert "search" in err

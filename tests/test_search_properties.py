@@ -1,0 +1,109 @@
+"""Property tests for the plan-search genome operators (hypothesis).
+
+The operators' hard invariants, on random DAGs and machines:
+
+  (a) order-crossover always yields a precedence-respecting permutation
+      (and so does the insertion-window permutation mutation);
+  (b) allocation mutation keeps every ``Decision`` inside the machine's
+      pool types and at a ``validate_speedup``-legal width (1 ≤ w ≤
+      min(max_width, counts[type]));
+  (c) ``evolve_plan(seed=N)`` is bit-reproducible — same plan, fitness,
+      history, and eval counts, twice.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # dev extra: pip install -r requirements-dev.txt
+from hypothesis import given, settings, strategies as st
+
+from conftest import random_dag
+from repro.search import (SearchConfig, evolve_plan, is_topo_perm,
+                          mutate_alloc, mutate_perm, order_crossover,
+                          random_genome, topo_perm, width_caps)
+from repro.sim.engine import Machine
+
+
+def _machine(seed: int) -> Machine:
+    rng = np.random.default_rng(seed)
+    return Machine.from_counts([int(rng.integers(2, 8)),
+                                int(rng.integers(1, 4))])
+
+
+def _moldable(g, seed: int):
+    from repro.core.dag import amdahl_speedup
+    rng = np.random.default_rng(seed)
+    W = int(rng.integers(2, 5))
+    return g.with_speedup(amdahl_speedup(rng.uniform(0.3, 0.95, g.n), W))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_order_crossover_respects_precedence(seed):
+    """(a): both children of topological parents are topological — for any
+    cut point the prefix keeps parent A's order and the suffix keeps
+    parent B's relative order, so no edge can invert."""
+    g = random_dag(seed, n=14, p_edge=0.3)
+    rng = np.random.default_rng(seed + 1)
+    pa = topo_perm(g, rng.standard_normal(g.n))
+    pb = topo_perm(g, rng.standard_normal(g.n))
+    assert is_topo_perm(g, pa) and is_topo_perm(g, pb)
+    for _ in range(5):
+        child = order_crossover(pa, pb, rng)
+        assert sorted(child) == list(range(g.n))
+        assert is_topo_perm(g, child)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10 ** 6), st.integers(1, 4))
+def test_perm_mutation_respects_precedence(seed, moves):
+    g = random_dag(seed, n=12, p_edge=0.35)
+    rng = np.random.default_rng(seed + 2)
+    perm = topo_perm(g, rng.standard_normal(g.n))
+    for _ in range(5):
+        perm = mutate_perm(g, perm, rng, moves=moves)
+        assert sorted(perm) == list(range(g.n))
+        assert is_topo_perm(g, perm)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_alloc_mutation_keeps_decisions_legal(seed):
+    """(b): after any number of mutations every (type, width) stays inside
+    the machine's pools — rigid graphs stay width-1, moldable widths stay
+    within both the speedup curve and the chosen pool's unit count."""
+    machine = _machine(seed)
+    caps_of = lambda g: width_caps(g, machine)
+    rng = np.random.default_rng(seed + 3)
+    for g in (random_dag(seed, n=10, p_edge=0.3),
+              _moldable(random_dag(seed, n=10, p_edge=0.3), seed)):
+        gn = random_genome(g, machine, rng)
+        types, widths = gn.types, gn.widths
+        caps = caps_of(g)
+        for _ in range(6):
+            types, widths = mutate_alloc(g, machine, types, widths, rng,
+                                         indpb=0.5)
+            assert ((types >= 0) & (types < g.num_types)).all()
+            assert (widths >= 1).all()
+            assert (widths <= caps[types]).all()
+            if g.speedup is None:
+                assert (widths == 1).all()
+            else:
+                assert (widths <= g.max_width).all()
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10 ** 6), st.sampled_from(["ga", "cem", "sa"]))
+def test_evolve_plan_seeded_bit_reproducibility(seed, method):
+    """(c): the whole search — operators, scoring, caching — is a pure
+    function of (graph, machine, config, seed)."""
+    g = random_dag(seed, n=12, p_edge=0.3)
+    machine = _machine(seed)
+    cfg = SearchConfig(method=method, pop_size=8, generations=3)
+    a = evolve_plan(g, machine, cfg, seed=seed % 97)
+    b = evolve_plan(g, machine, cfg, seed=seed % 97)
+    assert a.fitness == b.fitness
+    assert a.history == b.history
+    assert a.evals == b.evals and a.cache_hits == b.cache_hits
+    assert np.array_equal(a.genome.types, b.genome.types)
+    assert np.array_equal(a.genome.widths, b.genome.widths)
+    assert np.array_equal(a.genome.perm, b.genome.perm)

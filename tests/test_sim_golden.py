@@ -115,9 +115,13 @@ def test_width1_fixture_covers_every_adapter():
     covered = {alg for cells in GOLDEN_W1.values() for alg in cells}
     # mhlp_ols (PR 4) and the comm-aware allocators cahlp_ols/camhlp_ols
     # (PR 5) have no golden cells of their own: their zero-comm width-1
-    # parity is pinned against the hlp_ols cells below.
+    # parity is pinned against the hlp_ols cells below.  The evo/evo_camhlp
+    # plan-search adapters (PR 9) are anytime-dominance-tested in
+    # test_search.py instead — their plans are seeded-search outputs, not
+    # fixed-pipeline schedules, so a golden hash would pin the search
+    # trajectory rather than an algorithm.
     missing = set(ADAPTERS) - covered \
-        - {"mhlp_ols", "cahlp_ols", "camhlp_ols"}
+        - {"mhlp_ols", "cahlp_ols", "camhlp_ols", "evo", "evo_camhlp"}
     assert not missing, f"adapters without a width-1 golden: {missing}"
 
 
