@@ -198,12 +198,23 @@ def sim_sweep(full: bool = False, noise_scale: float = 0.2,
     reports ``contention_gap`` — the oblivious-over-aware makespan ratio
     under the contended model.
 
+    All three sub-grids run through the *pipelined* executor
+    (``repro.sim.pipeline``): plan construction fans out over the
+    ``REPRO_PLAN_WORKERS`` pool, the content-addressed plan cache collapses
+    repeated allocations (the netbound grid re-uses each allocation across
+    its three network models), and each shape bucket dispatches to the
+    device as soon as it closes.  Results are bit-identical to the serial
+    path; the returned ``plan_build_s`` / ``overlap_frac`` /
+    ``plan_cache_*`` fields feed the BENCH trajectory.
+
     ``base_seed`` shifts every scenario-generator seed (the
     ``benchmarks.run --seed`` knob), so one flag re-rolls the whole grid.
     """
     from repro.core.theory import ratio_denominator
     from repro.sim import NoiseModel, make_scheduler, simulate
-    from repro.sim.batch import bucketed_makespans, sample_actual_batch, trace_count
+    from repro.sim.batch import sample_actual_batch, trace_count
+    from repro.sim.pipeline import (clear_plan_cache, last_pipeline_stats,
+                                    pipelined_sweep_makespans)
     from repro.sim.scenarios import comm_suite, default_suite, moldable_suite
 
     num_seeds = num_seeds or (32 if full else 8)
@@ -218,15 +229,28 @@ def sim_sweep(full: bool = False, noise_scale: float = 0.2,
               + (["hlp_jax_ols"] if full else []))
     online = ["er_ls", "eft", "greedy_r2", "random"]
 
-    # Phase 1: allocate every static plan, queue its whole seed grid.  The
-    # first row of each grid is the noise-free replay, so clean + noisy
-    # makespans come out of one bucketed evaluation.  Each sub-campaign's
-    # bucketed evaluation is wall-clocked separately (``phase_seconds``) so
-    # the BENCH_sim.json trajectory can localize speed regressions.
+    # Each sub-campaign runs through the pipelined executor
+    # (``repro.sim.pipeline``): plans fan out over the worker pool, the
+    # content-addressed plan cache deduplicates identical allocations, and
+    # shape buckets dispatch to the device the moment they close so plan
+    # building overlaps device execution.  The first row of each noise grid
+    # is the noise-free replay, so clean + noisy makespans come out of one
+    # bucketed evaluation.  Each sub-campaign is wall-clocked separately
+    # (``phase_seconds``) so the BENCH_sim.json trajectory can localize
+    # speed regressions; the cache is cleared up front so the reported hit
+    # rate measures *this* grid's redundancy, not earlier calls'.
+    clear_plan_cache()
     traces0 = trace_count("bucket")
     tr_contended0 = trace_count("contended")
     phase_seconds: dict[str, float] = {}
-    items, grids, keys = [], [], []
+    pipe_stats = []
+
+    def sample_grid(g, plan):
+        clean_row = sample_actual_batch(g, plan, NoiseModel(), [0])
+        noisy = sample_actual_batch(g, plan, noise, seeds)
+        return np.vstack([clean_row, noisy])
+
+    entries, keys = [], []
     lbs = {}
     for sc in suite:
         # the denominator's LP is solved independently of the adapters'
@@ -234,15 +258,12 @@ def sim_sweep(full: bool = False, noise_scale: float = 0.2,
         # not depend on which adapters ran, and the instances are LP-small
         lbs[sc.name] = ratio_denominator(sc.graph, sc.counts)
         for name in static:
-            plan = make_scheduler(name).allocate(sc.graph, sc.machine)
-            clean_row = sample_actual_batch(sc.graph, plan, NoiseModel(), [0])
-            noisy = sample_actual_batch(sc.graph, plan, noise, seeds)
-            items.append((sc.graph, plan))
-            grids.append(np.vstack([clean_row, noisy]))
+            entries.append((sc.graph, sc.machine, make_scheduler(name)))
             keys.append((sc.name, name))
-    with _obs.timer("campaign.sim.static", algs=len(items)) as sp:
-        sweeps = bucketed_makespans(items, grids)
+    with _obs.timer("campaign.sim.static", algs=len(entries)) as sp:
+        sweeps = pipelined_sweep_makespans(entries, sample_fn=sample_grid)
     phase_seconds["static"] = sp.dur
+    pipe_stats.append(last_pipeline_stats())
 
     # Moldable sub-campaigns: width-aware MHLP vs its width-1 restriction,
     # and comm-aware CAMHLP vs oblivious MHLP on CCR-enabled instances —
@@ -255,19 +276,16 @@ def sim_sweep(full: bool = False, noise_scale: float = 0.2,
     m_suite += [(sc, ("camhlp_ols", "mhlp_ols"))
                 for sc in moldable_suite(seed=base_seed + 400, num=m_num,
                                          ccr=2.0)]
-    m_items, m_grids, m_keys = [], [], []
+    m_entries, m_keys = [], []
     for sc, algs in m_suite:
         lbs[sc.name] = ratio_denominator(sc.graph, sc.counts)
         for name in algs:
-            plan = make_scheduler(name).allocate(sc.graph, sc.machine)
-            clean_row = sample_actual_batch(sc.graph, plan, NoiseModel(), [0])
-            noisy = sample_actual_batch(sc.graph, plan, noise, seeds)
-            m_items.append((sc.graph, plan))
-            m_grids.append(np.vstack([clean_row, noisy]))
+            m_entries.append((sc.graph, sc.machine, make_scheduler(name)))
             m_keys.append((sc.name, name))
-    with _obs.timer("campaign.sim.moldable", algs=len(m_items)) as sp:
-        m_sweeps = bucketed_makespans(m_items, m_grids)
+    with _obs.timer("campaign.sim.moldable", algs=len(m_entries)) as sp:
+        m_sweeps = pipelined_sweep_makespans(m_entries, sample_fn=sample_grid)
     phase_seconds["moldable"] = sp.dur
+    pipe_stats.append(last_pipeline_stats())
 
     # Network-model sub-grid (netbound family): the comm-oblivious hlp_ols
     # allocation and the contention-aware CAHLP variant, each replayed under
@@ -284,21 +302,22 @@ def sim_sweep(full: bool = False, noise_scale: float = 0.2,
                for i in range(6 if full else 3)]
     n_allocs = [("hlp_ols", lambda: make_scheduler("hlp_ols")),
                 ("cahlp_ctn", lambda: CommAwareHLPScheduler(contention=True))]
-    n_items, n_grids, n_keys, n_nets = [], [], [], []
+    # one flat entry per (scenario, allocation, network): the plan cache
+    # collapses the three per-network allocations back to one solve, so the
+    # grid reads declaratively while still allocating once per (sc, alloc)
+    n_entries, n_keys, n_nets = [], [], []
     for sc in n_suite:
         lbs[sc.name] = ratio_denominator(sc.graph, sc.counts)
         for name, mk in n_allocs:
-            plan = mk().allocate(sc.graph, sc.machine)
-            clean_row = sample_actual_batch(sc.graph, plan, NoiseModel(), [0])
-            noisy = sample_actual_batch(sc.graph, plan, noise, seeds)
             for net_name, net in nets.items():
-                n_items.append((sc.graph, plan))
-                n_grids.append(np.vstack([clean_row, noisy]))
+                n_entries.append((sc.graph, sc.machine, mk()))
                 n_keys.append((sc.name, name, net_name))
                 n_nets.append(net)
-    with _obs.timer("campaign.sim.network", algs=len(n_items)) as sp:
-        n_sweeps = bucketed_makespans(n_items, n_grids, networks=n_nets)
+    with _obs.timer("campaign.sim.network", algs=len(n_entries)) as sp:
+        n_sweeps = pipelined_sweep_makespans(n_entries, sample_fn=sample_grid,
+                                             networks=n_nets)
     phase_seconds["network"] = sp.dur
+    pipe_stats.append(last_pipeline_stats())
     compiles = trace_count("bucket") - traces0
     tr_contended1 = trace_count("contended")
 
@@ -394,7 +413,10 @@ def sim_sweep(full: bool = False, noise_scale: float = 0.2,
                ["scenario", "family", "scheduler", "lower_bound",
                 "makespan_clean", "makespan_noisy_mean", "makespan_noisy_std",
                 "makespan_noisy_p95", "seeds"], rows)
-    plans = len(items) + len(m_items) + len(n_items)
+    plans = len(entries) + len(m_entries) + len(n_entries)
+    pipe_total = sum(st.total_s for st in pipe_stats)
+    cache_hits = sum(st.cache_hits for st in pipe_stats)
+    cache_misses = sum(st.cache_misses for st in pipe_stats)
     return {"ratios": {k: float(np.mean(v)) for k, v in agg.items()},
             "schedulers": static + online, "runs": n_runs,
             "scenarios": len(suite) + len(m_suite) + len(n_suite),
@@ -403,7 +425,18 @@ def sim_sweep(full: bool = False, noise_scale: float = 0.2,
             "phase_seconds": phase_seconds,
             # every bucketed plan evaluates 1 clean + num_seeds noisy rows
             "evals": plans * (num_seeds + 1),
-            "contended_compiles": tr_contended1 - tr_contended0}
+            "contended_compiles": tr_contended1 - tr_contended0,
+            # pipelined-executor trajectory: summed solver seconds, the
+            # fraction of executor wall spent with >= 1 bucket in flight,
+            # and the plan-cache dedup across the three sub-grids
+            "plan_build_s": sum(st.plan_build_s for st in pipe_stats),
+            "overlap_frac": (sum(st.overlap_s for st in pipe_stats)
+                             / pipe_total if pipe_total else 0.0),
+            "plan_cache_hits": cache_hits,
+            "plan_cache_misses": cache_misses,
+            "plan_cache_hit_rate": (cache_hits / (cache_hits + cache_misses)
+                                    if cache_hits + cache_misses else 0.0),
+            "plan_workers": max(st.workers for st in pipe_stats)}
 
 
 # ------------------------------------------------------ plan-search sweep

@@ -253,7 +253,10 @@ def render_bench_diff(old_path: str, new_path: str) -> str:
             out.append(f"    wall_s: {_fmt_delta(wo, wn)}")
         for k in ("compiles", "contended_compiles", "plans", "evals",
                   "throughput_plans_per_sec",
-                  "throughput_plans_per_sec_per_device"):
+                  "throughput_plans_per_sec_per_device",
+                  "plan_build_s", "overlap_frac", "plan_cache_hits",
+                  "plan_cache_misses", "plan_cache_hit_rate",
+                  "plan_workers"):
             if k in o or k in n:
                 out.append(f"    {k}: "
                            f"{_fmt_delta(o.get(k, 0), n.get(k, 0))}")
@@ -271,6 +274,16 @@ def render_bench_diff(old_path: str, new_path: str) -> str:
     return "\n".join(out)
 
 
+#: deterministic per-bench integers ``check_bench`` pins *exactly* when the
+#: pinned file carries them: the grid sizes and compile counts behind the
+#: throughput numbers.  Throughput itself belongs to the machine; if these
+#: drift, the campaign silently shrank (or recompiles crept in) and every
+#: wall-clock comparison is apples-to-oranges.
+CHECK_COUNTS = ("plans", "evals", "runs", "scenarios", "compiles",
+                "contended_compiles", "buckets", "cells",
+                "plan_cache_hits", "plan_cache_misses")
+
+
 def check_bench(new_path: str, pinned_path: str, rtol: float = 0.05) -> int:
     """Fail (return 1) when diffable makespan metrics drift from pins.
 
@@ -280,7 +293,11 @@ def check_bench(new_path: str, pinned_path: str, rtol: float = 0.05) -> int:
     ``|new - pinned| > rtol * |pinned|``.  Metrics absent from the new
     trajectory also fail (a silently dropped metric is a regression).
     Timings/throughput are intentionally *not* checked — they belong to the
-    machine; the makespan metrics belong to the algorithms.
+    machine; the makespan metrics belong to the algorithms.  The
+    deterministic counts *behind* the throughput numbers
+    (:data:`CHECK_COUNTS`) are pinned exactly whenever the pinned file
+    carries them, so throughput drift from a silently shrunken grid or
+    compile creep cannot hide behind a faster machine.
     """
     new = load_bench(new_path)
     pinned = load_bench(pinned_path)
@@ -304,6 +321,17 @@ def check_bench(new_path: str, pinned_path: str, rtol: float = 0.05) -> int:
                 bad.append(f"  {bench}.{k}: {got:.6g} drifted from pinned "
                            f"{want:.6g} ({(got / want - 1) * 100:+.2f}% > "
                            f"±{rtol * 100:.0f}%)")
+    for bench, d in sorted(pinned.get("benches", {}).items()):
+        if not isinstance(d, dict):
+            continue
+        new_b = new.get("benches", {}).get(bench, {})
+        for k in CHECK_COUNTS:
+            if k not in d:
+                continue
+            total += 1
+            if new_b.get(k) != d[k]:
+                bad.append(f"  {bench}.{k}: {new_b.get(k)} != pinned "
+                           f"{d[k]} (exact count)")
     if bad:
         print(f"# check-bench FAILED ({len(bad)}/{total} metrics "
               f"drifted beyond rtol={rtol}):")

@@ -124,6 +124,14 @@ def bench_sim(full: bool, seed: int = 0) -> list[str]:
     lines.append(f"sim/throughput_plans_per_sec,{per:.0f},"
                  f"plans_per_sec={throughput:.1f};"
                  f"per_device={per_device:.1f}")
+    lines.append(f"sim/plan_build_s,{per:.0f},"
+                 f"plan_build_s={r['plan_build_s']:.3f};"
+                 f"overlap_frac={r['overlap_frac']:.3f};"
+                 f"workers={r['plan_workers']}")
+    lines.append(f"sim/plan_cache,{per:.0f},"
+                 f"hits={r['plan_cache_hits']};"
+                 f"misses={r['plan_cache_misses']};"
+                 f"hit_rate={r['plan_cache_hit_rate']:.3f}")
     BENCH_EXTRAS["sim"] = {
         "phase_seconds": r["phase_seconds"],
         "compiles": r["compiles"],
@@ -134,6 +142,12 @@ def bench_sim(full: bool, seed: int = 0) -> list[str]:
         "scenarios": r["scenarios"],
         "throughput_plans_per_sec": throughput,
         "throughput_plans_per_sec_per_device": per_device,
+        "plan_build_s": r["plan_build_s"],
+        "overlap_frac": r["overlap_frac"],
+        "plan_cache_hits": r["plan_cache_hits"],
+        "plan_cache_misses": r["plan_cache_misses"],
+        "plan_cache_hit_rate": r["plan_cache_hit_rate"],
+        "plan_workers": r["plan_workers"],
         "metrics": r["ratios"],
     }
     print(f"# sim: {r['runs']} runs over {r['scenarios']} scenarios in "
@@ -156,6 +170,11 @@ def bench_sim(full: bool, seed: int = 0) -> list[str]:
     print(f"#   network models (netbound): maxmin_fair costs hlp_ols "
           f"{spread:+.1f}% over instant; under contention the oblivious "
           f"allocation pays {ctgain:+.1f}% vs the load-priced LP")
+    print(f"#   pipelined executor: {r['plan_build_s']:.2f}s of solver time "
+          f"over {r['plan_workers']} worker(s), overlap_frac="
+          f"{r['overlap_frac']:.2f}, plan cache {r['plan_cache_hits']}/"
+          f"{r['plan_cache_hits'] + r['plan_cache_misses']} hits "
+          f"(rate {r['plan_cache_hit_rate']:.2f})")
     return lines
 
 
@@ -369,10 +388,33 @@ def write_bench_json(path: str, args, names: list[str],
       contention_kernel / jax / python.
     * ``benches.<name>``: {wall_s, lines, ...extras} — every target gets
       its wall-clock and raw CSV lines; ``sim`` adds phase_seconds,
-      compile counts, plans/evals, throughput_plans_per_sec(_per_device)
-      and the ``metrics`` ratio dict (the diffable makespan metrics);
-      ``kernels`` adds its us_per_call timings.
+      compile counts, plans/evals, throughput_plans_per_sec(_per_device),
+      the pipelined-executor fields (plan_build_s, overlap_frac,
+      plan_cache_hits/misses/hit_rate, plan_workers) and the ``metrics``
+      ratio dict (the diffable makespan metrics); ``kernels`` adds its
+      us_per_call timings.
+
+    A partial-target run (``--only sim``) must not clobber the sections an
+    earlier run wrote: when the file already holds a same-(seed, full)
+    ``repro.bench.v1`` doc, its other benches are carried over and
+    ``run.targets`` becomes the union.  A different seed/full (or a
+    corrupt file) overwrites — those sections wouldn't be comparable.
     """
+    carried: dict[str, dict] = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                old = json.load(f)
+        except (OSError, ValueError):
+            old = None
+        if (isinstance(old, dict) and old.get("schema") == "repro.bench.v1"
+                and old.get("run", {}).get("seed") == args.seed
+                and old.get("run", {}).get("full") == bool(args.full)):
+            carried = {k: v for k, v in old.get("benches", {}).items()
+                       if k not in benches}
+    if carried:
+        benches = {**carried, **benches}
+        names = sorted(set(names) | set(carried))
     doc = {
         "schema": "repro.bench.v1",
         "run": {"seed": args.seed, "full": bool(args.full), "targets": names},
@@ -385,7 +427,9 @@ def write_bench_json(path: str, args, names: list[str],
     with open(path, "w") as f:
         json.dump(doc, f, indent=2, sort_keys=True)
         f.write("\n")
-    print(f"# wrote {path}")
+    print(f"# wrote {path}"
+          + (f" (kept earlier benches: {','.join(sorted(carried))})"
+             if carried else ""))
 
 
 def main() -> None:
@@ -422,6 +466,10 @@ def main() -> None:
         sys.exit(2)
     print(f"# benchmarks.run: targets={','.join(names)} full={args.full} "
           f"base_seed={args.seed}", flush=True)
+    from repro.sim import configure_xla_cache
+    xla_cache = configure_xla_cache()   # REPRO_XLA_CACHE: warm runs skip
+    if xla_cache:                       # recompiling the bucketed kernels
+        print(f"# xla compilation cache: {xla_cache}", flush=True)
     if args.trace:
         obs.enable()
         os.makedirs(args.trace, exist_ok=True)

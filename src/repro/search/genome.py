@@ -271,11 +271,25 @@ def seed_plans(g: TaskGraph, machine, *, comm_aware: bool = False,
     HEFT and ER-LS (rolled out once via ``plan_for``) — or any explicit
     adapter list.  The search scores these *plans* alongside the genome
     population, so its anytime best can never be worse than the best
-    existing heuristic."""
+    existing heuristic.
+
+    Every builder here is deterministic given (g, machine, config), so the
+    solves route through the content-addressed plan cache
+    (:func:`repro.sim.pipeline.cached_solve`): a campaign sweeping many
+    search seeds over the same scenario pays for each LP solve and
+    heuristic rollout once."""
     from repro.sim.adapters import plan_for
+    from repro.sim.pipeline import cached_solve
 
     if adapters is not None:
-        return {name: plan_for(name, g, machine) for name in adapters}
-    return {"lp": lp_seed_plan(g, machine, comm_aware=comm_aware),
-            "heft": plan_for("heft", g, machine),
-            "er_ls": plan_for("er_ls", g, machine)}
+        return {name: cached_solve(f"seed.{name}", g, machine,
+                                   lambda name=name: plan_for(name, g, machine))
+                for name in adapters}
+    return {"lp": cached_solve("seed.lp", g, machine,
+                               lambda: lp_seed_plan(g, machine,
+                                                    comm_aware=comm_aware),
+                               extra=(comm_aware,)),
+            "heft": cached_solve("seed.heft", g, machine,
+                                 lambda: plan_for("heft", g, machine)),
+            "er_ls": cached_solve("seed.er_ls", g, machine,
+                                  lambda: plan_for("er_ls", g, machine))}

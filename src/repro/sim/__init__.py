@@ -44,6 +44,17 @@ Beyond the paper's static pipeline it adds:
     network-bound ``netbound`` instance, the moldable ``moldable_cholesky``
     family (per-kernel Amdahl curves), and a bridge to
     ``repro.core.workloads``;
+  * **a pipelined campaign executor** — ``repro.sim.pipeline`` overlaps the
+    three campaign phases: plan construction fans out over a worker pool
+    (``REPRO_PLAN_WORKERS``; process pool for LP-heavy adapters, threads
+    for numpy/JAX ones), a content-addressed plan cache
+    (``cached_allocate``) deduplicates identical allocations across
+    sub-grids / seeds / network models, and each shape bucket dispatches to
+    the device the moment it closes so host building overlaps device
+    execution (``pipelined_sweep_makespans``, bit-identical to the serial
+    sweep; ``last_pipeline_stats`` reports the measured overlap).
+    ``configure_xla_cache`` points JAX's persistent compilation cache at
+    ``REPRO_XLA_CACHE`` so warm runs skip recompiling entirely;
   * **a padded/bucketed JAX path** — ``repro.sim.batch`` evaluates a whole
     heterogeneous campaign of static plans: plans are grouped by the
     power-of-two envelope of (tasks, fan-in), padded to per-bucket maxima,
@@ -80,6 +91,9 @@ from .engine import (Machine, MachineState, NoiseModel, Plan, Scheduler,
 from .network import (NETWORKS, FixedLatencyNetwork, InstantNetwork,
                       MaxMinFairNetwork, NetworkModel, contention_kernel,
                       make_network, set_contention_kernel)
+from .pipeline import (cached_allocate, clear_plan_cache, configure_xla_cache,
+                       last_pipeline_stats, pipelined_sweep_makespans,
+                       plan_cache_stats, plan_workers)
 from .scenarios import (SCENARIO_FAMILIES, Scenario, default_suite,
                         from_estee, make_scenario, moldable_suite, to_estee)
 
@@ -92,6 +106,9 @@ __all__ = [
     "set_contention_kernel",
     "campaign_mesh", "set_campaign_mesh", "shard_backend",
     "reset_trace_counts", "trace_count",
+    "cached_allocate", "clear_plan_cache", "configure_xla_cache",
+    "last_pipeline_stats", "pipelined_sweep_makespans", "plan_cache_stats",
+    "plan_workers",
     "SCENARIO_FAMILIES", "Scenario", "default_suite", "from_estee",
     "make_scenario", "moldable_suite", "to_estee",
 ]

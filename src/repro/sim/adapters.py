@@ -89,9 +89,17 @@ def _record_lp_provenance(name: str, g: TaskGraph, machine, sol, *,
 
 
 class StaticScheduler:
-    """Base: wrap a ``(g, machine) -> Schedule`` solver into the protocol."""
+    """Base: wrap a ``(g, machine) -> Schedule`` solver into the protocol.
+
+    ``plan_pool`` routes the adapter's ``allocate`` in the pipelined
+    executor (``repro.sim.pipeline``): ``"process"`` for the HiGHS/LP-heavy
+    solvers that hold the GIL, ``"thread"`` for pure-numpy or JAX-backed
+    ones that must stay in-process.  ``cacheable = False`` opts an adapter
+    out of the content-addressed plan cache."""
 
     name = "static"
+    plan_pool = "thread"
+    cacheable = True
 
     def _solve(self, g: TaskGraph, machine: Machine):
         raise NotImplementedError
@@ -107,6 +115,7 @@ class HLPESTScheduler(StaticScheduler):
     """Paper §3/§5: HLP/QHLP allocation LP + EST list scheduling."""
 
     name = "hlp_est"
+    plan_pool = "process"   # scipy/HiGHS LP solve dominates
 
     def _allocate_lp(self, g: TaskGraph, machine: Machine) -> np.ndarray:
         counts = machine.counts
@@ -132,6 +141,7 @@ class HLPJaxOLSScheduler(HLPOLSScheduler):
     """Beyond-paper: the jitted first-order HLP solver + OLS (Q=2 only)."""
 
     name = "hlp_jax_ols"
+    plan_pool = "thread"    # JAX-backed: must stay in-process
 
     def __init__(self, iters: int = 300, seed: int = 0):
         self.iters, self.seed = iters, seed
@@ -161,6 +171,7 @@ class CommAwareHLPScheduler(StaticScheduler):
     fixed-latency one."""
 
     name = "cahlp_ols"
+    plan_pool = "process"
 
     def __init__(self, contention: bool = False):
         self.contention = contention
@@ -190,6 +201,7 @@ class CommAwareMoldableScheduler(StaticScheduler):
     (forwarded to the width-1 CAHLP route too)."""
 
     name = "camhlp_ols"
+    plan_pool = "process"
 
     def __init__(self, contention: bool = False):
         self.contention = contention
@@ -217,6 +229,7 @@ class MoldableHLPScheduler(StaticScheduler):
     """
 
     name = "mhlp_ols"
+    plan_pool = "process"
 
     def _solve(self, g, machine):
         if g.max_width == 1:
@@ -252,6 +265,7 @@ class BruteForceScheduler(StaticScheduler):
     """Branch-and-bound optimum — the oracle adapter for small n (≤ ~10)."""
 
     name = "bruteforce"
+    plan_pool = "process"   # pure-python branch and bound
 
     def _solve(self, g, machine):
         return brute_force_schedule(g, machine)
@@ -262,6 +276,8 @@ class OnlineScheduler:
     """Base for arrival-driven policies: no static plan."""
 
     name = "online"
+    plan_pool = "thread"
+    cacheable = False   # allocate() binds state and returns None
 
     def allocate(self, g: TaskGraph, machine: Machine) -> None:
         self._g = g
@@ -341,6 +357,8 @@ class EvoScheduler:
     ``pop_size``, ``generations``, ...); ``seed`` feeds the search rng."""
 
     name = "evo"
+    plan_pool = "thread"    # JAX-backed batched scoring: stay in-process
+    cacheable = True        # deterministic given (config, seed)
     _comm_aware = False
 
     def __init__(self, seed: int = 0, **cfg):
@@ -373,6 +391,9 @@ class FrozenPlanScheduler:
     """Adapter around a precomputed ``Plan`` — lets any plan (including one
     materialized from an arrival-driven policy via ``plan_for``) ride the
     batch path's ``allocate``-then-replay pipeline."""
+
+    plan_pool = "thread"
+    cacheable = False   # the plan's provenance is not in (name, config)
 
     def __init__(self, plan: Plan, name: str = "frozen"):
         self._plan, self.name = plan, name

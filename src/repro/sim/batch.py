@@ -880,7 +880,8 @@ def search_envelope(g: TaskGraph, machine) -> tuple[int, int]:
 
 def sweep_suite_makespans(entries, *, noise: NoiseModel, seeds,
                           floor_fn=None, envelope: bool = False,
-                          network=None, mesh=None) -> list[np.ndarray]:
+                          network=None, mesh=None, workers: int = 1,
+                          cache: bool = False) -> list[np.ndarray]:
     """One-jit-per-bucket campaign sweep over heterogeneous (g, machine,
     scheduler) entries: allocate each plan once, sample its noise grid with
     the engine-identical streams, and evaluate every (entry × seed) makespan
@@ -894,8 +895,23 @@ def sweep_suite_makespans(entries, *, noise: NoiseModel, seeds,
     applies one ``NetworkModel`` to every entry's replay; ``mesh``
     overrides the campaign mesh the plan axis shards over.
 
+    ``workers`` and ``cache`` route through the *pipelined* executor
+    (:func:`repro.sim.pipeline.pipelined_sweep_makespans`): plan
+    construction fans out over ``workers`` pool workers (``None`` reads
+    ``REPRO_PLAN_WORKERS``), ``cache=True`` deduplicates allocations
+    through the content-addressed plan cache, and buckets dispatch as soon
+    as they close so host building overlaps device execution.  The default
+    ``workers=1, cache=False`` is this serial loop, unchanged; either
+    route returns bit-identical makespans (envelope/phantom padding cannot
+    move a real lane's result).
+
     Returns a list of (S,) arrays aligned with ``entries``.
     """
+    if workers is None or workers != 1 or cache:
+        from .pipeline import pipelined_sweep_makespans
+        return pipelined_sweep_makespans(
+            entries, noise=noise, seeds=seeds, floor_fn=floor_fn,
+            network=network, workers=workers, cache=cache, mesh=mesh)
     items, rows, floors = [], [], []
     for g, machine, scheduler in entries:
         plan = scheduler.allocate(g, machine)

@@ -41,6 +41,7 @@ from repro.core.listsched import Schedule
 from repro.obs import registry as _obs
 from repro.sim.adapters import FrozenPlanScheduler, make_scheduler
 from repro.sim.batch import rollout_floors, sweep_suite_makespans
+from repro.sim.pipeline import cached_allocate
 from repro.sim.engine import (Machine, MachineState, NoiseModel, Plan,
                               run_arrivals_ready)
 
@@ -70,7 +71,7 @@ def conditioned_plan(adapter: str, g, machine: Machine,
     floored replay through the bucketed evaluator predicts its response.
     """
     sched = make_scheduler(adapter, **kw)
-    plan0 = sched.allocate(g, machine)
+    plan0 = cached_allocate(sched, g, machine)
     if plan0 is not None:
         sched = FrozenPlanScheduler(plan0, name=adapter)
     alloc, proc, start, finish, width, procs = run_arrivals_ready(
@@ -227,7 +228,8 @@ class SimInTheLoop(StreamPolicy):
         # allocation measurably loses under bursty backlog — adaptation is
         # worth more than the rollout's foresight).
         sched = make_scheduler(best)
-        self._chosen[job.jid] = (sched, sched.allocate(job.graph, machine))
+        self._chosen[job.jid] = (sched,
+                                 cached_allocate(sched, job.graph, machine))
         self.decisions.append((job.jid, best))
         dt = time.perf_counter() - t0
         if self._warm:   # the first rollout pays one-time jit compiles;

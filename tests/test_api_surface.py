@@ -32,9 +32,12 @@ API = {
         "InstantNetwork", "Machine", "MachineState", "MaxMinFairNetwork",
         "NETWORKS", "NetworkModel", "NoiseModel", "Plan", "Platform",
         "SCENARIO_FAMILIES", "Scenario", "Scheduler", "SimResult",
-        "TraceEvent", "campaign_mesh", "contention_kernel", "default_suite",
-        "from_estee", "make_network", "make_scenario", "make_scheduler",
-        "moldable_suite", "plan_for", "plan_times", "reset_trace_counts",
+        "TraceEvent", "cached_allocate", "campaign_mesh",
+        "clear_plan_cache", "configure_xla_cache", "contention_kernel",
+        "default_suite", "from_estee", "last_pipeline_stats", "make_network",
+        "make_scenario", "make_scheduler", "moldable_suite",
+        "pipelined_sweep_makespans", "plan_cache_stats", "plan_for",
+        "plan_times", "plan_workers", "reset_trace_counts",
         "set_campaign_mesh", "set_contention_kernel", "shard_backend",
         "simulate", "to_estee", "trace_count",
     ],

@@ -157,3 +157,45 @@ def test_run_unknown_only_target_exits_2(capsys, monkeypatch):
     err = capsys.readouterr().err
     assert "unknown --only target(s): nope" in err
     assert "search" in err
+
+
+def test_check_bench_pins_exact_counts(tmp_path, capsys):
+    """Deterministic grid counts are gated exactly when pinned: a shrunken
+    campaign (or compile creep) fails even though the metrics still pass."""
+    pinned = _doc({"sim": {"metrics": {"x": 1.0}, "plans": 99, "compiles": 8}})
+    pp = _write(tmp_path, "pin.json", pinned)
+    good = _doc({"sim": {"metrics": {"x": 1.0}, "plans": 99, "compiles": 8}})
+    assert check_bench(_write(tmp_path, "good.json", good), pp) == 0
+    capsys.readouterr()
+    bad = _doc({"sim": {"metrics": {"x": 1.0}, "plans": 98, "compiles": 8}})
+    assert check_bench(_write(tmp_path, "bad.json", bad), pp) == 1
+    assert "exact count" in capsys.readouterr().out
+
+
+def test_write_bench_json_merges_partial_target_runs(tmp_path, capsys):
+    """A --only run must not clobber sections an earlier same-grid run
+    wrote; a different (seed, full) grid — or a corrupt file — overwrites."""
+    import argparse
+
+    from benchmarks.run import write_bench_json
+
+    args = argparse.Namespace(seed=0, full=False)
+    path = os.path.join(tmp_path, "B.json")
+    write_bench_json(path, args, ["streams"],
+                     {"streams": {"wall_s": 1.0, "lines": []}})
+    write_bench_json(path, args, ["sim"],
+                     {"sim": {"wall_s": 2.0, "lines": []}})
+    doc = json.load(open(path))
+    assert set(doc["benches"]) == {"sim", "streams"}
+    assert doc["run"]["targets"] == ["sim", "streams"]
+    assert "kept earlier benches: streams" in capsys.readouterr().out
+    # different grid: the old sections aren't comparable -> overwrite
+    write_bench_json(path, argparse.Namespace(seed=1, full=False),
+                     ["search"], {"search": {"wall_s": 3.0, "lines": []}})
+    assert set(json.load(open(path))["benches"]) == {"search"}
+    # corrupt file: overwrite cleanly, never crash the harness
+    with open(path, "w") as f:
+        f.write("{not json")
+    write_bench_json(path, args, ["sim"],
+                     {"sim": {"wall_s": 2.0, "lines": []}})
+    assert set(json.load(open(path))["benches"]) == {"sim"}
